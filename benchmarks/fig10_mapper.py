@@ -1,0 +1,71 @@
+"""Fig. 10 reproduction: PIM-Mapper vs the sequential baseline.
+
+Five workload DNNs at batch 1 on the paper's two evaluation systems
+(4x4 array / 32x32 PEs / 128 KiB buffers and 16x16 array / 8x8 PEs /
+8 KiB buffers).  Reports per-net latency+energy for both mappers and the
+average reductions — the paper's headline is −37 % latency / −28 % energy.
+
+``fast=True`` shrinks the nets (scale-4 spatial dims, 2-layer BERT) for CI.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.baseline import BaselineMapper
+from repro.core.hardware import PAPER_16X16, PAPER_4X4
+from repro.core.mapper import PimMapper, evaluate_mapping
+from repro.core.workloads import paper_workloads
+
+
+def run(fast: bool = False, nets: list[str] | None = None) -> list[dict]:
+    rows = []
+    workloads = paper_workloads(1, fast=fast)
+    if nets:
+        workloads = [g for g in workloads if g.name in nets]
+    for hw, sysname in ((PAPER_4X4, "4x4"), (PAPER_16X16, "16x16")):
+        for g in workloads:
+            t0 = time.time()
+            rep = evaluate_mapping(PimMapper(hw).map(g))
+            t_map = time.time() - t0
+            t0 = time.time()
+            base = evaluate_mapping(BaselineMapper(hw).map(g))
+            t_base = time.time() - t0
+            rows.append({
+                "table": "fig10", "system": sysname, "net": g.name,
+                "mapper_latency_ms": rep.latency_s * 1e3,
+                "mapper_energy_uj": rep.energy_pj / 1e6,
+                "baseline_latency_ms": base.latency_s * 1e3,
+                "baseline_energy_uj": base.energy_pj / 1e6,
+                "latency_reduction": 1 - rep.latency_s / base.latency_s,
+                "energy_reduction": 1 - rep.energy_pj / base.energy_pj,
+                "mapper_noc_uj": rep.energy_breakdown["noc"] / 1e6,
+                "baseline_noc_uj": base.energy_breakdown["noc"] / 1e6,
+                "mapper_dram_uj": rep.energy_breakdown["dram"] / 1e6,
+                "baseline_dram_uj": base.energy_breakdown["dram"] / 1e6,
+                "solve_s": t_map + t_base,
+            })
+    n = len(rows)
+    rows.append({
+        "table": "fig10", "system": "avg", "net": "all",
+        "latency_reduction": sum(r["latency_reduction"]
+                                 for r in rows[:n]) / n,
+        "energy_reduction": sum(r["energy_reduction"] for r in rows[:n]) / n,
+    })
+    return rows
+
+
+def main(fast: bool = True) -> None:
+    for r in run(fast=fast):
+        if r["net"] == "all":
+            print(f"fig10_avg,,dLat={-r['latency_reduction']:.1%} "
+                  f"dE={-r['energy_reduction']:.1%}")
+        else:
+            print(f"fig10_{r['system']}_{r['net']},"
+                  f"{r['mapper_latency_ms'] * 1e3:.1f},"
+                  f"dLat={-r['latency_reduction']:.1%} "
+                  f"dE={-r['energy_reduction']:.1%}")
+
+
+if __name__ == "__main__":
+    main(fast=False)

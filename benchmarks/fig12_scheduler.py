@@ -1,0 +1,66 @@
+"""Fig. 12 reproduction: Data-Scheduler (ILP) vs TSP vs SHP.
+
+Paper setup (Sec. VIII-E): PIM-node arrays of 4x4 / 8x8 / 16x16; sharing
+sets of 16 nodes; on the larger arrays multiple sets interleaved with
+strides 2 (8x8) and 4 (16x16); 8 KiB to share per node; 64-bit NoC flits
+@ 400 MHz.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.noc import MeshNoc
+from repro.core.scheduler import solve_ilp_ls, solve_shp, solve_tsp
+
+FLIT_BW = 64 / 8 * 400e6     # bytes/s per link
+FREQ = 400e6
+EPJ = 1.1
+CHUNK = 8192.0               # 8 KiB per node
+
+
+def interleaved_sets(dim: int, stride: int) -> list[list[int]]:
+    noc = MeshNoc(dim, dim)
+    sets = []
+    for oy in range(stride):
+        for ox in range(stride):
+            nodes = [noc.node(r * stride + oy, c * stride + ox)
+                     for r in range(4) for c in range(4)]
+            sets.append(nodes)
+    return sets
+
+
+def run(seed: int = 0) -> list[dict]:
+    rows = []
+    for dim, stride in ((4, 1), (8, 2), (16, 4)):
+        noc = MeshNoc(dim, dim)
+        sets = interleaved_sets(dim, stride)
+        lat = {}
+        for name, solver in (("ilp", solve_ilp_ls), ("tsp", solve_tsp),
+                             ("shp", solve_shp)):
+            t0 = time.time()
+            kw = {"seed": seed, "restarts": 6, "iters": 1200} \
+                if name == "ilp" else {}
+            res = solver(noc, sets, [CHUNK] * len(sets), FLIT_BW, FREQ, EPJ,
+                         **kw)
+            lat[name] = res.latency_s
+            rows.append({
+                "table": "fig12", "array": f"{dim}x{dim}", "method": name,
+                "latency_us": res.latency_s * 1e6,
+                "max_link_bytes": res.max_link_bytes,
+                "solve_s": time.time() - t0,
+            })
+        for r in rows[-3:]:
+            r["norm_latency"] = r["latency_us"] / (lat["ilp"] * 1e6)
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(f"fig12_{r['array']}_{r['method']},"
+              f"{r['latency_us']:.2f},"
+              f"norm={r['norm_latency']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (same contract as repro.launch.dryrun).
+
+"""§Perf hillclimb driver: iterate on the dominant roofline term of a cell.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch moonshot_v1_16b_a3b \
+        --shape train_4k [--multi-pod]
+
+Runs the paper-faithful baseline plan first, then the candidate changes from
+core.autoshard (microbatching, remat policy, FSDP/replication = WR, int8
+gradient compression, MoE capacity), logging hypothesis -> change ->
+before/after to experiments/perf/<cell>.json and a markdown §Perf entry.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.configs.base import ARCH_IDS, SHAPES
+from repro.core.autoshard import hillclimb
+
+
+def to_markdown(arch: str, shape: str, mesh: str, log: list[dict]) -> str:
+    lines = [f"### Hillclimb: `{arch}` x `{shape}` x `{mesh}`", ""]
+    base = next((e for e in log if "step_s" in e), None)
+    lines += ["| plan | hypothesis | compute_s | memory_s | collective_s | "
+              "step_s | mem/dev | vs baseline | verdict |",
+              "|---|---|---|---|---|---|---|---|---|"]
+    best = None
+    for e in log:
+        if "error" in e:
+            lines.append(f"| `{e['plan']}` | {e['note']} | | | | | | "
+                         f"FAILED: {e['error'][:50]} |")
+            continue
+        rel = e["step_s"] / base["step_s"] if base else 1.0
+        verdict = "baseline" if e is base else \
+            ("confirmed" if rel < 0.95 else
+             "refuted" if rel > 1.05 else "neutral")
+        if not e.get("fits_hbm", True):
+            verdict += " (exceeds 16GB HBM)"
+        elif best is None or e["step_s"] < best["step_s"]:
+            best = e
+        lines.append(
+            f"| `{e['plan']}` | {e['note']} | {e['compute_s']:.4f} | "
+            f"{e['memory_s']:.4f} | {e['collective_s']:.4f} | "
+            f"{e['step_s']:.4f} | {e.get('mem_gb', 0):.1f}GB | "
+            f"{rel:.2f}x | {verdict} |")
+    if base and best and best is not base:
+        gain = 1 - best["step_s"] / base["step_s"]
+        lines += ["", f"**Result:** `{best['plan']}` cuts the roofline step "
+                      f"time {gain:.0%} vs the paper-faithful baseline "
+                      f"({base['step_s']:.4f}s -> {best['step_s']:.4f}s); "
+                      f"bottleneck {base['bottleneck']} -> "
+                      f"{best['bottleneck']}."]
+    elif base:
+        lines += ["", "**Result:** baseline plan remains best "
+                      "(candidates refuted)."]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=list(SHAPES), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    mesh = "2x16x16" if args.multi_pod else "16x16"
+    log = hillclimb(args.arch, args.shape, multi_pod=args.multi_pod,
+                    out_dir=ROOT / "experiments" / "perf")
+    md = to_markdown(args.arch, args.shape, mesh, log)
+    tag = f"{args.arch}__{args.shape}__{mesh}"
+    (ROOT / "experiments" / "perf" / f"{tag}.md").write_text(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Assemble EXPERIMENTS.md from dry-run JSONs + benchmark results.
+
+Sections:
+  §Dry-run   — compile status, memory per device, collective schedule
+  §Roofline  — three terms per (arch x shape x mesh), bottleneck, MFU terms
+  §Paper     — Fig. 9/10/11/12 reproductions vs the paper's claims
+  §Perf      — hillclimb log (appended by benchmarks/perf_log.py entries)
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+PERF_DIR = ROOT / "experiments" / "perf"
+PAPER_JSON = ROOT / "experiments" / "paper_benchmarks.json"
+OUT = ROOT / "EXPERIMENTS.md"
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024 or unit == "TiB":
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.1f}"
+
+
+def load_dryrun() -> list[dict]:
+    if not DRYRUN_DIR.exists():
+        return []
+    return sorted((json.loads(p.read_text())
+                   for p in DRYRUN_DIR.glob("*.json")),
+                  key=lambda d: (d["arch"], d["shape"], d["mesh"]))
+
+
+def dryrun_section(cells: list[dict]) -> str:
+    lines = [
+        "## §Dry-run",
+        "",
+        "`.lower().compile()` on the production meshes (single-pod 16x16 = "
+        "256 chips; multi-pod 2x16x16 = 512 chips) with 512 host placeholder "
+        "devices. `mem/dev` = args + temps + outputs - aliased from "
+        "`compiled.memory_analysis()` of the SPMD-partitioned (per-device) "
+        "program.",
+        "",
+        "| arch | shape | mesh | status | compile_s | mem/dev | collectives (per-chip link bytes) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                         f"FAIL: {c.get('error', '?')[:60]} | | | |")
+            continue
+        mem = c["memory"]
+        per_dev = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)
+                   + mem.get("output_size_in_bytes", 0)
+                   - mem.get("alias_size_in_bytes", 0))
+        colls = ", ".join(f"{k.split('-')[-1]}={_fmt_bytes(v)}"
+                          for k, v in c["collectives"].items() if v)
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok | "
+            f"{c['compile_s']:.1f} | {_fmt_bytes(per_dev)} | {colls or '-'} |")
+    skips = _skips()
+    if skips:
+        lines += ["", "Skipped cells (documented in DESIGN.md "
+                      "§Arch-applicability):", ""]
+        for a, s, why in skips:
+            lines.append(f"- `{a}` x `{s}`: {why}")
+    return "\n".join(lines)
+
+
+def _skips():
+    try:
+        import sys
+        sys.path.insert(0, str(ROOT / "src"))
+        from repro.configs.base import skipped_cells
+        return skipped_cells()
+    except Exception:
+        return []
+
+
+def roofline_section(cells: list[dict]) -> str:
+    lines = [
+        "## §Roofline",
+        "",
+        "Terms per the spec: compute = HLO_FLOPs/(chips*197 TF/s), memory = "
+        "HLO_bytes/(chips*819 GB/s), collective = per-chip link bytes / "
+        "50 GB/s. FLOPs/bytes come from the unrolled cost-fidelity pass "
+        "(XLA cost_analysis counts while bodies once); `useful` = "
+        "MODEL_FLOPS/HLO_FLOPs; `frac` = ideal-compute-time / max(term).",
+        "",
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bottleneck | useful | frac | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | **{r['bottleneck']}** | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.4f} | "
+            f"{r.get('note', '')[:60]} |")
+    return "\n".join(lines)
+
+
+def paper_section() -> str:
+    if not PAPER_JSON.exists():
+        return "## §Paper-experiments\n\n(run `python -m benchmarks.run`)"
+    rows = json.loads(PAPER_JSON.read_text())
+    lines = ["## §Paper-experiments", ""]
+    fig10 = [r for r in rows if r.get("table") == "fig10"]
+    if fig10:
+        avg = [r for r in fig10 if r.get("net") == "all"]
+        lines += ["### Fig. 10 — PIM-Mapper vs sequential baseline "
+                  "(paper: −37 % latency / −28 % energy avg)", "",
+                  "| system | net | mapper lat (ms) | base lat (ms) | ΔLat | "
+                  "mapper E (uJ) | base E (uJ) | ΔE |",
+                  "|---|---|---|---|---|---|---|---|"]
+        for r in fig10:
+            if r.get("net") == "all":
+                continue
+            lines.append(
+                f"| {r['system']} | {r['net']} | "
+                f"{r['mapper_latency_ms']:.2f} | "
+                f"{r['baseline_latency_ms']:.2f} | "
+                f"{-r['latency_reduction']:.0%} | "
+                f"{r['mapper_energy_uj']:.0f} | "
+                f"{r['baseline_energy_uj']:.0f} | "
+                f"{-r['energy_reduction']:.0%} |")
+        if avg:
+            lines.append(f"| **avg** | | | | "
+                         f"**{-avg[0]['latency_reduction']:.0%}** | | | "
+                         f"**{-avg[0]['energy_reduction']:.0%}** |")
+        lines.append("")
+    fig9 = [r for r in rows if r.get("table") == "fig9"]
+    if fig9:
+        lines += ["### Fig. 9 — DSE quality (mean 1/cost of best-3; "
+                  "higher is better)", "",
+                  "| strategy | final quality | vs random |", "|---|---|---|"]
+        base = next((r["quality_final"] for r in fig9
+                     if r["strategy"] == "random"), 1e-30)
+        for r in fig9:
+            lines.append(f"| {r['strategy']} | {r['quality_final']:.3e} | "
+                         f"{r['quality_final'] / max(base, 1e-30):.2f}x |")
+        lines.append("")
+    fig11 = [r for r in rows if r.get("table") == "fig11"]
+    if fig11:
+        lines += ["### Fig. 11 — throughput vs DDAM-lite "
+                  "(paper: +11 % avg, ~10x latency gap)", "",
+                  "| net | thr gain | DDAM/mapper latency |", "|---|---|---|"]
+        for r in fig11:
+            lines.append(f"| {r['net']} | {r['throughput_gain']:+.0%} | "
+                         f"{r['latency_ratio']:.1f}x |")
+        lines.append("")
+    fig12 = [r for r in rows if r.get("table") == "fig12"]
+    if fig12:
+        lines += ["### Fig. 12 — data-sharing schedulers "
+                  "(latency normalized to ILP)", "",
+                  "Ordering (ILP <= TSP <= SHP) reproduces; magnitudes are "
+                  "muted vs the paper because our NoC model charges "
+                  "aggregate link load (the paper's Eq. 4 objective) while "
+                  "BookSim's flit-level simulation adds serialization and "
+                  "in-flight contention that penalize SHP/TSP further.", "",
+                  "| array | ilp | tsp | shp |", "|---|---|---|---|"]
+        arrays = sorted({r["array"] for r in fig12},
+                        key=lambda a: int(a.split("x")[0]))
+        for a in arrays:
+            sub = {r["method"]: r for r in fig12 if r["array"] == a}
+            lines.append(
+                f"| {a} | 1.00 | {sub['tsp']['norm_latency']:.2f} | "
+                f"{sub['shp']['norm_latency']:.2f} |")
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    lines = ["## §Perf", ""]
+    if not PERF_DIR.exists():
+        return "\n".join(lines + ["(no hillclimb entries yet)"])
+    entries = sorted(PERF_DIR.glob("*.md"))
+    for e in entries:
+        lines.append(e.read_text().rstrip())
+        lines.append("")
+    return "\n".join(lines)
+
+
+def build() -> str:
+    cells = load_dryrun()
+    parts = [
+        "# EXPERIMENTS",
+        "",
+        "Generated by `benchmarks/report.py` from `experiments/` artifacts. "
+        "Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI.",
+        "",
+        dryrun_section(cells),
+        "",
+        roofline_section(cells),
+        "",
+        paper_section(),
+        "",
+        perf_section(),
+    ]
+    return "\n".join(parts) + "\n"
+
+
+def main() -> None:
+    OUT.write_text(build())
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Benchmark harness entry point: one reproduction per paper figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip fig9,...]
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract,
+persists raw rows to experiments/paper_benchmarks.json, and regenerates
+EXPERIMENTS.md via benchmarks.report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from benchmarks import fig9_dse, fig10_mapper, fig11_ddam, fig12_scheduler
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size Fig.9/11 workloads too")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced Fig.10 nets (CI); default runs the "
+                         "paper-scale networks")
+    ap.add_argument("--skip", default="", help="comma list: fig9,fig10,...")
+    ap.add_argument("--fig9-iters", type=int, default=20)
+    args = ap.parse_args()
+    skip = set(filter(None, args.skip.split(",")))
+
+    all_rows: list[dict] = []
+
+    def emit(name: str, us: float, derived: str):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    if "fig12" not in skip:
+        t0 = time.time()
+        rows = fig12_scheduler.run()
+        all_rows += rows
+        for r in rows:
+            emit(f"fig12_{r['array']}_{r['method']}",
+                 r["latency_us"], f"norm={r['norm_latency']:.3f}")
+        print(f"# fig12 took {time.time() - t0:.1f}s", flush=True)
+
+    if "fig10" not in skip:
+        t0 = time.time()
+        rows = fig10_mapper.run(fast=args.fast)
+        all_rows += rows
+        for r in rows:
+            if r.get("net") == "all":
+                emit("fig10_avg", 0.0,
+                     f"dLat={-r['latency_reduction']:.1%} "
+                     f"dE={-r['energy_reduction']:.1%} "
+                     f"(paper: -37%/-28%)")
+            else:
+                emit(f"fig10_{r['system']}_{r['net']}",
+                     r["mapper_latency_ms"] * 1e3,
+                     f"dLat={-r['latency_reduction']:.1%} "
+                     f"dE={-r['energy_reduction']:.1%}")
+        print(f"# fig10 took {time.time() - t0:.1f}s", flush=True)
+
+    if "fig11" not in skip:
+        t0 = time.time()
+        rows = fig11_ddam.run(fast=not args.full)
+        all_rows += rows
+        for r in rows:
+            emit(f"fig11_{r['net']}", r["mapper_latency_ms"] * 1e3,
+                 f"thr_gain={r['throughput_gain']:+.1%} "
+                 f"lat_ratio={r['latency_ratio']:.1f}x")
+        print(f"# fig11 took {time.time() - t0:.1f}s", flush=True)
+
+    if "fig9" not in skip:
+        t0 = time.time()
+        rows = fig9_dse.run(iterations=args.fig9_iters, tiny=not args.full)
+        all_rows += rows
+        base = next((r["quality_final"] for r in rows
+                     if r["strategy"] == "random"), 1e-30)
+        for r in rows:
+            emit(f"fig9_{r['strategy']}",
+                 r["solve_s"] * 1e6 / max(1, r["iterations"]),
+                 f"quality={r['quality_final']:.3e} "
+                 f"vs_random={r['quality_final'] / max(base, 1e-30):.2f}x")
+        print(f"# fig9 took {time.time() - t0:.1f}s", flush=True)
+
+    out = ROOT / "experiments" / "paper_benchmarks.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    merged = all_rows
+    if out.exists() and skip:
+        # keep rows for skipped figures from the previous run
+        old = json.loads(out.read_text())
+        kept = [r for r in old if r.get("table") in skip]
+        merged = kept + all_rows
+    out.write_text(json.dumps(merged, indent=1, default=str))
+
+    from benchmarks import report
+    report.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""The full NicePIM DSE loop (paper Fig. 7) on reduced workloads.
+
+Iterates: PIM-Tuner samples + filters + ranks hardware configs -> the
+area "simulator" validates -> PIM-Mapper + Data-Scheduler produce mapping
+schemes and EDP costs -> the tuner's DKL/filter models are refit.
+
+    PYTHONPATH=src python examples/dse_nicepim.py [--iters 8]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.dse import WorkloadEvaluator, run_dse
+from repro.core.tuner import PimTuner
+from repro.core.workloads import bert_base, googlenet
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8)
+    args = ap.parse_args()
+
+    workloads = [googlenet(1, scale=4),
+                 bert_base(1, seq=64, n_layers=2, n_heads=4)]
+    evaluator = WorkloadEvaluator(
+        workloads, mapper_kwargs=dict(max_optim_iter=1, lm_cap=60, n_wr=3))
+    tuner = PimTuner(n_sample=512)
+    res = run_dse(tuner, evaluator, iterations=args.iters, verbose=True)
+    best = res.best()
+    print("\nbest architecture found:")
+    print(f"  node array : {best.cfg.na_row}x{best.cfg.na_col} "
+          f"({best.cfg.banks_per_node} banks/node)")
+    print(f"  PE array   : {best.cfg.pea_row}x{best.cfg.pea_col}")
+    print(f"  buffers    : i={best.cfg.ibuf_kib} w={best.cfg.wbuf_kib} "
+          f"o={best.cfg.obuf_kib} KiB")
+    print(f"  area       : {best.area_mm2:.1f} mm^2 (budget 48)")
+    print(f"  EDP cost   : {best.cost:.3e}")
+    print(f"  quality curve: "
+          f"{['%.2e' % q for q in res.quality_curve()]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: the NicePIM DSE core in ~40 lines.
+
+Maps GoogLeNet onto the paper's 4x4 DRAM-PIM system, compares the
+PIM-Mapper against the sequential baseline, and schedules the data-sharing
+with the ILP-equivalent optimizer.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.baseline import BaselineMapper
+from repro.core.hardware import PAPER_4X4
+from repro.core.mapper import PimMapper, evaluate_mapping
+from repro.core.workloads import googlenet
+
+
+def main() -> None:
+    g = googlenet(batch=1, scale=2)      # 112x112 input for a fast demo
+    hw = PAPER_4X4
+    print(f"workload: {g.name}  ({g.total_macs / 1e9:.2f} GMACs, "
+          f"{g.total_weights / 1e6:.1f}M weights)")
+    print(f"hardware: {hw.na_row}x{hw.na_col} PIM nodes, "
+          f"{hw.pea_row}x{hw.pea_col} PEs, area {hw.area_mm2():.1f} mm^2")
+
+    mapping = PimMapper(hw).map(g)
+    rep = evaluate_mapping(mapping)
+    base = evaluate_mapping(BaselineMapper(hw).map(g))
+
+    print(f"\nPIM-Mapper : {rep.latency_s * 1e3:8.3f} ms   "
+          f"{rep.energy_pj / 1e6:8.1f} uJ")
+    print(f"baseline   : {base.latency_s * 1e3:8.3f} ms   "
+          f"{base.energy_pj / 1e6:8.1f} uJ")
+    print(f"reduction  : {1 - rep.latency_s / base.latency_s:9.1%} latency  "
+          f"{1 - rep.energy_pj / base.energy_pj:8.1%} energy")
+
+    print("\nper-layer choices (first 6):")
+    for name, ch in list(mapping.choices.items())[:6]:
+        print(f"  {name:12s} {ch.lm.short():30s} wr={ch.wr:3d} "
+              f"region={ch.region.h_shape}x{ch.region.w_shape} "
+              f"dl={ch.dl_in.short()}->{ch.dl_out.short()}")
+
+
+if __name__ == "__main__":
+    main()

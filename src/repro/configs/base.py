@@ -1,0 +1,181 @@
+"""Architecture configuration schema, shape specs and the config registry.
+
+Every assigned architecture provides one module ``repro/configs/<id>.py``
+exposing ``CONFIG: ArchConfig`` built from the public-literature numbers in
+the task brief.  ``ArchConfig.reduced()`` yields the shrunken same-family
+config used by CPU smoke tests; the full config is exercised only via the
+AOT dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import importlib
+import math
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+    needs_subquadratic: bool = False
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode",
+                           needs_subquadratic=True),
+}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_impl: str = "einsum"          # einsum (Mesh-TF) | scatter
+    # token mixer variants
+    attn_free: bool = False           # rwkv6: no attention at all
+    rglru_pattern: int = 0            # recurrentgemma: N recurrent per 1 attn
+    local_window: int = 0             # sliding-window attention size
+    conv1d_width: int = 4             # temporal conv in recurrent blocks
+    # modality frontend stub ("none" | "audio" | "vision")
+    frontend: str = "none"
+    frontend_seq: int = 1024          # patch/frame positions for vlm/audio
+    # numerics / structure
+    dtype: str = "bfloat16"
+    remat: str = "none"               # none | block
+    scan_layers: bool = True
+    attention_impl: str = "xla"       # xla | pallas
+    # citation tag from the assignment table
+    source: str = ""
+
+    @property
+    def d_head(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def is_subquadratic(self) -> bool:
+        return self.attn_free or (self.rglru_pattern > 0 and
+                                  self.local_window > 0)
+
+    @property
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, dh = self.d_model, self.d_head
+        attn = d * (self.n_heads * dh) + 2 * d * self.kv_dim \
+            + (self.n_heads * dh) * d
+        if self.attn_free:  # rwkv6 time/channel mix projections
+            attn = 4 * d * d + d * d // 2
+        if self.rglru_pattern > 0:
+            # mix of recurrent blocks and local-attention blocks
+            rec = 2 * d * d + 3 * d * d // 4
+            n_attn = self.n_layers // (self.rglru_pattern + 1)
+            n_rec = self.n_layers - n_attn
+            blocks = n_rec * rec + n_attn * attn
+        else:
+            blocks = self.n_layers * attn
+        if self.moe_experts > 1:
+            ffn = self.moe_experts * 3 * d * self.d_ff + d * self.moe_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        blocks += self.n_layers * ffn + self.n_layers * 2 * d
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return blocks + embed + d
+
+    @property
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of the experts)."""
+        if self.moe_experts <= 1:
+            return self.param_count
+        d = self.d_model
+        inactive = (self.moe_experts - self.moe_top_k) * 3 * d * self.d_ff \
+            * self.n_layers
+        return self.param_count - inactive
+
+    def reduced(self) -> "ArchConfig":
+        """Same-family tiny config for CPU smoke tests."""
+        return replace(
+            self,
+            n_layers=max(2, min(4, self.n_layers)),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(4, max(1, self.n_kv_heads * 4 // self.n_heads)),
+            d_ff=256,
+            head_dim=32,
+            vocab=512,
+            moe_experts=min(self.moe_experts, 8),
+            moe_top_k=min(self.moe_top_k, 2),
+            local_window=min(self.local_window, 64) or self.local_window,
+            frontend_seq=16,
+            scan_layers=self.scan_layers,
+        )
+
+
+ARCH_IDS = [
+    "recurrentgemma_2b",
+    "qwen2_1_5b",
+    "mistral_nemo_12b",
+    "stablelm_3b",
+    "qwen2_0_5b",
+    "musicgen_large",
+    "pixtral_12b",
+    "rwkv6_1_6b",
+    "llama4_maverick_400b_a17b",
+    "moonshot_v1_16b_a3b",
+]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, skipping long_500k for quadratic
+    archs (documented in DESIGN.md §Arch-applicability)."""
+    cells = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s, spec in SHAPES.items():
+            if spec.needs_subquadratic and not cfg.is_subquadratic:
+                continue
+            cells.append((a, s))
+    return cells
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s, spec in SHAPES.items():
+            if spec.needs_subquadratic and not cfg.is_subquadratic:
+                out.append((a, s, "pure full attention; 500k-ctx decode "
+                                  "requires sub-quadratic mixer"))
+    return out

@@ -1,0 +1,23 @@
+"""Llama-4-Maverick-400B-A17B: MoE decoder, 128 experts top-1, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]  48L d_model=5120 40H
+(GQA kv=8) d_ff=8192 vocab=202048, MoE 128e top-1.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202048,
+    head_dim=128,
+    moe_experts=128,
+    moe_top_k=1,
+    rope_theta=500000.0,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)

@@ -1,0 +1,21 @@
+"""Moonshot-v1-16B-A3B (Moonlight): MoE decoder, 64 experts top-6.
+
+[hf:moonshotai/Moonlight-16B-A3B; hf]  48L d_model=2048 16H (kv=16)
+d_ff=1408 (per expert) vocab=163840, MoE 64e top-6.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=163840,
+    moe_experts=64,
+    moe_top_k=6,
+    source="hf:moonshotai/Moonlight-16B-A3B; hf",
+)

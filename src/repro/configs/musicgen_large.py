@@ -1,0 +1,22 @@
+"""MusicGen-large: decoder-only transformer over EnCodec audio tokens.
+
+[arXiv:2306.05284; hf]  48L d_model=2048 32H (kv=32) d_ff=8192 vocab=2048.
+The EnCodec frontend is a STUB: ``input_specs`` supplies precomputed frame
+embeddings; the backbone is the assignment's transformer.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=2048,
+    frontend="audio",
+    frontend_seq=1024,
+    source="arXiv:2306.05284; hf",
+)

@@ -1,0 +1,24 @@
+"""Pixtral-12B: Pixtral-ViT frontend (STUB) + Mistral-Nemo-style backbone.
+
+[hf:mistralai/Pixtral-12B-2409; unverified]  40L d_model=5120 32H (GQA kv=8)
+d_ff=14336 vocab=131072.  ``input_specs`` supplies precomputed patch
+embeddings for the vision prefix.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    head_dim=128,
+    rope_theta=1000000.0,
+    frontend="vision",
+    frontend_seq=1024,
+    source="hf:mistralai/Pixtral-12B-2409; unverified",
+)

@@ -1,0 +1,24 @@
+"""RecurrentGemma-2B: RG-LRU recurrent blocks + local attention, 1:2 pattern.
+
+[arXiv:2402.19427; hf]  26L d_model=2560 10H (GQA kv=1) d_ff=7680 vocab=256000.
+Two recurrent (RG-LRU) blocks per local-attention block; window 2048.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab=256000,
+    head_dim=256,
+    rglru_pattern=2,        # 2 recurrent : 1 local-attention
+    local_window=2048,
+    conv1d_width=4,
+    tie_embeddings=True,
+    source="arXiv:2402.19427; hf",
+)

@@ -1,0 +1,22 @@
+"""RWKV6 (Finch) 1.6B: attention-free linear-recurrence mixer with
+data-dependent decay.
+
+[arXiv:2404.05892; unverified]  24L d_model=2048 d_ff=7168 vocab=65536.
+Head dim 64 -> 32 wkv heads.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab=65536,
+    head_dim=64,
+    attn_free=True,
+    source="arXiv:2404.05892; unverified",
+)

@@ -1,0 +1,187 @@
+"""Beyond-paper: NicePIM's DSE loop re-targeted at TPU sharding plans.
+
+The mapping dictionary (DESIGN.md §3): a *ShardPlan* plays the role of the
+paper's per-layer LM/WR choice — parallelism axes, replication degree
+(FSDP on/off = WR full vs 1), microbatching (the PIM-node buffer-tiling
+analogue), remat policy, and gradient compression (a collective-schedule
+knob like the Data-Scheduler's).  The cost oracle is the dry-run roofline:
+``max(compute, memory, collective)`` per step from the compiled artifact,
+with bytes-per-device as the capacity constraint (the paper's CAP).
+
+``enumerate_plans`` produces the candidate set; ``evaluate_plan`` lowers the
+cell with the plan applied; ``hillclimb`` runs the paper's iterate-on-the-
+dominant-term loop and emits EXPERIMENTS.md §Perf entries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    fsdp: bool = True
+    tp: bool = True                     # model-axis tensor parallelism
+    microbatches: int | None = None     # None = dryrun default
+    remat: str = "block"                # none | block
+    scan_layers: bool = True
+    grad_compression: str = "none"      # none | int8
+    moe_capacity_factor: float | None = None
+    moe_impl: str | None = None         # None = config default (einsum)
+    attention_impl: str | None = None   # None | xla | xla_chunked
+    grad_sharding: bool = False         # reduce-scatter gradient constraint
+    note: str = ""
+
+    def tag(self) -> str:
+        mb = self.microbatches if self.microbatches is not None else "auto"
+        return (f"fsdp={int(self.fsdp)},tp={int(self.tp)},"
+                f"mb={mb},remat={self.remat},"
+                f"comp={self.grad_compression}"
+                + (f",cf={self.moe_capacity_factor}"
+                   if self.moe_capacity_factor else "")
+                + (f",moe={self.moe_impl}" if self.moe_impl else "")
+                + (f",attn={self.attention_impl}"
+                   if self.attention_impl else "")
+                + (",gradRS" if self.grad_sharding else ""))
+
+
+BASELINE_PLAN = ShardPlan(note="paper-faithful baseline (FSDP + remat + "
+                               "default microbatching)")
+
+
+def enumerate_plans(kind: str, is_moe: bool) -> list[ShardPlan]:
+    """Candidate moves, ordered by napkin-math predicted win size
+    (the §Perf methodology: biggest predicted delta on the dominant term
+    first).  Microbatch count affects the per-device memory *footprint*,
+    not the roofline traffic terms, so one mb variant is kept as a control."""
+    plans = [BASELINE_PLAN]
+    if kind == "train":
+        if is_moe:
+            plans += [
+                ShardPlan(moe_impl="scatter",
+                          note="scatter/gather MoE dispatch (no one-hot "
+                               "tokens x experts x capacity intermediates)"),
+                ShardPlan(moe_impl="scatter", moe_capacity_factor=1.0,
+                          note="scatter dispatch + capacity 1.0"),
+            ]
+        plans += [
+            ShardPlan(remat="none", note="no remat (memory for flops)"),
+            ShardPlan(grad_compression="int8",
+                      note="int8 error-feedback gradient all-reduce"),
+            ShardPlan(fsdp=False, note="replicated params (WR=full)"),
+            ShardPlan(microbatches=1,
+                      note="control: mb changes footprint, not traffic"),
+        ]
+    elif kind == "prefill":
+        plans += [
+            ShardPlan(attention_impl="xla_chunked",
+                      note="chunked online-softmax attention: never "
+                           "materializes the (S,T) scores buffer"),
+            ShardPlan(fsdp=False, tp=False,
+                      note="fully replicated params: no TP collectives "
+                           "(uses 1/model_size of the pod)"),
+        ]
+    else:
+        plans += [
+            ShardPlan(fsdp=False, tp=False,
+                      note="fully replicated params: no per-token TP "
+                           "collectives (uses 1/model_size of the pod)"),
+        ]
+    return plans
+
+
+def apply_plan(cfg, plan: ShardPlan):
+    over = {"remat": plan.remat}
+    if plan.moe_capacity_factor is not None:
+        over["moe_capacity_factor"] = plan.moe_capacity_factor
+    if plan.moe_impl is not None:
+        over["moe_impl"] = plan.moe_impl
+    if plan.attention_impl is not None:
+        over["attention_impl"] = plan.attention_impl
+    if not plan.scan_layers:
+        over["scan_layers"] = False
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def evaluate_plan(arch: str, shape_name: str, plan: ShardPlan, *,
+                  multi_pod: bool = False, cost_pass: bool = True) -> dict:
+    """Lower+compile the cell under the plan; returns the result dict.
+
+    Must run inside a process with 512 host devices (repro.launch.dryrun
+    sets XLA_FLAGS before importing jax; see benchmarks/hillclimb.py).
+    """
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.dryrun import lower_cell
+    from repro.training.train_loop import TrainConfig
+
+    shape = SHAPES[shape_name]
+    cfg = apply_plan(get_config(arch), plan)
+    tcfg = None
+    if shape.kind == "train":
+        from repro.launch.dryrun import _microbatches
+        mb = plan.microbatches or _microbatches(cfg, shape)
+        tcfg = TrainConfig(microbatches=mb, fsdp=plan.fsdp,
+                           grad_compression=plan.grad_compression,
+                           grad_sharding=plan.grad_sharding)
+    result, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                           fsdp=plan.fsdp, tp=plan.tp, cfg=cfg, tcfg=tcfg,
+                           extra_note=plan.tag(), cost_pass=cost_pass)
+    return result
+
+
+def hillclimb(arch: str, shape_name: str, *, multi_pod: bool = False,
+              out_dir: str | Path = "experiments/perf",
+              plans: list[ShardPlan] | None = None,
+              stop_after_no_gain: int = 5) -> list[dict]:
+    """Paper-methodology perf loop: baseline, then iterate candidates on the
+    dominant roofline term; log hypothesis -> change -> before/after."""
+    from repro.configs.base import get_config
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    is_moe = get_config(arch).moe_experts > 1
+    from repro.configs.base import SHAPES
+    kind = SHAPES[shape_name].kind
+    plans = plans or enumerate_plans(kind, is_moe)
+
+    log: list[dict] = []
+    best = None
+    no_gain = 0
+    for plan in plans:
+        t0 = time.time()
+        try:
+            res = evaluate_plan(arch, shape_name, plan, multi_pod=multi_pod)
+            r = res["roofline"]
+            mem = res.get("memory", {})
+            dev_gb = (mem.get("argument_size_in_bytes", 0)
+                      + mem.get("temp_size_in_bytes", 0)
+                      + mem.get("output_size_in_bytes", 0)
+                      - mem.get("alias_size_in_bytes", 0)) / 2**30
+            entry = {
+                "plan": plan.tag(), "note": plan.note,
+                "step_s": r["step_s"], "bottleneck": r["bottleneck"],
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "frac": r["roofline_fraction"],
+                "mem_gb": round(dev_gb, 2),
+                "fits_hbm": dev_gb <= 16.0,
+                "solve_s": round(time.time() - t0, 1),
+            }
+        except Exception as e:
+            entry = {"plan": plan.tag(), "note": plan.note,
+                     "error": f"{type(e).__name__}: {e}"}
+        log.append(entry)
+        if "step_s" in entry:
+            if best is None or entry["step_s"] < best["step_s"] * 0.95:
+                best = entry
+                no_gain = 0
+            else:
+                no_gain += 1
+        if no_gain >= stop_after_no_gain and len(log) > 1:
+            break
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(log, indent=1))
+    return log

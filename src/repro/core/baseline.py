@@ -1,0 +1,222 @@
+"""Comparison mappers from Sec. VIII-D.
+
+* :class:`BaselineMapper` — the paper's baseline: every layer is mapped onto
+  the whole PIM-node array; the LM is solved per layer with a Timeloop-like
+  per-node-delay objective (no communication awareness, no inter-branch
+  parallelism); WR starts at full replication and is halved on the
+  largest-weight layers until the DRAM capacity constraint is met; one global
+  DL is used for all layers, chosen as the best of {BCHW, BHWC, BCHW[C8]}.
+  Its data-sharing is still scheduled by the Data-Scheduler (as in the paper,
+  for fairness).
+
+* :class:`DdamMapper` — DDAM-lite [47]: partitions the DNN into contiguous
+  pipeline stages balanced by MACs (dynamic programming), maps each stage
+  onto its own region, and optimizes *throughput*; latency is the sum of all
+  stage latencies (pipeline fill), which reproduces the paper's "latency is
+  10x worse" observation qualitatively.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .costmodel import part_layer_cost
+from .hardware import HwConfig
+from .ir import DnnGraph
+from .layout import DataLayout
+from .mapper import (LayerChoice, Mapping, evaluate_mapping, _layer_candidates)
+from .partition import comm_estimate, enumerate_lms, part_layer, wr_candidates
+from .regions import SM, Region
+
+INF = float("inf")
+
+BASELINE_DLS = (DataLayout("BCHW", 1), DataLayout("BHWC"), DataLayout("BCHW", 8))
+
+
+class BaselineMapper:
+    """Sequential whole-array mapping (the paper's baseline method)."""
+
+    def __init__(self, hw: HwConfig, *, lm_cap: int = 200):
+        self.hw = hw
+        self.lm_cap = lm_cap
+
+    def map(self, graph: DnnGraph) -> Mapping:
+        best_mapping = None
+        best_lat = INF
+        for dl in BASELINE_DLS:
+            m = self._map_with_dl(graph, dl)
+            if m.est_latency_s < best_lat:
+                best_lat = m.est_latency_s
+                best_mapping = m
+        return best_mapping
+
+    def _map_with_dl(self, graph: DnnGraph, dl: DataLayout) -> Mapping:
+        hw = self.hw
+        region = Region(0, 0, hw.na_row, hw.na_col)
+        segments = graph.segments()
+        choices: dict[str, LayerChoice] = {}
+        sm: dict[int, SM] = {}
+        dbytes = hw.cons.data_bits // 8
+        # LM per layer: Timeloop-style min per-node delay (ignores comm).
+        for name in graph.topo_order():
+            layer = graph.layer(name)
+            if not layer.is_heavy:
+                continue
+            best_lm, best_lat = None, INF
+            for lm in enumerate_lms(layer, hw.na_row, hw.na_col,
+                                    cap=self.lm_cap):
+                pl = part_layer(layer, lm)
+                lat = part_layer_cost(hw, pl, dl, dl).latency_s
+                if lat < best_lat:
+                    best_lm, best_lat = lm, lat
+            wr = best_lm.weight_share  # start at full replication
+            choices[name] = LayerChoice(best_lm, wr, dl, dl, region,
+                                        best_lat, 0.0)
+        # WR: shrink from the largest-weight layers until capacity fits.
+        self._fit_capacity(graph, choices)
+        # fill sizes/perf estimates
+        est = 0.0
+        for name, ch in choices.items():
+            layer = graph.layer(name)
+            ce = comm_estimate(layer, ch.lm, ch.wr, hw)
+            node = part_layer_cost(hw, part_layer(layer, ch.lm),
+                                   ch.dl_in, ch.dl_out)
+            ch.size_bytes = ce.weight_bytes_per_node
+            ch.perf_s = node.latency_s + ce.latency_s
+            est += ch.perf_s
+        for i, seg in enumerate(segments):
+            sm[i] = SM(1, (region,), tuple(0 for _ in seg.branches))
+        return Mapping(graph, hw, segments, sm, choices, est_latency_s=est)
+
+    def _fit_capacity(self, graph: DnnGraph, choices: dict[str, LayerChoice]):
+        hw = self.hw
+        cap = hw.node_dram_capacity
+
+        def usage() -> float:
+            tot = 0.0
+            for name, ch in choices.items():
+                tot += comm_estimate(graph.layer(name), ch.lm, ch.wr,
+                                     hw).weight_bytes_per_node
+            return tot
+
+        guard = 0
+        while usage() > cap and guard < 10000:
+            guard += 1
+            # largest stored-weight layer with wr still reducible
+            cand = max(
+                (ch for ch in choices.values() if ch.wr > 1),
+                key=lambda ch: comm_estimate(
+                    graph.layer(_name_of(choices, ch)), ch.lm, ch.wr,
+                    hw).weight_bytes_per_node,
+                default=None)
+            if cand is None:
+                break
+            cand.wr = max(1, cand.wr // 2)
+
+
+def _name_of(choices: dict[str, LayerChoice], ch: LayerChoice) -> str:
+    for k, v in choices.items():
+        if v is ch:
+            return k
+    raise KeyError
+
+
+@dataclass
+class PipelineResult:
+    mapping: Mapping
+    throughput_sps: float   # samples/s in steady state
+    latency_s: float        # single-sample latency (pipeline fill)
+    energy_pj: float
+
+
+class DdamMapper:
+    """DDAM-lite: contiguous pipeline stages balanced by MACs."""
+
+    def __init__(self, hw: HwConfig, *, n_stages: int | None = None,
+                 lm_cap: int = 120):
+        self.hw = hw
+        self.n_stages = n_stages
+        self.lm_cap = lm_cap
+
+    def map(self, graph: DnnGraph) -> PipelineResult:
+        hw = self.hw
+        order = [n for n in graph.topo_order() if graph.layer(n).is_heavy]
+        macs = [graph.layer(n).macs for n in order]
+        n_stages = self.n_stages or max(2, min(8, hw.n_nodes // 4,
+                                               len(order) // 2 or 1))
+        n_stages = max(1, min(n_stages, len(order)))
+        bounds = _balanced_chunks(macs, n_stages)
+        # stage regions: split array columns proportionally to stage MACs
+        regions = _column_regions(hw, [sum(macs[a:b]) for a, b in bounds])
+        choices: dict[str, LayerChoice] = {}
+        stage_lat = []
+        total_energy = 0.0
+        for (a, b), region in zip(bounds, regions):
+            lat = 0.0
+            for name in order[a:b]:
+                layer = graph.layer(name)
+                dl = DataLayout("BCHW", 8)
+                cands = _layer_candidates(hw, layer, region.h_shape,
+                                          region.w_shape, dl, dl, 3,
+                                          self.lm_cap)
+                wr, perf, size, lm = min(cands, key=lambda t: t[1])
+                choices[name] = LayerChoice(lm, wr, dl, dl, region, perf, size)
+                lat += perf
+            stage_lat.append(lat)
+        segments = graph.segments()
+        sm = {i: SM(1, (regions[0],), tuple(0 for _ in s.branches))
+              for i, s in enumerate(segments)}
+        mapping = Mapping(graph, hw, segments, sm, choices,
+                          est_latency_s=sum(stage_lat))
+        rep = evaluate_mapping(mapping)
+        # scale: steady-state throughput set by the slowest stage
+        frac = max(stage_lat) / max(1e-12, sum(stage_lat))
+        bottleneck = rep.latency_s * frac
+        return PipelineResult(mapping, 1.0 / max(1e-12, bottleneck),
+                              rep.latency_s, rep.energy_pj)
+
+
+def _balanced_chunks(vals: list[int], k: int) -> list[tuple[int, int]]:
+    """Split list into k contiguous chunks minimizing the max chunk sum (DP)."""
+    n = len(vals)
+    pre = [0]
+    for v in vals:
+        pre.append(pre[-1] + v)
+
+    best = {(0, 0): 0.0}
+    back: dict[tuple[int, int], int] = {}
+    for j in range(1, k + 1):
+        for i in range(1, n + 1):
+            b, arg = INF, -1
+            for p in range(j - 1, i):
+                if (p, j - 1) not in best:
+                    continue
+                v = max(best[(p, j - 1)], pre[i] - pre[p])
+                if v < b:
+                    b, arg = v, p
+            if arg >= 0:
+                best[(i, j)] = b
+                back[(i, j)] = arg
+    bounds = []
+    i, j = n, k
+    while j > 0:
+        p = back[(i, j)]
+        bounds.append((p, i))
+        i, j = p, j - 1
+    return list(reversed(bounds))
+
+
+def _column_regions(hw: HwConfig, loads: list[float]) -> list[Region]:
+    """Split the array into column strips proportional to stage loads."""
+    total = sum(loads) or 1.0
+    cols = []
+    acc = 0.0
+    prev = 0
+    for i, l in enumerate(loads):
+        acc += l
+        c = round(acc / total * hw.na_col)
+        c = max(prev + 1, min(c, hw.na_col - (len(loads) - 1 - i)))
+        cols.append((prev, c))
+        prev = c
+    return [Region(0, a, hw.na_row, b - a) for a, b in cols]

@@ -1,0 +1,203 @@
+"""Analytic per-PIM-node cost model (the Timeloop+Accelergy/Ramulator stand-in).
+
+Given one (part-)layer resident on a single PIM-node, the model searches
+double-buffered SRAM tilings under the ibuf/wbuf/obuf capacity constraints and
+returns latency + energy with a full breakdown:
+
+* **compute** — the PE array is ``PEA_row x PEA_col`` parallel MAC units
+  (NVDLA-style: input channels map to rows, output channels to columns), so a
+  tile costs ``ceil(Tc/PEA_row) * ceil(Tk/PEA_col) * HK * WK`` cycles per
+  output point; ragged edges lose utilization through the ceils.
+* **DRAM** — traffic follows one of two loop orders (weights-outer vs.
+  outputs-outer, partial sums always obuf-resident with C innermost); the
+  burst/row-activation counts come from the Sec. III-E data-layout model
+  (vectorized here; ``layout.tile_access_cost`` is the scalar reference the
+  property tests compare against).
+* **SRAM/MAC energy** — linear-in-access Accelergy-style constants at 28 nm.
+
+Latency per layer pass = max(compute, DRAM) assuming double buffering, which
+is what makes the buffer-size / PE-size trade the PIM-Tuner explores real.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from .hardware import HwConfig
+from .layout import DataLayout, tile_cost_vec
+from .ir import Layer
+
+# Accelergy-style energy constants (28 nm, 16-bit datapath).
+MAC_ENERGY_PJ = 0.30          # one 16-bit MAC
+SRAM_BASE_PJ_PER_BIT = 0.05   # small-macro access
+SRAM_LOG_PJ_PER_BIT = 0.012   # + per log2(KiB) wordline/bitline growth
+
+
+def _sram_pj_per_bit(size_kib: int) -> float:
+    return SRAM_BASE_PJ_PER_BIT + SRAM_LOG_PJ_PER_BIT * math.log2(max(2, size_kib))
+
+
+@dataclass(frozen=True)
+class PartCost:
+    """Cost of processing one part-layer once on one PIM-node."""
+
+    latency_s: float
+    energy_pj: float
+    compute_s: float
+    dram_s: float
+    dram_bytes: float
+    e_mac_pj: float
+    e_sram_pj: float
+    e_dram_pj: float
+    tiling: tuple[int, int, int, int, int]  # (Tb, Tk, Tc, Tp, Tq)
+    loop_order: str                         # "K_outer" | "BPQ_outer"
+
+    @property
+    def breakdown(self) -> dict[str, float]:
+        return {"mac": self.e_mac_pj, "sram": self.e_sram_pj,
+                "dram": self.e_dram_pj}
+
+
+def _tile_candidates(dim: int, cap: int = 7) -> list[int]:
+    """Power-of-two tile sizes up to ``dim`` plus the exact dim."""
+    outs = []
+    t = 1
+    while t < dim:
+        outs.append(t)
+        t *= 2
+    outs.append(dim)
+    if len(outs) > cap:  # keep the largest ones — small tiles rarely win
+        outs = outs[-cap:]
+    return outs
+
+
+@lru_cache(maxsize=None)
+def part_layer_cost(hw: HwConfig, layer: Layer,
+                    dl_in: DataLayout, dl_out: DataLayout) -> PartCost:
+    """Latency/energy for one part-layer resident on one PIM-node."""
+    if not layer.is_heavy:
+        return PartCost(0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+                        (1, 1, 1, 1, 1), "K_outer")
+    c = hw.cons
+    B, C, H, W = layer.B, layer.C, layer.H, layer.W
+    K, HK, WK, s = layer.K, layer.HK, layer.WK, layer.stride
+    P, Q = layer.P, layer.Q
+    dbytes = c.data_bits // 8
+    pbytes = c.psum_bits // 8
+    burst_words = max(1, hw.node_dram_width_bits // c.data_bits)
+    row_words = max(burst_words,
+                    c.dram_row_bytes * hw.banks_per_node // dbytes)
+
+    # ---- candidate tilings (vectorized grid) -------------------------------
+    tks = np.array(_tile_candidates(K), dtype=np.int64)
+    tcs = np.array(_tile_candidates(C), dtype=np.int64)
+    tps = np.array(_tile_candidates(P), dtype=np.int64)
+    tqs = np.array([Q], dtype=np.int64) if Q <= 64 else \
+        np.array(_tile_candidates(Q, cap=4), dtype=np.int64)
+    tbs = np.array(_tile_candidates(B, cap=4), dtype=np.int64)
+    TB, TK, TC, TP, TQ = [a.reshape(-1) for a in
+                          np.meshgrid(tbs, tks, tcs, tps, tqs, indexing="ij")]
+
+    TH = (TP - 1) * s + HK
+    TW = (TQ - 1) * s + WK
+    # double-buffered capacity constraints
+    fits = ((TB * TC * TH * TW * dbytes * 2 <= hw.ibuf_kib * 1024)
+            & (TK * TC * HK * WK * dbytes * 2 <= hw.wbuf_kib * 1024)
+            & (TB * TK * TP * TQ * pbytes <= hw.obuf_kib * 1024))
+    if not bool(fits.any()):
+        # minimal tiles don't fit: heavily serialized fallback (discourages
+        # this config without crashing the search)
+        fits = np.zeros_like(fits)
+        fits[int(np.argmin(TB * TC * TH * TW))] = True
+    TB, TK, TC, TP, TQ = TB[fits], TK[fits], TC[fits], TP[fits], TQ[fits]
+    TH, TW = TH[fits], TW[fits]
+
+    n_k = np.ceil(K / TK)
+    n_c = np.ceil(C / TC)
+    n_bpq = np.ceil(B / TB) * np.ceil(P / TP) * np.ceil(Q / TQ)
+    n_tiles_i = np.ceil(B / TB) * n_c * np.ceil(P / TP) * np.ceil(Q / TQ)
+    n_tiles_o = np.ceil(B / TB) * n_k * np.ceil(P / TP) * np.ceil(Q / TQ)
+
+    # ---- compute cycles ----------------------------------------------------
+    # per output point: ceil(Tc/rows)*HK*WK cycles for a Tk-column group
+    cyc_tile = (np.ceil(TC / hw.pea_row) * np.ceil(TK / hw.pea_col)
+                * HK * WK * TP * TQ * TB)
+    compute_cycles = cyc_tile * n_k * n_c * n_bpq
+
+    # ---- DRAM traffic under the two loop orders ----------------------------
+    ib, ir = tile_cost_vec((B, C, H, W), TB, TC, TH, TW, dl_in,
+                           burst_words, row_words)
+    ob, orow = tile_cost_vec((B, K, P, Q), TB, TK, TP, TQ, dl_out,
+                             burst_words, row_words)
+    w_vals = float(layer.weight_count)
+    w_bursts = np.ceil(w_vals / burst_words)
+    w_rows = np.maximum(1.0, w_vals / row_words)
+
+    all_w_fit = (K * C * HK * WK * dbytes * 2 <= hw.wbuf_kib * 1024)
+    all_i_fit = (B * C * H * W * dbytes * 2 <= hw.ibuf_kib * 1024)
+    # K_outer: weights streamed once; inputs refetched per k-tile
+    i_passes_ko = np.where(all_i_fit, 1.0, n_k)
+    w_passes_ko = 1.0
+    # BPQ_outer: inputs streamed once; weights refetched per bpq-tile
+    i_passes_bo = 1.0
+    w_passes_bo = np.where(all_w_fit, 1.0, n_bpq)
+
+    def dram_terms(i_passes, w_passes):
+        bursts = (ib * n_tiles_i * i_passes + w_bursts * w_passes
+                  + ob * n_tiles_o)
+        rows = (ir * n_tiles_i * i_passes + w_rows * w_passes
+                + orow * n_tiles_o)
+        values = (B * C * H * W * i_passes + w_vals * w_passes
+                  + B * K * P * Q)
+        return bursts, rows, values
+
+    b_ko, r_ko, v_ko = dram_terms(i_passes_ko, w_passes_ko)
+    b_bo, r_bo, v_bo = dram_terms(i_passes_bo, w_passes_bo)
+    dram_cycles_ko = b_ko + r_ko * c.dram_row_miss_cycles
+    dram_cycles_bo = b_bo + r_bo * c.dram_row_miss_cycles
+    use_bo = dram_cycles_bo < dram_cycles_ko
+    dram_cycles = np.where(use_bo, dram_cycles_bo, dram_cycles_ko)
+    bursts = np.where(use_bo, b_bo, b_ko)
+    rows = np.where(use_bo, r_bo, r_ko)
+    values = np.where(use_bo, v_bo, v_ko)
+
+    total_cycles = np.maximum(compute_cycles, dram_cycles)
+    best = int(np.argmin(total_cycles))
+
+    # ---- energies at the chosen tiling --------------------------------------
+    macs = float(layer.macs)
+    e_mac = macs * MAC_ENERGY_PJ
+    tb_, tk_, tc_, tp_, tq_ = (int(TB[best]), int(TK[best]), int(TC[best]),
+                               int(TP[best]), int(TQ[best]))
+    # ibuf: each input value feeds PEA_col-wide broadcast once per k-tile pass
+    ibuf_reads = macs / max(1, min(tk_, hw.pea_col))
+    # wbuf: weights reused over the (Tb,Tp,Tq) tile from PE-local registers
+    wbuf_reads = macs / max(1, tb_ * tp_ * tq_)
+    # obuf: one psum read+write per (row-group) reduction step
+    obuf_acc = 2.0 * macs / max(1, min(tc_, hw.pea_row))
+    e_sram = (ibuf_reads * c.data_bits * _sram_pj_per_bit(hw.ibuf_kib)
+              + wbuf_reads * c.data_bits * _sram_pj_per_bit(hw.wbuf_kib)
+              + obuf_acc * c.psum_bits * _sram_pj_per_bit(hw.obuf_kib))
+    moved_bits = float(bursts[best]) * hw.node_dram_width_bits
+    useful_bits = float(values[best]) * c.data_bits
+    e_dram = (max(moved_bits, useful_bits) * c.dram_energy_pj_per_bit
+              + float(rows[best]) * c.dram_row_act_energy_pj)
+
+    compute_s = float(compute_cycles[best]) / c.freq_hz
+    dram_s = float(dram_cycles[best]) / c.freq_hz
+    return PartCost(
+        latency_s=float(total_cycles[best]) / c.freq_hz,
+        energy_pj=e_mac + e_sram + e_dram,
+        compute_s=compute_s,
+        dram_s=dram_s,
+        dram_bytes=float(values[best]) * dbytes,
+        e_mac_pj=e_mac,
+        e_sram_pj=e_sram,
+        e_dram_pj=e_dram,
+        tiling=(tb_, tk_, tc_, tp_, tq_),
+        loop_order="BPQ_outer" if bool(use_bo[best]) else "K_outer",
+    )

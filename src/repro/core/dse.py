@@ -1,0 +1,153 @@
+"""The overall NicePIM design-space-exploration loop (Fig. 7).
+
+Per iteration: the strategy (PIM-Tuner or a Fig. 9 comparison strategy)
+proposes candidate hardware configurations; candidates are area-checked
+one-by-one with the "simulator" (our analytic area model, standing in for
+Timeloop+Accelergy) until a legal one is found; the PIM-Mapper +
+Data-Scheduler produce mapping schemes for every workload DNN and the
+resulting latency/energy feed the cost function
+
+    Cost = sum_DNN Energy^alpha * Latency^beta * gamma      (Eq. 1)
+
+which is appended to the strategy's dataset before its models are refit.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+from .hardware import DEFAULT_CONSTRAINTS, HwConfig, PimConstraints
+from .ir import DnnGraph
+from .mapper import PimMapper, evaluate_mapping
+
+
+@dataclass
+class Observation:
+    iteration: int
+    cfg: HwConfig
+    area_mm2: float
+    legal: bool
+    cost: float | None = None
+    latency_s: dict = field(default_factory=dict)
+    energy_pj: dict = field(default_factory=dict)
+
+
+@dataclass
+class DseResult:
+    observations: list[Observation]
+
+    def best_cost_curve(self) -> list[float]:
+        best = math.inf
+        out = []
+        cur_iter = -1
+        for o in self.observations:
+            if o.cost is not None:
+                best = min(best, o.cost)
+            if o.iteration != cur_iter:
+                cur_iter = o.iteration
+                out.append(best)
+            else:
+                out[-1] = best
+        return out
+
+    def quality_curve(self) -> list[float]:
+        """Paper Fig. 9 metric: mean reciprocal cost of the best 3 so far."""
+        costs: list[float] = []
+        out = []
+        cur_iter = -1
+        for o in self.observations:
+            if o.cost is not None:
+                costs.append(o.cost)
+            if o.iteration != cur_iter:
+                cur_iter = o.iteration
+                out.append(self._top3(costs))
+            else:
+                out[-1] = self._top3(costs)
+        return out
+
+    @staticmethod
+    def _top3(costs: list[float]) -> float:
+        if not costs:
+            return 0.0
+        top = sorted(costs)[:3]
+        return sum(1.0 / c for c in top) / len(top)
+
+    def best(self) -> Observation:
+        cands = [o for o in self.observations if o.cost is not None]
+        return min(cands, key=lambda o: o.cost)
+
+
+class WorkloadEvaluator:
+    """Maps + schedules every workload on a config; caches by config tuple."""
+
+    def __init__(self, workloads: list[DnnGraph], *, alpha: float = 1.0,
+                 beta: float = 1.0, gamma: float = 1.0,
+                 mapper_kwargs: dict | None = None):
+        self.workloads = workloads
+        self.alpha = alpha
+        self.beta = beta
+        self.gamma = gamma
+        self.mapper_kwargs = mapper_kwargs or {}
+        self._cache: dict[tuple, tuple[float, dict, dict]] = {}
+
+    def __call__(self, cfg: HwConfig) -> tuple[float, dict, dict]:
+        key = cfg.as_tuple()
+        if key in self._cache:
+            return self._cache[key]
+        mapper = PimMapper(cfg, **self.mapper_kwargs)
+        lats: dict[str, float] = {}
+        ens: dict[str, float] = {}
+        cost = 0.0
+        for g in self.workloads:
+            try:
+                rep = evaluate_mapping(mapper.map(g))
+            except RuntimeError:   # capacity-infeasible mapping
+                cost = math.inf
+                break
+            lats[g.name] = rep.latency_s
+            ens[g.name] = rep.energy_pj
+            energy_j = rep.energy_pj * 1e-12
+            cost += (energy_j ** self.alpha) * (rep.latency_s ** self.beta) \
+                * self.gamma
+        out = (cost, lats, ens)
+        self._cache[key] = out
+        return out
+
+
+def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
+            propose_k: int = 8,
+            cons: PimConstraints = DEFAULT_CONSTRAINTS,
+            verbose: bool = False) -> DseResult:
+    obs: list[Observation] = []
+    for it in range(iterations):
+        t0 = time.time()
+        props = strategy.propose(propose_k)
+        chosen = None
+        # area-check one-by-one until a legal architecture appears (Fig. 7-4)
+        for cfg in props:
+            area = cfg.area_mm2()
+            legal = area <= cons.area_budget_mm2
+            if legal:
+                chosen = (cfg, area)
+                break
+            strategy.observe(cfg, area, None)
+            obs.append(Observation(it, cfg, area, False))
+        if chosen is None:
+            continue
+        cfg, area = chosen
+        cost, lats, ens = evaluator(cfg)
+        if math.isinf(cost):
+            strategy.observe(cfg, area, None)
+            obs.append(Observation(it, cfg, area, True))
+        else:
+            strategy.observe(cfg, area, cost)
+            obs.append(Observation(it, cfg, area, True, cost, lats, ens))
+        strategy.fit()
+        if verbose:
+            print(f"[dse:{getattr(strategy, 'name', 'nicepim')}] it={it} "
+                  f"cfg={cfg.as_tuple()} area={area:.1f} "
+                  f"cost={cost if not math.isinf(cost) else 'inf'} "
+                  f"({time.time() - t0:.1f}s)")
+    return DseResult(obs)

@@ -1,0 +1,199 @@
+"""Hardware configuration + area/bandwidth models for the DRAM-PIM accelerator.
+
+Constants follow the paper's Table II (UniIC hybrid-bonding stacked DRAM
+substrate [10], 28 nm logic @ 400 MHz, 16x16 banks x 8 MiB, 128-bit bank
+ports, 48 mm^2 logic-die budget, 0.88 pJ/bit DRAM access, 1.1 pJ/bit/hop NoC).
+
+The *area model* stands in for Timeloop+Accelergy: MAC-array area plus SRAM
+macro area at 28 nm with published-order-of-magnitude constants, calibrated so
+the paper's reported best configuration (4x8 nodes, 128x8 PEs, 16/144/32 KiB
+buffers) lands comfortably inside the 48 mm^2 budget while maximal
+configurations (16x16 nodes x 256x256 PEs) are far outside it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+KIB = 1024
+MIB = 1024 * KIB
+
+
+@dataclass(frozen=True)
+class PimConstraints:
+    """Fixed substrate attributes (Table II, 'Constant' rows)."""
+
+    tech_nm: int = 28
+    ba_row: int = 16                  # DRAM bank array rows
+    ba_col: int = 16                  # DRAM bank array cols
+    width_bank_bits: int = 128        # port width per bank
+    cap_bank_bytes: int = 8 * MIB     # capacity per bank
+    area_budget_mm2: float = 48.0     # logic-die area for NN engines
+    freq_hz: float = 400e6            # logic + bank-port clock
+    data_bits: int = 16               # activations / weights
+    psum_bits: int = 32               # partial sums
+
+    # DRAM electricals (UniIC IEDM'20 [10] + stacked-DRAM-order timing)
+    dram_energy_pj_per_bit: float = 0.88
+    dram_row_bytes: int = 2048        # row-buffer size per bank
+    dram_row_act_energy_pj: float = 800.0   # per activation (row miss)
+    dram_row_miss_cycles: int = 16    # tRC-equivalent at 400 MHz
+
+    # NoC (mesh, XY routing; Sec. VIII-B)
+    noc_energy_pj_per_bit_hop: float = 1.1
+    router_latency_cycles: int = 2
+
+    # Area model constants (28 nm)
+    mac_area_um2: float = 900.0       # 16-bit MAC incl. operand regs
+    sram_area_mm2_per_mib: float = 1.2   # SRAM macro density
+    node_fixed_area_mm2: float = 0.05    # router + bank controller + misc
+
+    @property
+    def n_banks(self) -> int:
+        return self.ba_row * self.ba_col
+
+    @property
+    def bank_bw_bytes(self) -> float:
+        """Peak bytes/s of one bank port (128 bit per cycle @ freq)."""
+        return self.width_bank_bits / 8 * self.freq_hz
+
+
+DEFAULT_CONSTRAINTS = PimConstraints()
+
+
+@dataclass(frozen=True)
+class HwConfig:
+    """Variable hardware design parameters (Table I / Table II 'Variable')."""
+
+    na_row: int
+    na_col: int
+    pea_row: int
+    pea_col: int
+    ibuf_kib: int
+    wbuf_kib: int
+    obuf_kib: int
+    cons: PimConstraints = DEFAULT_CONSTRAINTS
+
+    # -- legality ----------------------------------------------------------
+    def divides_bank_array(self) -> bool:
+        c = self.cons
+        return c.ba_row % self.na_row == 0 and c.ba_col % self.na_col == 0
+
+    def in_range(self) -> bool:
+        c = self.cons
+        return (2 <= self.na_row <= c.ba_row and 2 <= self.na_col <= c.ba_col
+                and 1 <= self.pea_row <= 256 and 1 <= self.pea_col <= 256
+                and 1 <= self.ibuf_kib <= 2048 and 1 <= self.wbuf_kib <= 2048
+                and 1 <= self.obuf_kib <= 2048)
+
+    def legal_shape(self) -> bool:
+        return self.in_range() and self.divides_bank_array()
+
+    # -- derived per-node resources ----------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return self.na_row * self.na_col
+
+    @property
+    def banks_per_node(self) -> int:
+        return self.cons.n_banks // self.n_nodes
+
+    @property
+    def node_dram_capacity(self) -> int:
+        return self.banks_per_node * self.cons.cap_bank_bytes
+
+    @property
+    def node_dram_bw(self) -> float:
+        """Bytes/s: bound bank ports behave as one wide port (Sec. III-A)."""
+        return self.banks_per_node * self.cons.bank_bw_bytes
+
+    @property
+    def node_dram_width_bits(self) -> int:
+        return self.banks_per_node * self.cons.width_bank_bits
+
+    @property
+    def noc_flit_bits(self) -> int:
+        """Flit width = half the total DRAM port width of a node (Sec. VIII-B)."""
+        return max(32, self.node_dram_width_bits // 2)
+
+    @property
+    def link_bw_bytes(self) -> float:
+        return self.noc_flit_bits / 8 * self.cons.freq_hz
+
+    @property
+    def macs_per_node(self) -> int:
+        return self.pea_row * self.pea_col
+
+    @property
+    def peak_macs_per_s(self) -> float:
+        return self.n_nodes * self.macs_per_node * self.cons.freq_hz
+
+    # -- area model (ground truth the filter model learns) ------------------
+    def node_area_mm2(self) -> float:
+        c = self.cons
+        pe = self.pea_row * self.pea_col * c.mac_area_um2 * 1e-6
+        buf_mib = (self.ibuf_kib + self.wbuf_kib + self.obuf_kib) / 1024
+        return pe + buf_mib * c.sram_area_mm2_per_mib + c.node_fixed_area_mm2
+
+    def area_mm2(self) -> float:
+        return self.n_nodes * self.node_area_mm2()
+
+    def area_legal(self) -> bool:
+        return self.legal_shape() and self.area_mm2() <= self.cons.area_budget_mm2
+
+    # -- (de)serialization for the tuner ------------------------------------
+    def as_tuple(self) -> tuple[int, ...]:
+        return (self.na_row, self.na_col, self.pea_row, self.pea_col,
+                self.ibuf_kib, self.wbuf_kib, self.obuf_kib)
+
+    @staticmethod
+    def from_tuple(t, cons: PimConstraints = DEFAULT_CONSTRAINTS) -> "HwConfig":
+        return HwConfig(*map(int, t), cons=cons)
+
+    def replace(self, **kw) -> "HwConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper Sec. VIII-C: architecture found by NicePIM for the EDP goal.
+PAPER_BEST = HwConfig(na_row=4, na_col=8, pea_row=128, pea_col=8,
+                      ibuf_kib=16, wbuf_kib=144, obuf_kib=32)
+# Sec. VIII-D fixed evaluation systems.
+PAPER_4X4 = HwConfig(na_row=4, na_col=4, pea_row=32, pea_col=32,
+                     ibuf_kib=128, wbuf_kib=128, obuf_kib=128)
+PAPER_16X16 = HwConfig(na_row=16, na_col=16, pea_row=8, pea_col=8,
+                       ibuf_kib=8, wbuf_kib=8, obuf_kib=8)
+
+
+def divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def sample_space(cons: PimConstraints = DEFAULT_CONSTRAINTS):
+    """The raw design space bounds (Table II 'Variable' rows).
+
+    Returns a dict of parameter -> candidate values; the tuner samples from
+    the cartesian product (~1e10 points before legality filtering).
+    """
+    pe_vals = [v for v in (1, 2, 4, 8, 16, 24, 32, 48, 64, 96, 128, 192, 256)]
+    buf_vals = [v for v in (1, 2, 4, 8, 16, 32, 48, 64, 96, 128, 192, 256,
+                            384, 512, 768, 1024, 1536, 2048)]
+    return {
+        "na_row": [d for d in divisors(cons.ba_row) if d >= 2],
+        "na_col": [d for d in divisors(cons.ba_col) if d >= 2],
+        "pea_row": pe_vals,
+        "pea_col": pe_vals,
+        "ibuf_kib": buf_vals,
+        "wbuf_kib": buf_vals,
+        "obuf_kib": buf_vals,
+    }
+
+
+def normalize_params(cfg: HwConfig) -> list[float]:
+    """Map a config to [0,1]^7 (log-scaled) for the tuner's models."""
+    t = cfg.as_tuple()
+    los = [2, 2, 1, 1, 1, 1, 1]
+    his = [16, 16, 256, 256, 2048, 2048, 2048]
+    return [(math.log2(v) - math.log2(lo)) / (math.log2(hi) - math.log2(lo))
+            for v, lo, hi in zip(t, los, his)]

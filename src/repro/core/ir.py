@@ -1,0 +1,312 @@
+"""DNN intermediate representation for the NicePIM design-space explorer.
+
+The paper (Sec. II-B) represents every heavy layer with the 7-deep conv loop
+nest ``B, K, C, P, Q, HK, WK``; matrix multiplications are convs with a 1x1
+filter window and 1x1 ofmap.  Auxiliary layers (add / concat / pooling /
+normalization) carry (almost) no MACs and are treated as glue that rides along
+with a branch.
+
+A :class:`DnnGraph` is a DAG of :class:`Layer` nodes.  Sec. III-B requires the
+graph to be cut into the *smallest serial pieces possible* (**segments**); a
+multi-branch segment exposes **branches** that may be mapped onto disjoint
+rectangular regions of the PIM-node array.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Iterable
+
+# Layer kinds that perform MAC-heavy work and therefore get partitioned/mapped.
+HEAVY_KINDS = ("conv", "matmul", "dwconv")
+# Glue kinds: negligible compute, attached to the branch of their predecessor.
+AUX_KINDS = ("add", "concat", "pool", "norm", "act", "input", "softmax")
+
+
+@dataclass(frozen=True)
+class Layer:
+    """One DNN layer in the paper's conv representation.
+
+    ``B, C, H, W`` describe the input tensor, ``K, HK, WK, stride, pad`` the
+    filter.  For ``matmul`` layers ``H = W = HK = WK = 1`` so that the ofmap is
+    ``1 x 1`` and ``MACs = B * C * K`` (Sec. II-B).
+    """
+
+    name: str
+    kind: str
+    B: int = 1
+    C: int = 1
+    H: int = 1
+    W: int = 1
+    K: int = 1
+    HK: int = 1
+    WK: int = 1
+    stride: int = 1
+    pad: int = 0
+
+    # -- derived quantities ------------------------------------------------
+    @property
+    def P(self) -> int:
+        """Output height."""
+        if self.kind not in HEAVY_KINDS:
+            return self.H
+        return max(1, (self.H + 2 * self.pad - self.HK) // self.stride + 1)
+
+    @property
+    def Q(self) -> int:
+        """Output width."""
+        if self.kind not in HEAVY_KINDS:
+            return self.W
+        return max(1, (self.W + 2 * self.pad - self.WK) // self.stride + 1)
+
+    @property
+    def is_heavy(self) -> bool:
+        return self.kind in HEAVY_KINDS
+
+    @property
+    def macs(self) -> int:
+        if not self.is_heavy:
+            return 0
+        if self.kind == "dwconv":  # depthwise: one filter per channel
+            return self.B * self.K * self.P * self.Q * self.HK * self.WK
+        return self.B * self.K * self.C * self.P * self.Q * self.HK * self.WK
+
+    @property
+    def weight_count(self) -> int:
+        if not self.is_heavy:
+            return 0
+        if self.kind == "dwconv":
+            return self.K * self.HK * self.WK
+        return self.K * self.C * self.HK * self.WK
+
+    @property
+    def ifmap_count(self) -> int:
+        return self.B * self.C * self.H * self.W
+
+    @property
+    def ofmap_count(self) -> int:
+        return self.B * self.K * self.P * self.Q
+
+    def scaled_batch(self, batch: int) -> "Layer":
+        return replace(self, B=self.B * batch)
+
+
+def conv(name: str, B: int, C: int, H: int, W: int, K: int, HK: int = 3,
+         WK: int | None = None, stride: int = 1, pad: int | None = None) -> Layer:
+    if WK is None:
+        WK = HK
+    if pad is None:
+        pad = HK // 2
+    return Layer(name, "conv", B=B, C=C, H=H, W=W, K=K, HK=HK, WK=WK,
+                 stride=stride, pad=pad)
+
+
+def matmul(name: str, B: int, C: int, K: int) -> Layer:
+    """``(B, C) @ (C, K)`` in the conv representation (Sec. II-B)."""
+    return Layer(name, "matmul", B=B, C=C, H=1, W=1, K=K, HK=1, WK=1,
+                 stride=1, pad=0)
+
+
+@dataclass
+class Branch:
+    """A serial chain of layers inside one segment (Sec. III-B)."""
+
+    layers: list[str]
+
+    def macs(self, g: "DnnGraph") -> int:
+        return sum(g.layer(n).macs for n in self.layers)
+
+    def heavy_layers(self, g: "DnnGraph") -> list[str]:
+        return [n for n in self.layers if g.layer(n).is_heavy]
+
+
+@dataclass
+class Segment:
+    """The smallest serial piece of the DNN; holds >= 1 parallel branches."""
+
+    index: int
+    branches: list[Branch]
+
+    @property
+    def n_branches(self) -> int:
+        return len(self.branches)
+
+    def macs(self, g: "DnnGraph") -> int:
+        return sum(b.macs(g) for b in self.branches)
+
+
+class DnnGraph:
+    """A DAG of layers with segment/branch extraction (Sec. III-B)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._layers: dict[str, Layer] = {}
+        self._preds: dict[str, list[str]] = {}
+        self._succs: dict[str, list[str]] = {}
+        self._order: list[str] = []
+
+    # -- construction ------------------------------------------------------
+    def add(self, layer: Layer, preds: Iterable[str] = ()) -> Layer:
+        if layer.name in self._layers:
+            raise ValueError(f"duplicate layer {layer.name!r}")
+        self._layers[layer.name] = layer
+        self._preds[layer.name] = list(preds)
+        self._succs[layer.name] = []
+        for p in preds:
+            if p not in self._layers:
+                raise ValueError(f"unknown predecessor {p!r} for {layer.name!r}")
+            self._succs[p].append(layer.name)
+        self._order.append(layer.name)
+        return layer
+
+    # -- queries -------------------------------------------------------------
+    def layer(self, name: str) -> Layer:
+        return self._layers[name]
+
+    @property
+    def layers(self) -> list[Layer]:
+        return [self._layers[n] for n in self._order]
+
+    def preds(self, name: str) -> list[str]:
+        return self._preds[name]
+
+    def succs(self, name: str) -> list[str]:
+        return self._succs[name]
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def total_weights(self) -> int:
+        return sum(l.weight_count for l in self.layers)
+
+    def topo_order(self) -> list[str]:
+        indeg = {n: len(self._preds[n]) for n in self._order}
+        # Kahn, preferring original insertion order for determinism.
+        ready = [n for n in self._order if indeg[n] == 0]
+        out: list[str] = []
+        while ready:
+            n = ready.pop(0)
+            out.append(n)
+            for s in self._succs[n]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+        if len(out) != len(self._order):
+            raise ValueError(f"graph {self.name!r} has a cycle")
+        return out
+
+    def with_batch(self, batch: int) -> "DnnGraph":
+        g = DnnGraph(f"{self.name}_b{batch}")
+        for n in self._order:
+            g.add(self._layers[n].scaled_batch(batch), self._preds[n])
+        return g
+
+    # -- segmentation (Sec. III-B) -------------------------------------------
+    def cut_points(self) -> list[str]:
+        """Nodes through which every source->sink path passes.
+
+        Scanning the topological order, a node ``v`` is a cut point iff after
+        emitting ``v`` no edge crosses from the emitted prefix (other than
+        edges out of ``v`` itself) into the remainder.
+        """
+        topo = self.topo_order()
+        open_edges = 0
+        cuts = []
+        for v in topo:
+            open_edges -= len(self._preds[v])
+            if open_edges == 0:
+                cuts.append(v)
+            open_edges += len(self._succs[v])
+        return cuts
+
+    def segments(self) -> list[Segment]:
+        """Cut the DAG into the smallest serial pieces (paper Fig. 4).
+
+        Each segment spans ``(prev_cut, cut]`` in topological order.  Interior
+        nodes are grouped into branches by weak connectivity; a merge node
+        (the cut itself, when it has several predecessors and is an auxiliary
+        layer) is appended to its first predecessor's branch.
+        """
+        topo = self.topo_order()
+        pos = {n: i for i, n in enumerate(topo)}
+        cuts = set(self.cut_points())
+        segments: list[Segment] = []
+        cur: list[str] = []
+        for v in topo:
+            cur.append(v)
+            if v in cuts:
+                branches = self._extract_branches(cur, pos)
+                # Pure-input segments (no heavy work at all) are still emitted;
+                # the mapper will skip costing them.
+                segments.append(Segment(index=len(segments), branches=branches))
+                cur = []
+        if cur:  # trailing non-cut nodes (multi-output nets)
+            segments.append(Segment(index=len(segments),
+                                    branches=self._extract_branches(cur, pos)))
+        return segments
+
+    def _extract_branches(self, nodes: list[str], pos: dict[str, int]) -> list[Branch]:
+        node_set = set(nodes)
+        # Union-find over intra-segment edges, but do NOT union across a merge
+        # node that joins several branches: a node whose in-segment predecessors
+        # number > 1 is a merge point and is attached afterwards.
+        parent = {n: n for n in nodes}
+
+        def find(x: str) -> str:
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        def union(a: str, b: str) -> None:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                parent[ra] = rb
+
+        merge_nodes = [n for n in nodes
+                       if len([p for p in self._preds[n] if p in node_set]) > 1]
+        merge_set = set(merge_nodes)
+        for n in nodes:
+            if n in merge_set:
+                continue
+            for p in self._preds[n]:
+                if p in node_set and p not in merge_set:
+                    union(n, p)
+        groups: dict[str, list[str]] = {}
+        for n in nodes:
+            if n in merge_set:
+                continue
+            groups.setdefault(find(n), []).append(n)
+        # Attach each merge node to the branch of its first in-segment pred.
+        for m in merge_nodes:
+            preds_in = [p for p in self._preds[m] if p in node_set and p not in merge_set]
+            if preds_in:
+                groups.setdefault(find(preds_in[0]), []).append(m)
+            else:  # merge of merges: own (auxiliary) branch
+                groups[m] = [m]
+        branches = [Branch(sorted(g, key=lambda n: pos[n])) for g in groups.values()]
+        branches.sort(key=lambda b: pos[b.layers[0]])
+        return branches
+
+    # -- data-dependency pairs for the DL consistency pass (Sec. VI-C) --------
+    def dependent_pairs(self) -> list[tuple[str, str]]:
+        out = []
+        for n in self._order:
+            for s in self._succs[n]:
+                out.append((n, s))
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"DnnGraph({self.name!r}, layers={len(self._layers)})"
+
+
+def chain(g: DnnGraph, layers: list[Layer]) -> str:
+    """Convenience: add ``layers`` as a serial chain, returning the last name."""
+    prev: list[str] = []
+    for l in layers:
+        g.add(l, prev)
+        prev = [l.name]
+    return prev[0]

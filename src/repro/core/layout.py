@@ -1,0 +1,167 @@
+"""Data layout patterns in DRAM and the burst/row-buffer access model (Sec. III-E).
+
+A feature map ``(B, C, H, W)`` is flattened into a node's DRAM either in
+``BCHW[Cg]`` order (channel-major with ``g`` channels interleaved innermost)
+or ``BHWC`` order (pixel-major, all channels interleaved).  DRAM delivers
+``burst_words`` values per access (the bound bank ports of one PIM-node act as
+a single wide port), so fetching a tile costs a number of **bursts** that
+depends on how contiguous the tile is under the layout, plus **row
+activations** whenever the access stream leaves the current DRAM row.
+
+The burst count reproduces the paper's Fig. 6 reasoning: a run of ``L``
+contiguous values whose start offsets are multiples of ``align`` (mod the
+burst width) costs the mean over feasible offsets of ``ceil((off + L) /
+burst)`` bursts.  E.g. with 4 words/burst a 3-value run at value alignment
+costs 1.5 bursts on average (9 accesses for a two-channel 3x3 window in plain
+BCHW, as in the paper), while a 6-value run at 2-value alignment costs exactly
+2 (6 accesses in BCHW[C2]).
+
+Runs that happen to be adjacent in the flattened address space are
+**coalesced** (full-width rows merge across H; full planes merge across
+channel groups and batch), which is what makes e.g. a streaming matmul operand
+read sequential instead of one row-activation per sample.
+
+Everything is written against ``numpy`` semantics so the same code runs on
+scalars (reference path, used by the tests) and on vectors of candidate tile
+shapes (the cost-model's tiling search).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+LAYOUT_ORDERS = ("BCHW", "BHWC")
+
+
+@dataclass(frozen=True)
+class DataLayout:
+    order: str = "BCHW"
+    group: int = 1  # channel grouping [Cg]; only meaningful for BCHW
+
+    def __post_init__(self):
+        if self.order not in LAYOUT_ORDERS:
+            raise ValueError(f"bad layout order {self.order!r}")
+
+    def short(self) -> str:
+        if self.order == "BHWC":
+            return "BHWC"
+        return "BCHW" if self.group == 1 else f"BCHW[C{self.group}]"
+
+
+def enumerate_layouts(C: int, max_group: int = 32) -> list[DataLayout]:
+    """All candidate DLs for a fmap with ``C`` channels (Sec. VI-C)."""
+    outs = [DataLayout("BHWC")]
+    g = 1
+    while g <= min(C, max_group):
+        outs.append(DataLayout("BCHW", g))
+        g *= 2
+    return outs
+
+
+@lru_cache(maxsize=None)
+def _burst_offsets(align: int, burst: int) -> np.ndarray:
+    step = math.gcd(max(1, int(align)), int(burst))
+    return np.arange(0, burst, step, dtype=np.float64)
+
+
+def mean_bursts(run_len, align: int, burst: int):
+    """Alignment-averaged bursts to read a contiguous run (vectorizable)."""
+    offs = _burst_offsets(align, burst)
+    run = np.asarray(run_len, dtype=np.float64)
+    return np.ceil((offs + run[..., None]) / burst).mean(axis=-1)
+
+
+def access_pattern(fmap, tb, tc, th, tw, order: str, group: int):
+    """Describe the address pattern of one tile fetch under a layout.
+
+    Returns ``(run, n_runs, span, n_extents)`` — all numpy-broadcastable:
+    ``run`` values per contiguous run, ``n_runs`` runs, and ``n_extents``
+    disjoint regions each spanning ``span`` values (for row-activation
+    accounting).  Coalesces runs that are adjacent in the address space.
+    """
+    B, C, H, W = fmap
+    tb = np.minimum(np.asarray(tb, dtype=np.float64), B)
+    tc = np.minimum(np.asarray(tc, dtype=np.float64), C)
+    th = np.minimum(np.asarray(th, dtype=np.float64), H)
+    tw = np.minimum(np.asarray(tw, dtype=np.float64), W)
+    full_w = tw >= W
+    full_h = th >= H
+    full_c = tc >= C
+
+    if order == "BHWC":
+        # linear index: ((b*H + h)*W + w)*C + c
+        base_run = np.where(full_c, tw * C, tc)
+        base_nruns = np.where(full_c, tb * th, tb * th * tw)
+        # coalesce: full channel rows merge across h; full planes across b
+        run = np.where(full_c & full_w, th * W * C, base_run)
+        n_runs = np.where(full_c & full_w, tb, base_nruns)
+        run = np.where(full_c & full_w & full_h, tb * H * W * C, run)
+        n_runs = np.where(full_c & full_w & full_h, 1.0, n_runs)
+        span = np.where(full_c & full_w & full_h, tb * H * W * C,
+                        ((th - 1) * W + tw) * C)
+        n_extents = np.where(full_c & full_w & full_h, 1.0, tb)
+    else:
+        g = min(max(1, group), C)
+        c_groups = np.ceil(tc / g)
+        # linear index: (((b*(C/g) + cg)*H + h)*W + w)*g + c_in_g
+        run = tw * g * np.ones_like(tc)
+        n_runs = tb * c_groups * th
+        # coalesce full-width rows across h
+        run = np.where(full_w, tw * g * th, run)
+        n_runs = np.where(full_w, tb * c_groups, n_runs)
+        # full spatial planes merge across channel groups
+        plane = full_w & full_h
+        run = np.where(plane, H * W * g * c_groups, run)
+        n_runs = np.where(plane, tb, n_runs)
+        # ... and across batch when all channels are taken
+        whole = plane & full_c
+        run = np.where(whole, tb * C * H * W, run)
+        n_runs = np.where(whole, 1.0, n_runs)
+        span = np.where(plane, run, ((th - 1) * W + tw) * g)
+        n_extents = np.where(plane, n_runs, tb * c_groups)
+        return run, n_runs, span, n_extents, g
+    return run, n_runs, span, n_extents, C
+
+
+def tile_cost_vec(fmap, tb, tc, th, tw, layout: DataLayout,
+                  burst_words: int, row_words: int):
+    """(bursts, row_activations) per single tile fetch — vectorized."""
+    run, n_runs, span, n_extents, align = access_pattern(
+        fmap, tb, tc, th, tw, layout.order, layout.group)
+    bursts = n_runs * mean_bursts(run, align, burst_words)
+    rows = n_extents * np.maximum(1.0, span / row_words)
+    return bursts, rows
+
+
+@lru_cache(maxsize=None)
+def tile_access_cost(
+    fmap: tuple[int, int, int, int],
+    tile: tuple[int, int, int, int],
+    layout: DataLayout,
+    burst_words: int,
+    row_words: int,
+) -> tuple[float, float]:
+    """(bursts, row_activations) to fetch one ``tile`` of ``fmap`` once.
+
+    Scalar convenience wrapper over :func:`tile_cost_vec`; ``burst_words`` /
+    ``row_words`` are in *values* (DRAM port width and row size divided by the
+    data width).
+    """
+    tb, tc, th, tw = tile
+    bursts, rows = tile_cost_vec(fmap, tb, tc, th, tw, layout,
+                                 burst_words, row_words)
+    return float(bursts), float(rows)
+
+
+@lru_cache(maxsize=None)
+def sequential_access_cost(
+    n_values: int, burst_words: int, row_words: int
+) -> tuple[float, float]:
+    """Bursts/rows for perfectly sequential data (weights are pre-arranged)."""
+    if n_values <= 0:
+        return 0.0, 0.0
+    return float(math.ceil(n_values / burst_words)), max(1.0, n_values / row_words)

@@ -1,0 +1,492 @@
+"""PIM-Mapper (Sec. VI): joint SM / LM / WR / DL optimization for one DNN.
+
+Implements the paper's Algorithm 1: candidate generation per segment (SM via
+slicing trees; per layer, WR values from full replication down to 1 with the
+best LM searched for each), Algorithm 2's dynamic program to pick one
+candidate per segment/layer under the per-node DRAM capacity, and the
+alternated DL optimization pass (MAX_OPTIM_ITER iterations).
+
+The DP's ``Perf`` values use fast analytic ring estimates for the
+data-sharing traffic (``partition.comm_estimate``); the final chosen mapping
+is re-costed with the Data-Scheduler's optimized Hamilton cycles
+(:func:`evaluate_mapping`), mirroring the paper's mapper→scheduler split.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+from .costmodel import part_layer_cost
+from .hardware import HwConfig
+from .ir import DnnGraph, Layer, Segment
+from .layout import DataLayout, enumerate_layouts
+from .noc import MeshNoc
+from .partition import (LM, comm_estimate, enumerate_lms, group_coords,
+                        loop_strides, part_layer, wr_candidates, LOOPS)
+from .regions import SM, Region, gen_sm_candidates
+from .scheduler import solve_ilp_ls, SOLVERS
+
+INF = float("inf")
+
+
+@dataclass
+class LayerChoice:
+    lm: LM
+    wr: int
+    dl_in: DataLayout
+    dl_out: DataLayout
+    region: Region
+    perf_s: float          # analytic latency estimate used by the DP
+    size_bytes: float      # per-node DRAM weight storage
+
+
+@dataclass
+class Mapping:
+    graph: DnnGraph
+    hw: HwConfig
+    segments: list[Segment]
+    sm: dict[int, SM]                      # segment index -> SM
+    choices: dict[str, LayerChoice]        # heavy layer name -> choice
+    est_latency_s: float = 0.0             # DP objective value
+
+
+@dataclass
+class LayerReport:
+    name: str
+    latency_s: float
+    comm_s: float
+    energy_pj: float
+    e_noc_pj: float
+    breakdown: dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class EvalReport:
+    latency_s: float
+    energy_pj: float
+    energy_breakdown: dict[str, float]
+    layers: list[LayerReport]
+
+    @property
+    def edp(self) -> float:
+        return self.latency_s * self.energy_pj
+
+
+# -- candidate generation ------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _layer_candidates(hw: HwConfig, layer: Layer, h_shape: int, w_shape: int,
+                      dl_in: DataLayout, dl_out: DataLayout,
+                      n_wr: int, lm_cap: int
+                      ) -> tuple[tuple[int, float, float, LM], ...]:
+    """Per-WR best LM for a layer on an ``h x w`` region.
+
+    Returns ``(wr, perf_s, size_bytes, lm)`` tuples sorted by size desc —
+    heavily cached: identical layer shapes recur across deep nets.
+    """
+    lms = enumerate_lms(layer, h_shape, w_shape, cap=lm_cap)
+    best: dict[int, tuple[float, float, LM]] = {}
+    for lm in lms:
+        pl = part_layer(layer, lm)
+        node = part_layer_cost(hw, pl, dl_in, dl_out)
+        for wr in wr_candidates(layer, lm, n_wr):
+            ce = comm_estimate(layer, lm, wr, hw)
+            perf = node.latency_s + ce.latency_s
+            size = ce.weight_bytes_per_node
+            cur = best.get(wr)
+            if cur is None or perf < cur[0]:
+                best[wr] = (perf, size, lm)
+    out = [(wr, p, s, lm) for wr, (p, s, lm) in best.items()]
+    out.sort(key=lambda t: -t[2])
+    return tuple(out)
+
+
+# -- Algorithm 2: DP over capacity --------------------------------------------
+
+
+import numpy as np
+
+
+class RegionTable:
+    """Knapsack result for one region: monotone perf-vs-capacity + backtrack.
+
+    Backtracking is array-based (O(layers x units) int16), replayed in
+    reverse: at budget ``cap`` layer ``l`` chose candidate ``choice[l, eff]``
+    where ``eff = eff_cap[l, cap]`` is the cell the monotone fill borrowed
+    from; the remaining budget is ``eff - size(choice)``.
+    """
+
+    def __init__(self, layer_cands, units: int, unit_bytes: float):
+        self.layer_cands = layer_cands
+        self.units = units
+        perf = np.zeros(units + 1)
+        self.choice = np.full((len(layer_cands), units + 1), -1, np.int16)
+        self.eff = np.zeros((len(layer_cands), units + 1), np.int32)
+        self.sizes = []
+        for li, (lname, cands) in enumerate(layer_cands):
+            sizes = np.minimum(units + 1,
+                               np.ceil(np.array([c[2] for c in cands])
+                                       / unit_bytes)).astype(np.int64)
+            self.sizes.append(sizes)
+            perfs = np.array([c[1] for c in cands])
+            nperf = np.full(units + 1, INF)
+            for ci in range(len(cands)):
+                s = int(sizes[ci])
+                if s > units:
+                    continue
+                cand = perf[:units + 1 - s] + perfs[ci]
+                seg = nperf[s:]
+                better = cand < seg
+                nperf[s:] = np.where(better, cand, seg)
+                self.choice[li, s:][better] = ci
+            # monotone fill, tracking effective cap
+            eff = np.arange(units + 1, dtype=np.int32)
+            run = np.minimum.accumulate(nperf)
+            borrowed = nperf > run
+            # effective cap = last index where run decreased
+            last = np.where(~borrowed, eff, 0)
+            eff = np.maximum.accumulate(last)
+            self.eff[li] = eff
+            perf = run
+        self.perf = perf
+
+    def backtrack(self, cap: int) -> dict[str, int]:
+        picks: dict[str, int] = {}
+        cap = int(min(cap, self.units))
+        for li in range(len(self.layer_cands) - 1, -1, -1):
+            lname, cands = self.layer_cands[li]
+            eff = int(self.eff[li, cap])
+            ci = int(self.choice[li, eff])
+            if ci < 0:  # infeasible cell: fall back to fastest candidate
+                ci = min(range(len(cands)), key=lambda i: cands[i][1])
+                picks[lname] = ci
+                continue
+            picks[lname] = ci
+            cap = eff - int(self.sizes[li][ci])
+        return picks
+
+
+# -- the mapper ---------------------------------------------------------------
+
+
+class PimMapper:
+    def __init__(self, hw: HwConfig, *, max_optim_iter: int = 3,
+                 cap_units: int = 1024, lm_cap: int = 200, n_wr: int = 5,
+                 sm_max_regions: int | None = None,
+                 dl_max_group: int = 32):
+        self.hw = hw
+        self.max_optim_iter = max_optim_iter
+        self.cap_units = cap_units
+        self.lm_cap = lm_cap
+        self.n_wr = n_wr
+        self.sm_max_regions = sm_max_regions
+        self.dl_max_group = dl_max_group
+
+    # ---- DL bookkeeping ------------------------------------------------------
+    def _default_dl(self, channels: int) -> DataLayout:
+        g = 1
+        while g * 2 <= min(channels, 16):
+            g *= 2
+        return DataLayout("BCHW", g)
+
+    def _init_dls(self, g: DnnGraph) -> dict[str, tuple[DataLayout, DataLayout]]:
+        dls = {}
+        for layer in g.layers:
+            dls[layer.name] = (self._default_dl(layer.C),
+                               self._default_dl(layer.K))
+        return dls
+
+    # ---- Algorithm 1 ----------------------------------------------------------
+    def map(self, graph: DnnGraph) -> Mapping:
+        hw = self.hw
+        segments = graph.segments()
+        dls = self._init_dls(graph)
+        mapping: Mapping | None = None
+        for it in range(self.max_optim_iter):
+            mapping = self._solve_sm_lm_wr(graph, segments, dls)
+            dls = self._optimize_dl(graph, mapping, dls)
+            for name, ch in mapping.choices.items():
+                ch.dl_in, ch.dl_out = dls[name]
+        return mapping
+
+    def _solve_sm_lm_wr(self, graph: DnnGraph, segments: list[Segment],
+                        dls) -> Mapping:
+        hw = self.hw
+        units = self.cap_units
+        unit_bytes = hw.node_dram_capacity / units
+        # Per segment: list of (sm, seg_perf, reg_tabs) where seg_perf[cap] is
+        # max over its regions' knapsack tables at per-node budget cap.
+        seg_tables = []
+        for seg in segments:
+            sms = gen_sm_candidates(graph, seg, hw.na_row, hw.na_col,
+                                    self.sm_max_regions)
+            per_sm = []
+            for sm in sms:
+                reg_tabs = []
+                seg_perf = np.zeros(units + 1)
+                for ri, region in enumerate(sm.regions):
+                    layer_cands = []
+                    for bi in sm.branches_of(ri):
+                        for lname in seg.branches[bi].heavy_layers(graph):
+                            layer = graph.layer(lname)
+                            din, dout = dls[lname]
+                            cands = _layer_candidates(
+                                hw, layer, region.h_shape, region.w_shape,
+                                din, dout, self.n_wr, self.lm_cap)
+                            layer_cands.append((lname, cands))
+                    if not layer_cands:
+                        continue
+                    tab = RegionTable(layer_cands, units, unit_bytes)
+                    seg_perf = np.maximum(seg_perf, tab.perf)
+                    reg_tabs.append((region, tab))
+                if np.isinf(seg_perf[units]) and reg_tabs:
+                    continue  # SM infeasible even at full capacity
+                per_sm.append((sm, seg_perf, reg_tabs))
+            has_heavy = any(b.heavy_layers(graph) for b in seg.branches)
+            if has_heavy and not per_sm:
+                raise RuntimeError(
+                    f"no feasible mapping under DRAM capacity for segment "
+                    f"{seg.index} of {graph.name}")
+            seg_tables.append(per_sm)
+
+        # combine SMs: best per (segment, cap); then min-plus convolve
+        tab = np.zeros(units + 1)
+        seg_choice: list[tuple[np.ndarray, np.ndarray, np.ndarray] | None] = []
+        for per_sm in seg_tables:
+            if not per_sm:
+                seg_choice.append(None)
+                continue
+            best = np.full(units + 1, INF)
+            best_sm = np.full(units + 1, -1, np.int32)
+            for smi, (_, seg_perf, _) in enumerate(per_sm):
+                better = seg_perf < best
+                best = np.where(better, seg_perf, best)
+                best_sm[better] = smi
+            ntab = np.full(units + 1, INF)
+            arg_i = np.full(units + 1, -1, np.int32)  # prefix budget used
+            for i in range(units + 1):
+                if not np.isfinite(tab[i]):
+                    continue
+                cand = tab[i] + best[:units + 1 - i]
+                seg = ntab[i:]
+                better = cand < seg
+                ntab[i:] = np.where(better, cand, seg)
+                arg_i[i:][better] = i
+            seg_choice.append((best_sm, arg_i, None))
+            tab = ntab
+            # monotone fill (keep arg of the borrowed cell)
+            for cap in range(1, units + 1):
+                if tab[cap - 1] < tab[cap]:
+                    tab[cap] = tab[cap - 1]
+                    arg_i[cap] = arg_i[cap - 1]
+
+        if not np.isfinite(tab[units]):
+            raise RuntimeError("no feasible mapping under DRAM capacity")
+
+        # backtrack: recover per-segment (sm index, cap_seg)
+        plan: list[tuple[int, int, int]] = []  # (seg_idx, smi, cap_seg)
+        cap = units
+        for si in range(len(seg_tables) - 1, -1, -1):
+            ch = seg_choice[si]
+            if ch is None:
+                continue
+            best_sm, arg_i, _ = ch
+            i = int(arg_i[cap])
+            if i < 0:
+                i = 0
+            cap_seg = cap - i
+            # the seg table is monotone: find the smallest budget achieving it
+            smi = int(best_sm[min(cap_seg, units)])
+            plan.append((si, smi, cap_seg))
+            cap = i
+
+        choices: dict[str, LayerChoice] = {}
+        sm_chosen: dict[int, SM] = {}
+        for si, smi, cap_seg in reversed(plan):
+            per_sm = seg_tables[si]
+            if smi < 0 or not per_sm:
+                smi = 0
+            sm, seg_perf, reg_tabs = per_sm[smi]
+            sm_chosen[si] = sm
+            for region, rtab in reg_tabs:
+                pick = rtab.backtrack(cap_seg)
+                for lname, cands in rtab.layer_cands:
+                    ci = pick.get(lname, 0)
+                    wr, p, size, lm = cands[ci]
+                    din, dout = dls[lname]
+                    choices[lname] = LayerChoice(lm, wr, din, dout, region,
+                                                 p, size)
+        return Mapping(graph, hw, segments, sm_chosen, choices,
+                       est_latency_s=float(tab[units]))
+
+    # ---- DL alternated pass (Sec. VI-C) ---------------------------------------
+    def _optimize_dl(self, graph: DnnGraph, mapping: Mapping, dls):
+        hw = self.hw
+        new: dict[str, tuple[DataLayout, DataLayout]] = {}
+        out_dl: dict[str, DataLayout] = {}
+        for name in graph.topo_order():
+            layer = graph.layer(name)
+            preds = graph.preds(name)
+            if preds:
+                din = out_dl[preds[0]]
+                for p in preds[1:]:  # dependency constraint: DLo(pred)=DLi(succ)
+                    out_dl[p] = din
+            else:
+                din = self._default_dl(layer.C)
+            if layer.is_heavy and name in mapping.choices:
+                ch = mapping.choices[name]
+                pl = part_layer(layer, ch.lm)
+                best, best_lat = None, INF
+                for cand in enumerate_layouts(layer.K, self.dl_max_group):
+                    lat = part_layer_cost(hw, pl, din, cand).latency_s
+                    if lat < best_lat:
+                        best, best_lat = cand, lat
+                out_dl[name] = best
+            else:
+                out_dl[name] = din  # aux layers pass data through
+            new[name] = (din, out_dl[name])
+        # refresh DLi from (possibly rewritten) predecessor DLo
+        final: dict[str, tuple[DataLayout, DataLayout]] = {}
+        for name in graph.topo_order():
+            preds = graph.preds(name)
+            din = out_dl[preds[0]] if preds else new[name][0]
+            final[name] = (din, out_dl[name])
+        return final
+
+
+# -- final evaluation with the Data-Scheduler ----------------------------------
+
+
+def _node_of(lm: LM, region: Region, na_col: int,
+             idx: dict[str, tuple[int, int]]) -> int:
+    st = loop_strides(lm)
+    h = region.h_pos
+    w = region.w_pos
+    for l in LOOPS:
+        ih, iw = idx.get(l, (0, 0))
+        sh, sw = st[l]
+        h += ih * sh
+        w += iw * sw
+    return h * na_col + w
+
+
+def _enumerate_indices(lm: LM, loops: tuple[str, ...]):
+    """All index dicts over the given loops (others zero)."""
+    outs = [dict()]
+    for l in loops:
+        i = LOOPS.index(l)
+        new = []
+        for a in range(lm.ph[i]):
+            for b in range(lm.pw[i]):
+                for d in outs:
+                    dd = dict(d)
+                    dd[l] = (a, b)
+                    new.append(dd)
+        outs = new
+    return outs
+
+
+@lru_cache(maxsize=None)
+def _sharing_latency(hw: HwConfig, lm: LM, region_shape: tuple[int, int],
+                     wr: int, w_bytes: float, i_bytes: float, p_bytes: float,
+                     solver: str, seed: int) -> tuple[float, float]:
+    """Scheduled (latency_s, energy_pj) for a layer's three sharing processes.
+
+    Translation-invariant (XY routes stay inside the set's bounding box), so
+    cached on the region *shape*, not its position.
+    """
+    na_col = region_shape[1]
+    noc = MeshNoc(region_shape[0], region_shape[1])
+    region = Region(0, 0, region_shape[0], region_shape[1])
+    solve = SOLVERS[solver]
+    lat = 0.0
+    en = 0.0
+
+    def run(sets: list[list[int]], chunk: float):
+        nonlocal lat, en
+        sets = [s for s in sets if len(s) > 1]
+        if not sets or chunk <= 0:
+            return
+        res = solve(noc, sets, [chunk] * len(sets), hw.link_bw_bytes,
+                    hw.cons.freq_hz, hw.cons.noc_energy_pj_per_bit_hop)
+        lat += res.latency_s
+        en += res.energy_pj
+
+    # weight sharing: per (k, c) group split into wr replica subsets
+    n_ws = lm.weight_share
+    group = math.ceil(n_ws / max(1, min(wr, n_ws)))
+    if group > 1 and w_bytes > 0:
+        share_loops = tuple(l for l in ("B", "P", "Q") if lm.parts(l) > 1)
+        sets = []
+        for idx in _enumerate_indices(lm, tuple(
+                l for l in ("K", "C") if lm.parts(l) > 1)):
+            nodes = [_node_of(lm, region, na_col, {**idx, **sub})
+                     for sub in _enumerate_indices(lm, share_loops)]
+            for s in range(0, len(nodes), group):
+                sets.append(nodes[s:s + group])
+        run(sets, w_bytes / group)
+    # input sharing across K
+    if lm.input_share > 1 and i_bytes > 0:
+        other = tuple(l for l in ("B", "P", "Q", "C") if lm.parts(l) > 1)
+        sets = []
+        for idx in _enumerate_indices(lm, other):
+            nodes = [_node_of(lm, region, na_col, {**idx, **sub})
+                     for sub in _enumerate_indices(lm, ("K",))]
+            sets.append(nodes)
+        run(sets, i_bytes / lm.input_share)
+    # psum reduction across C (~2 ring passes)
+    if lm.psum_share > 1 and p_bytes > 0:
+        other = tuple(l for l in ("B", "P", "Q", "K") if lm.parts(l) > 1)
+        sets = []
+        for idx in _enumerate_indices(lm, other):
+            nodes = [_node_of(lm, region, na_col, {**idx, **sub})
+                     for sub in _enumerate_indices(lm, ("C",))]
+            sets.append(nodes)
+        run(sets, 2 * p_bytes / lm.psum_share)
+    return lat, en
+
+
+def evaluate_mapping(mapping: Mapping, *, solver: str = "ilp",
+                     seed: int = 0) -> EvalReport:
+    """Final latency/energy with Data-Scheduler-optimized data sharing."""
+    g = mapping.graph
+    hw = mapping.hw
+    dbytes = hw.cons.data_bits // 8
+    layers: list[LayerReport] = []
+    total_lat = 0.0
+    total_energy = 0.0
+    bd = {"mac": 0.0, "sram": 0.0, "dram": 0.0, "noc": 0.0}
+    for seg_i, seg in enumerate(mapping.segments):
+        sm = mapping.sm.get(seg_i)
+        region_lat: dict[int, float] = {}
+        for bi, branch in enumerate(seg.branches):
+            for lname in branch.heavy_layers(g):
+                ch = mapping.choices.get(lname)
+                if ch is None:
+                    continue
+                layer = g.layer(lname)
+                pl = part_layer(layer, ch.lm)
+                node = part_layer_cost(hw, pl, ch.dl_in, ch.dl_out)
+                w_kc = pl.weight_count * dbytes
+                i_b = pl.ifmap_count * dbytes
+                p_b = pl.ofmap_count * (hw.cons.psum_bits // 8)
+                comm_lat, comm_en = _sharing_latency(
+                    hw, ch.lm, (ch.region.h_shape, ch.region.w_shape),
+                    ch.wr, w_kc, i_b, p_b, solver, seed)
+                n_nodes = ch.region.n_nodes
+                lat = node.latency_s + comm_lat
+                energy = node.energy_pj * n_nodes + comm_en
+                ri = sm.ir[bi] if sm else 0
+                region_lat[ri] = region_lat.get(ri, 0.0) + lat
+                bd["mac"] += node.e_mac_pj * n_nodes
+                bd["sram"] += node.e_sram_pj * n_nodes
+                bd["dram"] += node.e_dram_pj * n_nodes
+                bd["noc"] += comm_en
+                total_energy += energy
+                layers.append(LayerReport(lname, lat, comm_lat, energy,
+                                          comm_en, dict(node.breakdown)))
+        total_lat += max(region_lat.values()) if region_lat else 0.0
+    return EvalReport(total_lat, total_energy, bd, layers)

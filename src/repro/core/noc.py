@@ -1,0 +1,97 @@
+"""2-D mesh NoC model: XY dimension-order routing + per-link load accounting.
+
+The data-transfer latency of a scheduled communication pattern is set by the
+most-loaded link (paper Eq. 4); energy is 1.1 pJ/bit/hop (Sec. VIII-B).
+Nodes are flat indices ``r * cols + c``; links are directed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+
+@dataclass(frozen=True)
+class MeshNoc:
+    rows: int
+    cols: int
+
+    def node(self, r: int, c: int) -> int:
+        return r * self.cols + c
+
+    def coord(self, n: int) -> tuple[int, int]:
+        return divmod(n, self.cols)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.rows * self.cols
+
+    def n_links(self) -> int:
+        # directed horizontal + vertical mesh links
+        return 2 * (self.rows * (self.cols - 1) + self.cols * (self.rows - 1))
+
+    @lru_cache(maxsize=None)
+    def _link_index(self) -> dict[tuple[int, int], int]:
+        idx: dict[tuple[int, int], int] = {}
+        for r in range(self.rows):
+            for c in range(self.cols):
+                n = self.node(r, c)
+                if c + 1 < self.cols:
+                    idx[(n, self.node(r, c + 1))] = len(idx)
+                    idx[(self.node(r, c + 1), n)] = len(idx)
+                if r + 1 < self.rows:
+                    idx[(n, self.node(r + 1, c))] = len(idx)
+                    idx[(self.node(r + 1, c), n)] = len(idx)
+        return idx
+
+    @lru_cache(maxsize=None)
+    def route(self, src: int, dst: int) -> tuple[int, ...]:
+        """XY dimension-order route: along the row (X) first, then column (Y)."""
+        (sr, sc), (dr, dc) = self.coord(src), self.coord(dst)
+        idx = self._link_index()
+        links = []
+        r, c = sr, sc
+        step = 1 if dc > sc else -1
+        while c != dc:
+            links.append(idx[(self.node(r, c), self.node(r, c + step))])
+            c += step
+        step = 1 if dr > sr else -1
+        while r != dr:
+            links.append(idx[(self.node(r, c), self.node(r + step, c))])
+            r += step
+        return tuple(links)
+
+    def hops(self, src: int, dst: int) -> int:
+        (sr, sc), (dr, dc) = self.coord(src), self.coord(dst)
+        return abs(sr - dr) + abs(sc - dc)
+
+    # -- load accounting -----------------------------------------------------
+    def link_loads(self, transfers: list[tuple[int, int, float]]) -> list[float]:
+        """Bytes per directed link for ``(src, dst, nbytes)`` transfers."""
+        loads = [0.0] * self.n_links()
+        for src, dst, nbytes in transfers:
+            if src == dst or nbytes <= 0:
+                continue
+            for l in self.route(src, dst):
+                loads[l] += nbytes
+        return loads
+
+    def max_link_load(self, transfers: list[tuple[int, int, float]]) -> float:
+        loads = self.link_loads(transfers)
+        return max(loads) if loads else 0.0
+
+    def transfer_latency_s(self, transfers, link_bw_bytes: float,
+                           freq_hz: float, router_cycles: int = 2) -> float:
+        """Serialization on the hottest link + a hop-latency term."""
+        if not transfers:
+            return 0.0
+        max_load = self.max_link_load(transfers)
+        max_hops = max((self.hops(s, d) for s, d, b in transfers if b > 0),
+                       default=0)
+        return max_load / link_bw_bytes + max_hops * router_cycles / freq_hz
+
+    def transfer_energy_pj(self, transfers, pj_per_bit_hop: float) -> float:
+        e = 0.0
+        for src, dst, nbytes in transfers:
+            e += nbytes * 8 * self.hops(src, dst) * pj_per_bit_hop
+        return e

@@ -1,0 +1,284 @@
+"""Layer partitioning (LM, Sec. III-C) and the induced data-sharing structure.
+
+An ``LM`` carries five ``(Ph, Pw)`` bi-tuples — partition counts along the
+region's height/width for loops ``B, P, Q, K, C`` — plus the spatial order
+``P_order`` that decides which loop varies fastest across the node grid
+(paper Fig. 5: outermost loop in ``P_order`` splits the region first).
+
+Partitioning converts temporal reuse into *data-sharing* (Sec. VII):
+
+* nodes that differ only in their (B, P, Q) indices need the **same weights**
+  → weight sharing-sets of size ``PhB*PwB*PhP*PwP*PhQ*PwQ`` (``WR`` replicas
+  shrink the ring to ``ceil(N/WR)`` nodes each);
+* nodes that differ only in their K index need the **same inputs** → input
+  sharing-sets of size ``PhK*PwK``;
+* nodes that differ only in their C index hold **partial sums** that must be
+  reduced → psum groups of size ``PhC*PwC``.
+
+The mapper's fast path uses analytic ring estimates over the *exact* node
+coordinates (so ``P_order`` genuinely changes hop distances); the chosen
+mapping is later re-costed with the Data-Scheduler's optimized cycles.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import lru_cache
+
+from .hardware import HwConfig
+from .ir import Layer
+
+LOOPS = ("B", "P", "Q", "K", "C")
+
+# A small diverse set of spatial orders: which loops sit innermost (adjacent
+# nodes) matters for sharing-ring hop distance; 120 permutations collapse into
+# few equivalence classes for our 5-loop grids.
+DEFAULT_ORDERS = (
+    ("B", "P", "Q", "K", "C"),
+    ("K", "C", "B", "P", "Q"),
+    ("B", "K", "P", "Q", "C"),
+    ("P", "Q", "B", "C", "K"),
+    ("C", "K", "Q", "P", "B"),
+)
+
+
+@dataclass(frozen=True)
+class LM:
+    ph: tuple[int, int, int, int, int]
+    pw: tuple[int, int, int, int, int]
+    p_order: tuple[str, ...] = ("B", "P", "Q", "K", "C")
+
+    def parts(self, loop: str) -> int:
+        i = LOOPS.index(loop)
+        return self.ph[i] * self.pw[i]
+
+    @property
+    def n_nodes(self) -> int:
+        return math.prod(self.ph) * math.prod(self.pw)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (math.prod(self.ph), math.prod(self.pw))
+
+    # group sizes of the three sharing structures
+    @property
+    def weight_share(self) -> int:
+        return self.parts("B") * self.parts("P") * self.parts("Q")
+
+    @property
+    def input_share(self) -> int:
+        return self.parts("K")
+
+    @property
+    def psum_share(self) -> int:
+        return self.parts("C")
+
+    def short(self) -> str:
+        ps = ",".join(f"{l}{h}x{w}" for l, h, w in zip(LOOPS, self.ph, self.pw)
+                      if h * w > 1)
+        return f"LM({ps or 'none'};{''.join(self.p_order)})"
+
+
+@lru_cache(maxsize=None)
+def factor_splits(n: int, k: int) -> tuple[tuple[int, ...], ...]:
+    """All ordered k-tuples of positive ints with product n."""
+    if k == 1:
+        return ((n,),)
+    outs = []
+    for d in range(1, n + 1):
+        if n % d == 0:
+            for rest in factor_splits(n // d, k - 1):
+                outs.append((d,) + rest)
+    return tuple(outs)
+
+
+def part_layer(layer: Layer, lm: LM) -> Layer:
+    """Ceil-divided part-layer processed by one node (halo materialized)."""
+    Bp = math.ceil(layer.B / lm.parts("B"))
+    Pp = math.ceil(layer.P / lm.parts("P"))
+    Qp = math.ceil(layer.Q / lm.parts("Q"))
+    Kp = math.ceil(layer.K / lm.parts("K"))
+    Cp = math.ceil(layer.C / lm.parts("C"))
+    Hp = (Pp - 1) * layer.stride + layer.HK
+    Wp = (Qp - 1) * layer.stride + layer.WK
+    return replace(layer, B=Bp, C=Cp, H=Hp, W=Wp, K=Kp, pad=0)
+
+
+def enumerate_lms(layer: Layer, h_shape: int, w_shape: int,
+                  orders: tuple[tuple[str, ...], ...] = DEFAULT_ORDERS,
+                  cap: int = 400) -> list[LM]:
+    """All legal LMs for mapping ``layer`` onto an ``h x w`` region."""
+    lens = {"B": layer.B, "P": layer.P, "Q": layer.Q,
+            "K": layer.K, "C": layer.C}
+    outs: list[LM] = []
+    seen: set[tuple] = set()
+    for ph in factor_splits(h_shape, 5):
+        for pw in factor_splits(w_shape, 5):
+            ok = all(ph[i] * pw[i] <= lens[l] or ph[i] * pw[i] == 1
+                     for i, l in enumerate(LOOPS))
+            if not ok:
+                continue
+            for od in orders:
+                lm = LM(ph, pw, od)
+                key = (ph, pw, od)
+                if key in seen:
+                    continue
+                seen.add(key)
+                outs.append(lm)
+    if len(outs) > cap:
+        # favour balanced partitions: fewer ragged ceil-division leftovers
+        def ragged(lm: LM) -> float:
+            r = 0.0
+            for i, l in enumerate(LOOPS):
+                p = lm.ph[i] * lm.pw[i]
+                r += (math.ceil(lens[l] / p) * p / max(1, lens[l])) - 1.0
+            return r
+        outs.sort(key=ragged)
+        outs = outs[:cap]
+    return outs
+
+
+# -- node placement ----------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _strides(radices: tuple[int, ...]) -> tuple[int, ...]:
+    """Mixed-radix strides, big-endian (first radix is outermost)."""
+    out = [1] * len(radices)
+    for i in range(len(radices) - 2, -1, -1):
+        out[i] = out[i + 1] * radices[i + 1]
+    return tuple(out)
+
+
+def loop_strides(lm: LM) -> dict[str, tuple[int, int]]:
+    """(h_stride, w_stride) of each loop's index in the region grid."""
+    order = lm.p_order
+    h_rad = tuple(lm.ph[LOOPS.index(l)] for l in order)
+    w_rad = tuple(lm.pw[LOOPS.index(l)] for l in order)
+    hs, ws = _strides(h_rad), _strides(w_rad)
+    return {l: (hs[i], ws[i]) for i, l in enumerate(order)}
+
+
+@lru_cache(maxsize=None)
+def group_coords(lm: LM, loops: tuple[str, ...]) -> tuple[tuple[int, int], ...]:
+    """Region-relative coords of one sharing group: nodes spanning ``loops``
+    (all other loop indices held at zero), in snake order for ring building."""
+    strides = loop_strides(lm)
+    coords = [(0, 0)]
+    for l in loops:
+        i = LOOPS.index(l)
+        sh, sw = strides[l]
+        new = []
+        for a in range(lm.ph[i]):
+            for b in range(lm.pw[i]):
+                for (h, w) in coords:
+                    new.append((h + a * sh, w + b * sw))
+        coords = new
+    # snake order: sort by (h, w with alternating direction) for a short ring
+    coords.sort(key=lambda hw: (hw[0], hw[1] if hw[0] % 2 == 0 else -hw[1]))
+    return tuple(coords)
+
+
+def ring_avg_hops(coords: tuple[tuple[int, int], ...]) -> float:
+    """Mean manhattan distance between ring-consecutive nodes."""
+    n = len(coords)
+    if n <= 1:
+        return 0.0
+    d = 0
+    for i in range(n):
+        a, b = coords[i], coords[(i + 1) % n]
+        d += abs(a[0] - b[0]) + abs(a[1] - b[1])
+    return d / n
+
+
+# -- analytic communication estimates (mapper fast path) ---------------------
+
+@dataclass(frozen=True)
+class CommEstimate:
+    latency_s: float
+    energy_pj: float
+    weight_bytes_per_node: float  # DRAM capacity the layer claims per node
+
+    def __add__(self, o: "CommEstimate") -> "CommEstimate":
+        return CommEstimate(self.latency_s + o.latency_s,
+                            self.energy_pj + o.energy_pj,
+                            self.weight_bytes_per_node + o.weight_bytes_per_node)
+
+
+ZERO_COMM = CommEstimate(0.0, 0.0, 0.0)
+
+
+def _ring_cost(n: int, total_bytes: float, avg_hops: float,
+               hw: HwConfig) -> tuple[float, float]:
+    """(latency, energy) for a Hamilton-ring share of ``total_bytes`` spread
+    over ``n`` nodes: N-1 steps, each moving chunk=total/n per node."""
+    if n <= 1 or total_bytes <= 0:
+        return 0.0, 0.0
+    chunk = total_bytes / n
+    # per step every node sends one chunk over ~avg_hops links; the limiting
+    # link carries ~avg_hops chunks (XY routes of a spread ring overlap)
+    lat = (n - 1) * chunk * max(1.0, avg_hops) / hw.link_bw_bytes
+    energy = (n - 1) * total_bytes * 8 * max(1.0, avg_hops) \
+        * hw.cons.noc_energy_pj_per_bit_hop
+    return lat, energy
+
+
+def comm_estimate(layer: Layer, lm: LM, wr: int, hw: HwConfig) -> CommEstimate:
+    """NoC latency/energy + per-node weight storage for one execution."""
+    if not layer.is_heavy:
+        return ZERO_COMM
+    dbytes = hw.cons.data_bits // 8
+    pl = part_layer(layer, lm)
+    lat = 0.0
+    energy = 0.0
+
+    # ---- weight sharing (Sec. III-D) ----------------------------------------
+    n_ws = lm.weight_share
+    wr = max(1, min(wr, n_ws))
+    group = math.ceil(n_ws / wr)          # nodes sharing one replica
+    w_kc = pl.weight_count * dbytes       # weights of one (k,c) partition
+    stored = w_kc / group
+    if group > 1:
+        share_loops = tuple(l for l in ("B", "P", "Q") if lm.parts(l) > 1)
+        hops = ring_avg_hops(group_coords(lm, share_loops)[:group])
+        l1, e1 = _ring_cost(group, w_kc, hops, hw)
+        # every (k,c) partition runs its ring concurrently on disjoint nodes;
+        # energy sums over all replica groups in the region
+        n_groups = lm.parts("K") * lm.parts("C") * wr
+        lat += l1
+        energy += e1 * n_groups
+    # ---- input sharing (partitioned on K) -----------------------------------
+    n_is = lm.input_share
+    if n_is > 1:
+        i_bytes = pl.ifmap_count * dbytes
+        hops = ring_avg_hops(group_coords(lm, ("K",)))
+        l2, e2 = _ring_cost(n_is, i_bytes, hops, hw)
+        n_groups = lm.weight_share * lm.parts("C")
+        lat += l2
+        energy += e2 * n_groups
+    # ---- psum reduction (partitioned on C) ----------------------------------
+    n_ps = lm.psum_share
+    if n_ps > 1:
+        p_bytes = pl.ofmap_count * (hw.cons.psum_bits // 8)
+        hops = ring_avg_hops(group_coords(lm, ("C",)))
+        # reduce-scatter + all-gather style: ~2x one ring pass
+        l3, e3 = _ring_cost(n_ps, 2 * p_bytes, hops, hw)
+        n_groups = lm.weight_share * lm.parts("K")
+        lat += l3
+        energy += e3 * n_groups
+    return CommEstimate(lat, energy, stored)
+
+
+def wr_candidates(layer: Layer, lm: LM, n_cands: int = 5) -> list[int]:
+    """WR values from full replication down to 1 (Sec. VI-A)."""
+    n = lm.weight_share
+    outs = []
+    v = n
+    while v >= 1 and len(outs) < n_cands:
+        outs.append(v)
+        if v == 1:
+            break
+        v = max(1, v // 2)
+    if 1 not in outs:
+        outs.append(1)
+    return outs

@@ -1,0 +1,112 @@
+"""Inter-branch parallelism (SM, Sec. III-B): slicing-tree region generation.
+
+For a segment with ``N_br`` branches we emit SM candidates with
+``N_reg = 1 .. N_br`` rectangular regions.  Branch→region assignment balances
+MAC load (LPT greedy); region rectangles come from recursively slicing the
+node array proportionally to the assigned load (the paper's slicing-tree
+representation [37]).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .ir import DnnGraph, Segment
+
+
+@dataclass(frozen=True)
+class Region:
+    h_pos: int
+    w_pos: int
+    h_shape: int
+    w_shape: int
+
+    @property
+    def n_nodes(self) -> int:
+        return self.h_shape * self.w_shape
+
+    def nodes(self, na_col: int) -> list[int]:
+        return [(self.h_pos + r) * na_col + (self.w_pos + c)
+                for r in range(self.h_shape) for c in range(self.w_shape)]
+
+
+@dataclass(frozen=True)
+class SM:
+    """Segment mapping: regions + branch→region assignment (paper's SM)."""
+
+    n_reg: int
+    regions: tuple[Region, ...]
+    ir: tuple[int, ...]  # ir[branch] = region index
+
+    def branches_of(self, region: int) -> list[int]:
+        return [b for b, r in enumerate(self.ir) if r == region]
+
+
+def _lpt_assign(loads: list[float], n_bins: int) -> list[int]:
+    """Longest-processing-time greedy: balanced branch→region assignment."""
+    order = sorted(range(len(loads)), key=lambda i: -loads[i])
+    bins = [0.0] * n_bins
+    out = [0] * len(loads)
+    for i in order:
+        b = min(range(n_bins), key=lambda j: bins[j])
+        out[i] = b
+        bins[b] += loads[i]
+    return out
+
+
+def _slice(rect: tuple[int, int, int, int], loads: list[float],
+           idxs: list[int], out: dict[int, Region]) -> None:
+    """Recursively split ``rect`` among region indices ``idxs`` by load."""
+    h0, w0, hs, ws = rect
+    if len(idxs) == 1:
+        out[idxs[0]] = Region(h0, w0, hs, ws)
+        return
+    half = len(idxs) // 2
+    a, b = idxs[:half], idxs[half:]
+    la = sum(loads[i] for i in a)
+    lb = sum(loads[i] for i in b)
+    frac = la / max(1e-12, la + lb)
+    if hs >= ws:  # split along height
+        cut = min(hs - 1, max(1, round(hs * frac)))
+        _slice((h0, w0, cut, ws), loads, a, out)
+        _slice((h0 + cut, w0, hs - cut, ws), loads, b, out)
+    else:
+        cut = min(ws - 1, max(1, round(ws * frac)))
+        _slice((h0, w0, hs, cut), loads, a, out)
+        _slice((h0, w0 + cut, hs, ws - cut), loads, b, out)
+
+
+def gen_sm_candidates(g: DnnGraph, seg: Segment, na_row: int, na_col: int,
+                      max_regions: int | None = None) -> list[SM]:
+    """SM candidates with different inter-branch parallelism (Sec. VI-A)."""
+    n_br = seg.n_branches
+    loads = [max(1.0, float(b.macs(g))) for b in seg.branches]
+    cap = min(n_br, na_row * na_col, max_regions or n_br)
+    # geometric sweep keeps many-branch segments (BERT heads, MoE experts)
+    # tractable while still covering serial..fully-parallel extremes
+    n_regs = []
+    v = 1
+    while v < cap:
+        n_regs.append(v)
+        v *= 2
+    n_regs.append(cap)
+    outs: list[SM] = []
+    seen: set[tuple] = set()
+    for n_reg in n_regs:
+        ir = _lpt_assign(loads, n_reg)
+        used = sorted(set(ir))
+        remap = {r: i for i, r in enumerate(used)}  # drop empty regions
+        ir = [remap[r] for r in ir]
+        n_used = len(used)
+        reg_loads = [0.0] * n_used
+        for b, r in enumerate(ir):
+            reg_loads[r] += loads[b]
+        regions: dict[int, Region] = {}
+        _slice((0, 0, na_row, na_col), reg_loads, list(range(n_used)), regions)
+        sm = SM(n_used, tuple(regions[i] for i in range(n_used)), tuple(ir))
+        key = (sm.regions, sm.ir)
+        if key not in seen:
+            seen.add(key)
+            outs.append(sm)
+    return outs

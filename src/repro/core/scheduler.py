@@ -1,0 +1,211 @@
+"""Data-Scheduler (Sec. VII): Hamilton-cycle data-sharing on the mesh NoC.
+
+Each *sharing-set* holds one piece of data distributed 1/N per node; a
+Hamilton cycle rotates chunks so after N-1 steps every node has everything —
+all nodes send and receive equal amounts (the paper's load-balance argument).
+The latency of the whole process is set by the hottest NoC link (Eq. 4),
+where each selected cycle edge (a→b) carries ``(N-1) * chunk`` bytes over its
+XY route.
+
+The paper solves the joint cycle-selection ILP (MTZ subtour elimination,
+Eq. 2–3) with Gurobi.  Gurobi is unavailable offline, so ``solve_ilp_ls``
+searches the *same feasible set* (one Hamilton cycle per sharing-set) for the
+*same objective* (min max-link-load) with exhaustive enumeration for small
+sets and multi-restart 2-opt local search jointly across sets otherwise;
+tests verify it matches brute force where brute force is tractable.
+
+Baselines from Sec. VIII-E: ``solve_tsp`` (per-set min-total-hop cycle, the
+[47] approach) and ``solve_shp`` (shortest-path unicast of every chunk).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import random
+from dataclasses import dataclass
+
+from .noc import MeshNoc
+
+
+@dataclass
+class ScheduleResult:
+    cycles: list[list[int]]          # node order per sharing-set (SHP: [])
+    transfers: list[tuple[int, int, float]]
+    max_link_bytes: float
+    latency_s: float
+    energy_pj: float
+
+
+def _cycle_transfers(cycle: list[int], chunk_bytes: float) -> list[tuple[int, int, float]]:
+    n = len(cycle)
+    # edge a->next carries (n-1) chunks over the full process
+    return [(cycle[i], cycle[(i + 1) % n], (n - 1) * chunk_bytes)
+            for i in range(n)]
+
+
+def _all_transfers(cycles: list[list[int]], chunks: list[float]):
+    out: list[tuple[int, int, float]] = []
+    for cyc, ch in zip(cycles, chunks):
+        if len(cyc) > 1:
+            out.extend(_cycle_transfers(cyc, ch))
+    return out
+
+
+def _finish(noc: MeshNoc, cycles, chunks, link_bw: float, freq: float,
+            pj_per_bit_hop: float) -> ScheduleResult:
+    tr = _all_transfers(cycles, chunks)
+    mx = noc.max_link_load(tr)
+    lat = noc.transfer_latency_s(tr, link_bw, freq)
+    en = noc.transfer_energy_pj(tr, pj_per_bit_hop)
+    return ScheduleResult(cycles, tr, mx, lat, en)
+
+
+# -- the ILP-equivalent joint optimizer ---------------------------------------
+
+def solve_ilp_ls(noc: MeshNoc, sharing_sets: list[list[int]],
+                 chunk_bytes: list[float], link_bw: float, freq: float,
+                 pj_per_bit_hop: float, *, seed: int = 0,
+                 restarts: int = 4, iters: int = 400) -> ScheduleResult:
+    """Joint min-max-link-load Hamilton cycle selection (paper Eq. 2–4)."""
+    rng = random.Random(seed)
+    small = all(len(s) <= 7 for s in sharing_sets) and len(sharing_sets) == 1
+    if small:
+        return _solve_exact(noc, sharing_sets, chunk_bytes, link_bw, freq,
+                            pj_per_bit_hop)
+
+    def objective(cycles) -> float:
+        return noc.max_link_load(_all_transfers(cycles, chunk_bytes))
+
+    best_cycles = None
+    best_obj = math.inf
+    for r in range(max(3, restarts)):
+        cycles = []
+        for si, s in enumerate(sharing_sets):
+            c = list(s)
+            if r == 0:
+                # alternate row-/column-snakes across sets: translated sets
+                # then load disjoint link classes instead of piling onto the
+                # same row links (the coordination the joint ILP encodes)
+                c.sort(key=lambda n: _snake_key(noc, n, flip=si % 2 == 1))
+            elif r == 1:  # seed with the TSP solution: LS can only improve it
+                c = _two_opt_distance(noc, _nearest_neighbor_cycle(noc, c))
+            elif r == 2:
+                c.sort(key=lambda n: _snake_key(noc, n))
+            else:
+                rng.shuffle(c)
+            cycles.append(c)
+        obj = objective(cycles)
+        stall = 0
+        for _ in range(iters):
+            if stall > 60:
+                break
+            si = rng.randrange(len(cycles))
+            cyc = cycles[si]
+            if len(cyc) < 4:
+                stall += 1
+                continue
+            i, j = sorted(rng.sample(range(len(cyc)), 2))
+            if j - i < 1:
+                stall += 1
+                continue
+            cand = cyc[:i] + cyc[i:j + 1][::-1] + cyc[j + 1:]  # 2-opt reverse
+            old = cycles[si]
+            cycles[si] = cand
+            new_obj = objective(cycles)
+            if new_obj <= obj:
+                if new_obj < obj:
+                    stall = 0
+                obj = new_obj
+            else:
+                cycles[si] = old
+                stall += 1
+        if obj < best_obj:
+            best_obj = obj
+            best_cycles = [list(c) for c in cycles]
+    return _finish(noc, best_cycles, chunk_bytes, link_bw, freq, pj_per_bit_hop)
+
+
+def _snake_key(noc: MeshNoc, n: int, flip: bool = False) -> tuple[int, int]:
+    r, c = noc.coord(n)
+    if flip:  # column-major snake
+        return (c, r if c % 2 == 0 else noc.rows - 1 - r)
+    return (r, c if r % 2 == 0 else noc.cols - 1 - c)
+
+
+def _solve_exact(noc: MeshNoc, sharing_sets, chunk_bytes, link_bw, freq,
+                 pj_per_bit_hop) -> ScheduleResult:
+    """Brute-force the single small sharing-set (reference for tests)."""
+    s = sharing_sets[0]
+    first, rest = s[0], s[1:]
+    best = None
+    best_obj = math.inf
+    for perm in itertools.permutations(rest):
+        cyc = [first] + list(perm)
+        obj = noc.max_link_load(_all_transfers([cyc], chunk_bytes))
+        if obj < best_obj:
+            best_obj = obj
+            best = cyc
+    return _finish(noc, [best], chunk_bytes, link_bw, freq, pj_per_bit_hop)
+
+
+# -- baselines (Sec. VIII-E) ---------------------------------------------------
+
+def solve_tsp(noc: MeshNoc, sharing_sets: list[list[int]],
+              chunk_bytes: list[float], link_bw: float, freq: float,
+              pj_per_bit_hop: float) -> ScheduleResult:
+    """Per-set min-total-hop Hamilton cycle (the TSP method of [47])."""
+    cycles = []
+    for s in sharing_sets:
+        cyc = _nearest_neighbor_cycle(noc, s)
+        cyc = _two_opt_distance(noc, cyc)
+        cycles.append(cyc)
+    return _finish(noc, cycles, chunk_bytes, link_bw, freq, pj_per_bit_hop)
+
+
+def _nearest_neighbor_cycle(noc: MeshNoc, nodes: list[int]) -> list[int]:
+    rem = list(nodes[1:])
+    cyc = [nodes[0]]
+    while rem:
+        cur = cyc[-1]
+        nxt = min(rem, key=lambda n: noc.hops(cur, n))
+        rem.remove(nxt)
+        cyc.append(nxt)
+    return cyc
+
+
+def _two_opt_distance(noc: MeshNoc, cyc: list[int]) -> list[int]:
+    def total(c):
+        return sum(noc.hops(c[i], c[(i + 1) % len(c)]) for i in range(len(c)))
+    best = list(cyc)
+    best_d = total(best)
+    improved = True
+    while improved:
+        improved = False
+        for i in range(1, len(best) - 1):
+            for j in range(i + 1, len(best)):
+                cand = best[:i] + best[i:j + 1][::-1] + best[j + 1:]
+                d = total(cand)
+                if d < best_d:
+                    best, best_d = cand, d
+                    improved = True
+    return best
+
+
+def solve_shp(noc: MeshNoc, sharing_sets: list[list[int]],
+              chunk_bytes: list[float], link_bw: float, freq: float,
+              pj_per_bit_hop: float) -> ScheduleResult:
+    """Shortest-path unicast: every chunk goes owner→consumer directly."""
+    tr: list[tuple[int, int, float]] = []
+    for s, ch in zip(sharing_sets, chunk_bytes):
+        for src in s:
+            for dst in s:
+                if src != dst:
+                    tr.append((src, dst, ch))
+    mx = noc.max_link_load(tr)
+    lat = noc.transfer_latency_s(tr, link_bw, freq)
+    en = noc.transfer_energy_pj(tr, pj_per_bit_hop)
+    return ScheduleResult([], tr, mx, lat, en)
+
+
+SOLVERS = {"ilp": solve_ilp_ls, "tsp": solve_tsp, "shp": solve_shp}

@@ -1,0 +1,229 @@
+"""Comparison DSE strategies for Fig. 9: Random, SimAnneal, plain GP, GBT.
+
+Each strategy implements ``observe(cfg, cost)`` + ``propose(k)`` so the DSE
+driver (core/dse.py) can swap them for the NicePIM tuner.  ``GBTSurrogate``
+is a from-scratch gradient-boosted-tree regressor standing in for XGBoost
+(unavailable offline); ``GPSurrogate`` is an exact RBF GP on the raw
+normalized parameters (no learned feature extractor — the ablation the paper
+runs against deep kernel learning).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .hardware import (DEFAULT_CONSTRAINTS, HwConfig, PimConstraints,
+                       normalize_params, sample_space)
+from .tuner import sample_configs
+
+
+class _Base:
+    def __init__(self, cons: PimConstraints = DEFAULT_CONSTRAINTS,
+                 seed: int = 0, n_sample: int = 2048):
+        self.cons = cons
+        self.rng = np.random.default_rng(seed)
+        self.n_sample = n_sample
+        self._x: list[list[float]] = []
+        self._y: list[float] = []
+
+    def observe(self, cfg: HwConfig, area_mm2: float, cost: float | None):
+        if cost is not None:
+            self._x.append(normalize_params(cfg))
+            self._y.append(math.log(max(cost, 1e-30)))
+
+    def fit(self):
+        pass
+
+
+class RandomSearch(_Base):
+    name = "random"
+
+    def propose(self, k: int = 8) -> list[HwConfig]:
+        return sample_configs(k, self.rng, self.cons)
+
+
+class SimulatedAnnealing(_Base):
+    """Random-walk annealing over the discrete parameter grid."""
+
+    name = "simanneal"
+
+    def __init__(self, cons=DEFAULT_CONSTRAINTS, seed: int = 0,
+                 n_sample: int = 2048, t0: float = 1.0, decay: float = 0.92):
+        super().__init__(cons, seed, n_sample)
+        self.t = t0
+        self.decay = decay
+        self.cur: HwConfig | None = None
+        self.cur_cost = math.inf
+
+    def observe(self, cfg: HwConfig, area_mm2: float, cost: float | None):
+        super().observe(cfg, area_mm2, cost)
+        if cost is None:
+            return
+        c = math.log(max(cost, 1e-30))
+        if (self.cur is None or c < self.cur_cost or
+                self.rng.random() < math.exp(-(c - self.cur_cost) /
+                                             max(self.t, 1e-6))):
+            self.cur = cfg
+            self.cur_cost = c
+        self.t *= self.decay
+
+    def _neighbor(self, cfg: HwConfig) -> HwConfig:
+        space = sample_space(self.cons)
+        keys = list(space)
+        for _ in range(64):
+            k = keys[self.rng.integers(len(keys))]
+            vals = space[k]
+            cur = getattr(cfg, k)
+            i = min(range(len(vals)), key=lambda j: abs(vals[j] - cur))
+            j = int(np.clip(i + self.rng.integers(-2, 3), 0, len(vals) - 1))
+            cand = cfg.replace(**{k: vals[j]})
+            if cand.legal_shape():
+                return cand
+        return cfg
+
+    def propose(self, k: int = 8) -> list[HwConfig]:
+        if self.cur is None:
+            return sample_configs(k, self.rng, self.cons)
+        return [self._neighbor(self.cur) for _ in range(k)]
+
+
+class GPSurrogate(_Base):
+    """Exact RBF GP on raw params (median-heuristic lengthscale)."""
+
+    name = "gp"
+
+    def __init__(self, cons=DEFAULT_CONSTRAINTS, seed: int = 0,
+                 n_sample: int = 2048, beta: float = 1.0):
+        super().__init__(cons, seed, n_sample)
+        self.beta = beta
+
+    def _rank(self, xq: np.ndarray) -> np.ndarray:
+        x = np.array(self._x)
+        y = np.array(self._y)
+        mu, sd = y.mean(), y.std() + 1e-9
+        yn = (y - mu) / sd
+        d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        ls2 = np.median(d2[d2 > 0]) if (d2 > 0).any() else 1.0
+        k = np.exp(-0.5 * d2 / ls2) + 1e-3 * np.eye(len(x))
+        kinv_y = np.linalg.solve(k, yn)
+        dq2 = ((xq[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        kq = np.exp(-0.5 * dq2 / ls2)
+        mean = kq @ kinv_y
+        var = np.clip(1.0 - np.einsum("qi,ij,qj->q", kq,
+                                      np.linalg.inv(k), kq), 1e-9, None)
+        return mean - self.beta * np.sqrt(var)
+
+    def propose(self, k: int = 8) -> list[HwConfig]:
+        cands = sample_configs(self.n_sample, self.rng, self.cons)
+        if len(self._y) < 3:
+            return cands[:k]
+        xq = np.array([normalize_params(c) for c in cands])
+        order = np.argsort(self._rank(xq))
+        seen, out = set(), []
+        for i in order:
+            t = cands[i].as_tuple()
+            if t not in seen:
+                seen.add(t)
+                out.append(cands[i])
+            if len(out) >= k:
+                break
+        return out
+
+
+# -- tiny gradient-boosted trees (XGBoost stand-in) ---------------------------
+
+
+@dataclass
+class _Stump:
+    feat: int
+    thresh: float
+    left: float
+    right: float
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.where(x[:, self.feat] <= self.thresh, self.left, self.right)
+
+
+def _fit_stump(x: np.ndarray, r: np.ndarray, rng) -> _Stump:
+    n, d = x.shape
+    best = None
+    best_err = math.inf
+    feats = rng.choice(d, size=min(d, 5), replace=False)
+    for f in feats:
+        vals = np.unique(x[:, f])
+        if len(vals) < 2:
+            continue
+        for t in np.quantile(vals, [0.25, 0.5, 0.75]):
+            m = x[:, f] <= t
+            if m.sum() == 0 or (~m).sum() == 0:
+                continue
+            lv, rv = r[m].mean(), r[~m].mean()
+            err = ((r - np.where(m, lv, rv)) ** 2).sum()
+            if err < best_err:
+                best_err = err
+                best = _Stump(int(f), float(t), float(lv), float(rv))
+    return best or _Stump(0, 0.5, float(r.mean()), float(r.mean()))
+
+
+class GBTSurrogate(_Base):
+    """Gradient-boosted stumps with squared loss (XGBoost stand-in)."""
+
+    name = "gbt"
+
+    def __init__(self, cons=DEFAULT_CONSTRAINTS, seed: int = 0,
+                 n_sample: int = 2048, n_trees: int = 120, lr: float = 0.15):
+        super().__init__(cons, seed, n_sample)
+        self.n_trees = n_trees
+        self.lr = lr
+        self._trees: list[_Stump] = []
+        self._bias = 0.0
+
+    def fit(self):
+        if len(self._y) < 4:
+            return
+        x = np.array(self._x)
+        y = np.array(self._y)
+        self._bias = float(y.mean())
+        pred = np.full(len(y), self._bias)
+        self._trees = []
+        for _ in range(self.n_trees):
+            stump = _fit_stump(x, y - pred, self.rng)
+            pred = pred + self.lr * stump.predict(x)
+            self._trees.append(stump)
+
+    def _predict(self, xq: np.ndarray) -> np.ndarray:
+        pred = np.full(len(xq), self._bias)
+        for t in self._trees:
+            pred = pred + self.lr * t.predict(xq)
+        return pred
+
+    def propose(self, k: int = 8) -> list[HwConfig]:
+        cands = sample_configs(self.n_sample, self.rng, self.cons)
+        if not self._trees:
+            return cands[:k]
+        xq = np.array([normalize_params(c) for c in cands])
+        order = np.argsort(self._predict(xq))
+        seen, out = set(), []
+        for i in order:
+            t = cands[i].as_tuple()
+            if t not in seen:
+                seen.add(t)
+                out.append(cands[i])
+            if len(out) >= k:
+                break
+        return out
+
+
+def make_strategy(name: str, cons=DEFAULT_CONSTRAINTS, seed: int = 0,
+                  n_sample: int = 2048):
+    """Factory covering every Fig. 9 curve (incl. the NicePIM tuner)."""
+    from .tuner import PimTuner
+    name = name.lower()
+    if name in ("nicepim", "dkl"):
+        return PimTuner(cons=cons, seed=seed, n_sample=n_sample)
+    cls = {"random": RandomSearch, "simanneal": SimulatedAnnealing,
+           "gp": GPSurrogate, "gbt": GBTSurrogate, "xgboost": GBTSurrogate}[name]
+    return cls(cons, seed, n_sample)

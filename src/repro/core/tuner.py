@@ -1,0 +1,289 @@
+"""PIM-Tuner (Sec. V): filter MLP + deep-kernel-learning suggestion model.
+
+Both models are pure JAX, trained with the from-scratch Adam in
+``repro.training.optim``:
+
+* **Filter model** — MLP with 256/64/16/1 ReLU layers (paper Sec. VIII-B)
+  regressing the logic-die area from the normalized 7-d hardware parameter
+  vector; candidates whose predicted area exceeds the constraint are
+  discarded before ranking.
+* **Suggestion model** — deep kernel learning [27]: an MLP feature extractor
+  (256/64/16) feeding an RBF Gaussian process; MLP weights and GP
+  hyperparameters (lengthscale, signal, noise) are optimized *jointly* by
+  maximizing the exact GP log marginal likelihood.  Ranking uses a lower
+  confidence bound on the predicted (standardized log-)cost.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..training.optim import Adam
+from .hardware import HwConfig, PimConstraints, DEFAULT_CONSTRAINTS, \
+    normalize_params, sample_space
+
+
+def _init_mlp(key, sizes: list[int]) -> list[dict]:
+    layers = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (a, b), jnp.float32) * math.sqrt(2.0 / a)
+        layers.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return layers
+
+
+def _mlp_forward(layers: list[dict], x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    for i, l in enumerate(layers):
+        h = h @ l["w"] + l["b"]
+        if i < len(layers) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Filter model
+# ---------------------------------------------------------------------------
+
+FILTER_SIZES = [7, 256, 64, 16, 1]
+
+
+@jax.jit
+def _filter_loss(params, x, y):
+    pred = _mlp_forward(params, x)[:, 0]
+    return jnp.mean((pred - y) ** 2)
+
+
+@jax.jit
+def _filter_step(params, opt_state, x, y):
+    loss, grads = jax.value_and_grad(_filter_loss)(params, x, y)
+    params, opt_state = _FILTER_OPT.apply(grads, opt_state, params)
+    return params, opt_state, loss
+
+
+_FILTER_OPT = Adam(lr=3e-3)
+
+
+class FilterModel:
+    """Predicts log(area/budget) from hw params (area spans ~4 decades)."""
+
+    def __init__(self, cons: PimConstraints = DEFAULT_CONSTRAINTS, seed: int = 0):
+        self.cons = cons
+        self.params = _init_mlp(jax.random.PRNGKey(seed), FILTER_SIZES)
+        self.opt_state = _FILTER_OPT.init(self.params)
+        self._x: list[list[float]] = []
+        self._y: list[float] = []
+
+    def add(self, cfg: HwConfig, area_mm2: float) -> None:
+        self._x.append(normalize_params(cfg))
+        self._y.append(math.log(max(area_mm2, 1e-6) /
+                                self.cons.area_budget_mm2))
+
+    def fit(self, steps: int = 200) -> float:
+        if len(self._y) < 8:
+            return float("nan")
+        x = jnp.asarray(np.array(self._x, np.float32))
+        y = jnp.asarray(np.array(self._y, np.float32))
+        loss = jnp.inf
+        for _ in range(steps):
+            self.params, self.opt_state, loss = _filter_step(
+                self.params, self.opt_state, x, y)
+        return float(loss)
+
+    def predict_area(self, cfgs: list[HwConfig]) -> np.ndarray:
+        x = jnp.asarray(np.array([normalize_params(c) for c in cfgs],
+                                 np.float32))
+        pred = _mlp_forward(self.params, x)[:, 0]
+        return np.exp(np.asarray(pred)) * self.cons.area_budget_mm2
+
+    def trained(self) -> bool:
+        return len(self._y) >= 8
+
+
+# ---------------------------------------------------------------------------
+# Deep-kernel-learning suggestion model
+# ---------------------------------------------------------------------------
+
+DKL_SIZES = [7, 256, 64, 16]
+
+
+def _dkl_init(seed: int) -> dict:
+    return {
+        "mlp": _init_mlp(jax.random.PRNGKey(seed), DKL_SIZES),
+        "log_ls": jnp.zeros(()),       # RBF lengthscale
+        "log_sf": jnp.zeros(()),       # signal stddev
+        "log_sn": jnp.asarray(-2.0),   # noise stddev
+    }
+
+
+def _features(params, x):
+    z = _mlp_forward(params["mlp"], x)
+    return z / (jnp.linalg.norm(z, axis=-1, keepdims=True) + 1e-6)
+
+
+def _kernel(params, za, zb):
+    ls = jnp.exp(params["log_ls"])
+    sf2 = jnp.exp(2 * params["log_sf"])
+    d2 = jnp.sum((za[:, None, :] - zb[None, :, :]) ** 2, -1)
+    return sf2 * jnp.exp(-0.5 * d2 / (ls ** 2 + 1e-8))
+
+
+@jax.jit
+def _nlml(params, x, y):
+    """Negative log marginal likelihood of the exact GP."""
+    z = _features(params, x)
+    n = x.shape[0]
+    k = _kernel(params, z, z) + (jnp.exp(2 * params["log_sn"]) + 1e-6) \
+        * jnp.eye(n)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    return (0.5 * y @ alpha + jnp.sum(jnp.log(jnp.diag(chol)))
+            + 0.5 * n * jnp.log(2 * jnp.pi)) / n
+
+
+_DKL_OPT = Adam(lr=3e-3, clip_norm=10.0)
+
+
+@jax.jit
+def _dkl_step(params, opt_state, x, y):
+    loss, grads = jax.value_and_grad(_nlml)(params, x, y)
+    params, opt_state = _DKL_OPT.apply(grads, opt_state, params)
+    return params, opt_state, loss
+
+
+@jax.jit
+def _dkl_predict(params, x_train, y_train, x_query):
+    zt = _features(params, x_train)
+    zq = _features(params, x_query)
+    n = x_train.shape[0]
+    k = _kernel(params, zt, zt) + (jnp.exp(2 * params["log_sn"]) + 1e-6) \
+        * jnp.eye(n)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y_train)
+    kq = _kernel(params, zq, zt)
+    mean = kq @ alpha
+    v = jax.scipy.linalg.solve_triangular(chol, kq.T, lower=True)
+    var = jnp.exp(2 * params["log_sf"]) - jnp.sum(v * v, axis=0)
+    return mean, jnp.clip(var, 1e-9)
+
+
+class DklSuggestionModel:
+    """Ranks hardware configs by LCB of predicted standardized log-cost."""
+
+    name = "dkl"
+
+    def __init__(self, seed: int = 0, beta: float = 1.0):
+        self.params = _dkl_init(seed)
+        self.opt_state = _DKL_OPT.init(self.params)
+        self.beta = beta
+        self._x: list[list[float]] = []
+        self._y: list[float] = []
+        self._mu = 0.0
+        self._sigma = 1.0
+
+    def add(self, cfg: HwConfig, cost: float) -> None:
+        self._x.append(normalize_params(cfg))
+        self._y.append(math.log(max(cost, 1e-30)))
+
+    def fit(self, steps: int = 300) -> float:
+        if len(self._y) < 3:
+            return float("nan")
+        y = np.array(self._y, np.float64)
+        self._mu = float(y.mean())
+        self._sigma = float(y.std() + 1e-9)
+        x = jnp.asarray(np.array(self._x, np.float32))
+        yn = jnp.asarray(((y - self._mu) / self._sigma).astype(np.float32))
+        loss = jnp.inf
+        for _ in range(steps):
+            self.params, self.opt_state, loss = _dkl_step(
+                self.params, self.opt_state, x, yn)
+        return float(loss)
+
+    def rank(self, cfgs: list[HwConfig]) -> np.ndarray:
+        """Scores (lower = better); LCB on the predicted cost."""
+        if len(self._y) < 3:
+            return np.zeros(len(cfgs))
+        xt = jnp.asarray(np.array(self._x, np.float32))
+        yt = jnp.asarray(
+            ((np.array(self._y) - self._mu) / self._sigma).astype(np.float32))
+        xq = jnp.asarray(np.array([normalize_params(c) for c in cfgs],
+                                  np.float32))
+        mean, var = _dkl_predict(self.params, xt, yt, xq)
+        return np.asarray(mean - self.beta * jnp.sqrt(var))
+
+
+# ---------------------------------------------------------------------------
+# Sampling + the tuner driver
+# ---------------------------------------------------------------------------
+
+
+def sample_configs(n: int, rng: np.random.Generator,
+                   cons: PimConstraints = DEFAULT_CONSTRAINTS) -> list[HwConfig]:
+    """Uniform raw samples from the Table-II design space (shape-legal only)."""
+    space = sample_space(cons)
+    keys = list(space)
+    outs = []
+    while len(outs) < n:
+        vals = {k: space[k][rng.integers(len(space[k]))] for k in keys}
+        cfg = HwConfig(cons=cons, **vals)
+        if cfg.legal_shape():
+            outs.append(cfg)
+    return outs
+
+
+@dataclass
+class PimTuner:
+    """One NicePIM tuner iteration: sample -> filter -> rank (Fig. 8)."""
+
+    name = "nicepim"
+
+    cons: PimConstraints = DEFAULT_CONSTRAINTS
+    seed: int = 0
+    n_sample: int = 2048
+    beta: float = 1.0
+    filter_model: FilterModel = None
+    suggestion: DklSuggestionModel = None
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        if self.filter_model is None:
+            self.filter_model = FilterModel(self.cons, self.seed)
+        if self.suggestion is None:
+            self.suggestion = DklSuggestionModel(self.seed, self.beta)
+
+    def propose(self, k: int = 8) -> list[HwConfig]:
+        cands = sample_configs(self.n_sample, self.rng, self.cons)
+        if self.filter_model.trained():
+            areas = self.filter_model.predict_area(cands)
+            keep = [c for c, a in zip(cands, areas)
+                    if a <= self.cons.area_budget_mm2]
+            if keep:
+                cands = keep
+        scores = self.suggestion.rank(cands)
+        order = np.argsort(scores)
+        # dedup while preserving rank order
+        seen, out = set(), []
+        for i in order:
+            t = cands[i].as_tuple()
+            if t not in seen:
+                seen.add(t)
+                out.append(cands[i])
+            if len(out) >= k:
+                break
+        return out
+
+    def observe(self, cfg: HwConfig, area_mm2: float,
+                cost: float | None) -> None:
+        self.filter_model.add(cfg, area_mm2)
+        if cost is not None:
+            self.suggestion.add(cfg, cost)
+
+    def fit(self) -> None:
+        self.filter_model.fit()
+        self.suggestion.fit()

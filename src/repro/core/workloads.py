@@ -1,0 +1,327 @@
+"""Workload DNNs (Sec. VIII-B) expressed in the NicePIM IR.
+
+GoogLeNet, VGG16, ResNet152, DarkNet53 and BERT-Base, exactly the five
+evaluation networks of the paper, plus a generic decoder-transformer /
+MoE export used to run the paper's DSE over the assigned LM architectures
+(each transformer block's matmuls in the conv representation of Sec. II-B;
+attention heads and MoE experts become parallel *branches*).
+
+All builders take ``batch`` (the paper evaluates batch 1) and optional
+``scale`` to shrink spatial dims / layer counts for fast CI runs.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .ir import DnnGraph, Layer, conv, matmul
+
+
+def _pool(name: str, B: int, C: int, H: int, W: int, stride: int = 2) -> Layer:
+    return Layer(name, "pool", B=B, C=C, H=H, W=W, K=C,
+                 HK=stride, WK=stride, stride=stride)
+
+
+def _aux(name: str, kind: str, B: int, C: int, H: int, W: int) -> Layer:
+    return Layer(name, kind, B=B, C=C, H=H, W=W, K=C)
+
+
+# ---------------------------------------------------------------------------
+# VGG16
+# ---------------------------------------------------------------------------
+
+def vgg16(batch: int = 1, scale: int = 1) -> DnnGraph:
+    g = DnnGraph("vgg16")
+    hw_ = 224 // scale
+    cfg = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+    prev = None
+    c_in, size = 3, hw_
+    idx = 0
+    for ci, (c_out, reps) in enumerate(cfg):
+        for r in range(reps):
+            name = f"conv{idx}"
+            g.add(conv(name, batch, c_in, size, size, c_out),
+                  [prev] if prev else [])
+            prev, c_in = name, c_out
+            idx += 1
+        pname = f"pool{ci}"
+        g.add(_pool(pname, batch, c_in, size, size), [prev])
+        prev = pname
+        size //= 2
+    feat = c_in * size * size
+    for i, k in enumerate((4096 // scale, 4096 // scale, 1000)):
+        name = f"fc{i}"
+        g.add(matmul(name, batch, feat, k), [prev])
+        prev, feat = name, k
+    return g
+
+
+# ---------------------------------------------------------------------------
+# GoogLeNet (Inception v1)
+# ---------------------------------------------------------------------------
+
+_INCEPTION = {
+    "3a": (192, 64, 96, 128, 16, 32, 32),
+    "3b": (256, 128, 128, 192, 32, 96, 64),
+    "4a": (480, 192, 96, 208, 16, 48, 64),
+    "4b": (512, 160, 112, 224, 24, 64, 64),
+    "4c": (512, 128, 128, 256, 24, 64, 64),
+    "4d": (512, 112, 144, 288, 32, 64, 64),
+    "4e": (528, 256, 160, 320, 32, 128, 128),
+    "5a": (832, 256, 160, 320, 32, 128, 128),
+    "5b": (832, 384, 192, 384, 48, 128, 128),
+}
+
+
+def googlenet(batch: int = 1, scale: int = 1) -> DnnGraph:
+    g = DnnGraph("googlenet")
+    size = 224 // scale
+    g.add(conv("stem1", batch, 3, size, size, 64, HK=7, stride=2))
+    size //= 2
+    g.add(_pool("pool1", batch, 64, size, size), ["stem1"])
+    size //= 2
+    g.add(conv("stem2", batch, 64, size, size, 64, HK=1), ["pool1"])
+    g.add(conv("stem3", batch, 64, size, size, 192, HK=3), ["stem2"])
+    g.add(_pool("pool2", batch, 192, size, size), ["stem3"])
+    size //= 2
+    prev = "pool2"
+    for blk, (cin, c1, c3r, c3, c5r, c5, pp) in _INCEPTION.items():
+        if blk in ("4a", "5a"):
+            g.add(_pool(f"pool_{blk}", batch, cin, size, size), [prev])
+            prev = f"pool_{blk}"
+            size //= 2
+        b1 = f"i{blk}_1x1"
+        g.add(conv(b1, batch, cin, size, size, c1, HK=1), [prev])
+        b2a, b2b = f"i{blk}_3r", f"i{blk}_3x3"
+        g.add(conv(b2a, batch, cin, size, size, c3r, HK=1), [prev])
+        g.add(conv(b2b, batch, c3r, size, size, c3, HK=3), [b2a])
+        b3a, b3b = f"i{blk}_5r", f"i{blk}_5x5"
+        g.add(conv(b3a, batch, cin, size, size, c5r, HK=1), [prev])
+        g.add(conv(b3b, batch, c5r, size, size, c5, HK=5), [b3a])
+        b4a, b4b = f"i{blk}_pool", f"i{blk}_pp"
+        g.add(Layer(b4a, "pool", B=batch, C=cin, H=size, W=size, K=cin,
+                    HK=3, WK=3, stride=1), [prev])
+        g.add(conv(b4b, batch, cin, size, size, pp, HK=1), [b4a])
+        cat = f"i{blk}_cat"
+        cout = c1 + c3 + c5 + pp
+        g.add(_aux(cat, "concat", batch, cout, size, size),
+              [b1, b2b, b3b, b4b])
+        prev = cat
+    g.add(_pool("gap", batch, 1024, size, size, stride=size), [prev])
+    g.add(matmul("fc", batch, 1024, 1000), ["gap"])
+    return g
+
+
+# ---------------------------------------------------------------------------
+# ResNet-152
+# ---------------------------------------------------------------------------
+
+def resnet152(batch: int = 1, scale: int = 1,
+              stage_blocks: tuple[int, ...] = (3, 8, 36, 3)) -> DnnGraph:
+    return _resnet(batch, scale, stage_blocks, "resnet152")
+
+
+def resnet50(batch: int = 1, scale: int = 1) -> DnnGraph:
+    return _resnet(batch, scale, (3, 4, 6, 3), "resnet50")
+
+
+def _resnet(batch: int, scale: int, stage_blocks, name: str) -> DnnGraph:
+    g = DnnGraph(name)
+    size = 224 // scale
+    g.add(conv("stem", batch, 3, size, size, 64, HK=7, stride=2))
+    size //= 2
+    g.add(_pool("pool1", batch, 64, size, size), ["stem"])
+    size //= 2
+    prev, cin = "pool1", 64
+    widths = (64, 128, 256, 512)
+    for si, (blocks, w) in enumerate(zip(stage_blocks, widths)):
+        cout = w * 4
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            pfx = f"s{si}b{bi}"
+            g.add(conv(f"{pfx}_c1", batch, cin, size, size, w, HK=1,
+                       stride=stride), [prev])
+            nsize = size // stride
+            g.add(conv(f"{pfx}_c2", batch, w, nsize, nsize, w, HK=3),
+                  [f"{pfx}_c1"])
+            g.add(conv(f"{pfx}_c3", batch, w, nsize, nsize, cout, HK=1),
+                  [f"{pfx}_c2"])
+            if cin != cout or stride > 1:
+                g.add(conv(f"{pfx}_sc", batch, cin, size, size, cout, HK=1,
+                           stride=stride), [prev])
+                sc = f"{pfx}_sc"
+            else:
+                sc = prev
+            g.add(_aux(f"{pfx}_add", "add", batch, cout, nsize, nsize),
+                  [f"{pfx}_c3", sc])
+            prev, cin, size = f"{pfx}_add", cout, nsize
+    g.add(_pool("gap", batch, cin, size, size, stride=size), [prev])
+    g.add(matmul("fc", batch, cin, 1000), ["gap"])
+    return g
+
+
+# ---------------------------------------------------------------------------
+# DarkNet-53 (YOLOv3 backbone)
+# ---------------------------------------------------------------------------
+
+def darknet53(batch: int = 1, scale: int = 1) -> DnnGraph:
+    g = DnnGraph("darknet53")
+    size = 256 // scale
+    g.add(conv("c0", batch, 3, size, size, 32, HK=3))
+    prev, cin = "c0", 32
+    stages = [(64, 1), (128, 2), (256, 8), (512, 8), (1024, 4)]
+    for si, (cout, reps) in enumerate(stages):
+        g.add(conv(f"d{si}", batch, cin, size, size, cout, HK=3, stride=2),
+              [prev])
+        size //= 2
+        prev, cin = f"d{si}", cout
+        half = cout // 2
+        for r in range(reps):
+            pfx = f"s{si}r{r}"
+            g.add(conv(f"{pfx}_a", batch, cout, size, size, half, HK=1),
+                  [prev])
+            g.add(conv(f"{pfx}_b", batch, half, size, size, cout, HK=3),
+                  [f"{pfx}_a"])
+            g.add(_aux(f"{pfx}_add", "add", batch, cout, size, size),
+                  [f"{pfx}_b", prev])
+            prev = f"{pfx}_add"
+    g.add(_pool("gap", batch, cin, size, size, stride=size), [prev])
+    g.add(matmul("fc", batch, cin, 1000), ["gap"])
+    return g
+
+
+# ---------------------------------------------------------------------------
+# BERT-Base (12 layers, 12 heads) — heads as parallel branches
+# ---------------------------------------------------------------------------
+
+def bert_base(batch: int = 1, seq: int = 128, n_layers: int = 12,
+              d_model: int = 768, n_heads: int = 12,
+              d_ff: int | None = None) -> DnnGraph:
+    g = DnnGraph("bert_base" if n_layers == 12 else
+                 f"bert_{n_layers}l")
+    d_ff = d_ff or 4 * d_model
+    d_head = d_model // n_heads
+    tok = batch * seq
+    g.add(_aux("embed", "input", tok, d_model, 1, 1))
+    prev = "embed"
+    for li in range(n_layers):
+        pfx = f"l{li}"
+        head_outs = []
+        for h in range(n_heads):
+            hp = f"{pfx}h{h}"
+            g.add(matmul(f"{hp}_q", tok, d_model, d_head), [prev])
+            g.add(matmul(f"{hp}_k", tok, d_model, d_head), [prev])
+            g.add(matmul(f"{hp}_v", tok, d_model, d_head), [prev])
+            # scores: (B*seq, d_head) x (d_head, seq) per sample
+            g.add(matmul(f"{hp}_qk", tok, d_head, seq),
+                  [f"{hp}_q", f"{hp}_k"])
+            g.add(_aux(f"{hp}_sm", "softmax", tok, seq, 1, 1), [f"{hp}_qk"])
+            g.add(matmul(f"{hp}_av", tok, seq, d_head),
+                  [f"{hp}_sm", f"{hp}_v"])
+            head_outs.append(f"{hp}_av")
+        g.add(_aux(f"{pfx}_cat", "concat", tok, d_model, 1, 1), head_outs)
+        g.add(matmul(f"{pfx}_proj", tok, d_model, d_model), [f"{pfx}_cat"])
+        g.add(_aux(f"{pfx}_ln1", "norm", tok, d_model, 1, 1), [f"{pfx}_proj"])
+        g.add(matmul(f"{pfx}_ff1", tok, d_model, d_ff), [f"{pfx}_ln1"])
+        g.add(matmul(f"{pfx}_ff2", tok, d_ff, d_model), [f"{pfx}_ff1"])
+        g.add(_aux(f"{pfx}_ln2", "norm", tok, d_model, 1, 1), [f"{pfx}_ff2"])
+        prev = f"{pfx}_ln2"
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Generic decoder transformer / MoE export for the assigned architectures
+# ---------------------------------------------------------------------------
+
+def transformer_graph(name: str, *, n_layers: int, d_model: int,
+                      n_heads: int, n_kv_heads: int, d_ff: int,
+                      vocab: int, seq: int = 512, batch: int = 1,
+                      n_experts: int = 0, top_k: int = 0,
+                      attention_free: bool = False,
+                      layers_limit: int | None = 2) -> DnnGraph:
+    """Decoder block stack in the conv representation (Sec. II-B).
+
+    ``layers_limit`` keeps the PIM DSE tractable: the graph holds
+    ``min(n_layers, layers_limit)`` representative blocks plus the LM head;
+    reported totals can be scaled by ``n_layers / layers_limit``.  MoE
+    experts become parallel branches with the expected per-expert token load
+    (``tokens * top_k / n_experts``), exercising the paper's multi-branch SM
+    machinery the same way BERT's heads do.
+    """
+    g = DnnGraph(name)
+    tok = batch * seq
+    d_head = d_model // n_heads
+    kv_dim = n_kv_heads * d_head
+    g.add(_aux("embed", "input", tok, d_model, 1, 1))
+    prev = "embed"
+    blocks = min(n_layers, layers_limit or n_layers)
+    for li in range(blocks):
+        pfx = f"l{li}"
+        if not attention_free:
+            g.add(matmul(f"{pfx}_q", tok, d_model, d_model), [prev])
+            g.add(matmul(f"{pfx}_k", tok, d_model, kv_dim), [prev])
+            g.add(matmul(f"{pfx}_v", tok, d_model, kv_dim), [prev])
+            g.add(matmul(f"{pfx}_qk", tok, d_head, seq * n_heads // 8),
+                  [f"{pfx}_q", f"{pfx}_k"])
+            g.add(_aux(f"{pfx}_sm", "softmax", tok, seq, 1, 1), [f"{pfx}_qk"])
+            g.add(matmul(f"{pfx}_av", tok, seq * n_heads // 8, d_head),
+                  [f"{pfx}_sm", f"{pfx}_v"])
+            g.add(matmul(f"{pfx}_proj", tok, d_model, d_model), [f"{pfx}_av"])
+            attn_out = f"{pfx}_proj"
+        else:
+            # SSM-style token mixer: projections only (scan is auxiliary)
+            g.add(matmul(f"{pfx}_rg_in", tok, d_model, 2 * d_model), [prev])
+            g.add(_aux(f"{pfx}_scan", "act", tok, d_model, 1, 1),
+                  [f"{pfx}_rg_in"])
+            g.add(matmul(f"{pfx}_rg_out", tok, d_model, d_model),
+                  [f"{pfx}_scan"])
+            attn_out = f"{pfx}_rg_out"
+        g.add(_aux(f"{pfx}_ln", "norm", tok, d_model, 1, 1), [attn_out])
+        if n_experts > 1:
+            outs = []
+            etok = max(1, tok * top_k // n_experts)
+            for e in range(n_experts):
+                g.add(matmul(f"{pfx}e{e}_up", etok, d_model, d_ff),
+                      [f"{pfx}_ln"])
+                g.add(matmul(f"{pfx}e{e}_dn", etok, d_ff, d_model),
+                      [f"{pfx}e{e}_up"])
+                outs.append(f"{pfx}e{e}_dn")
+            g.add(_aux(f"{pfx}_moe_cat", "concat", tok, d_model, 1, 1), outs)
+            prev = f"{pfx}_moe_cat"
+        else:
+            g.add(matmul(f"{pfx}_ff1", tok, d_model, d_ff), [f"{pfx}_ln"])
+            g.add(matmul(f"{pfx}_ff2", tok, d_ff, d_model), [f"{pfx}_ff1"])
+            g.add(_aux(f"{pfx}_ln2", "norm", tok, d_model, 1, 1),
+                  [f"{pfx}_ff2"])
+            prev = f"{pfx}_ln2"
+    g.add(matmul("lm_head", tok, d_model, vocab), [prev])
+    return g
+
+
+# registry used by benchmarks / tests
+PAPER_WORKLOADS = {
+    "googlenet": googlenet,
+    "vgg16": vgg16,
+    "resnet152": resnet152,
+    "darknet53": darknet53,
+    "bert_base": bert_base,
+}
+
+
+def paper_workloads(batch: int = 1, *, fast: bool = False) -> list[DnnGraph]:
+    """The five evaluation DNNs; ``fast`` shrinks them for unit tests."""
+    if fast:
+        return [
+            googlenet(batch, scale=4),
+            vgg16(batch, scale=4),
+            resnet50(batch, scale=4),
+            darknet53(batch, scale=4),
+            bert_base(batch, seq=64, n_layers=2, n_heads=4),
+        ]
+    return [
+        googlenet(batch),
+        vgg16(batch),
+        resnet152(batch),
+        darknet53(batch),
+        bert_base(batch),
+    ]

@@ -1,0 +1,120 @@
+"""Fault tolerance: restartable training, straggler detection, elasticity.
+
+Designed for the 1000-node regime where *something* is always failing:
+
+* :class:`RestartableLoop` — a crash-safe state machine around the train
+  step: checkpoint every N steps (async, atomic via ckpt.CheckpointManager),
+  preemption-signal hook that forces an emergency checkpoint, and a
+  ``resume()`` that restores bit-exact state (data pipeline included —
+  batches are a pure function of the step index, see data.pipeline).
+* :class:`StragglerMonitor` — per-step wall-time ring buffer; flags steps
+  slower than ``threshold x`` the running median.  On real multi-host
+  topologies the flagged host's data shard is reassigned (hook provided);
+  in tests the reassignment is simulated.
+* :class:`ElasticPlan` — recompute (host_count, per-host batch) after a
+  topology change so the global batch stays constant; combined with the
+  elastic checkpoint restore this implements shrink/grow without changing
+  the optimization trajectory.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+from ..ckpt.checkpoint import CheckpointManager
+
+
+@dataclass
+class StragglerMonitor:
+    window: int = 32
+    threshold: float = 2.0
+    times: deque = field(default_factory=lambda: deque(maxlen=64))
+    flagged: list = field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.times.append(seconds)
+        if len(self.times) < 8:
+            return False
+        med = statistics.median(self.times)
+        if seconds > self.threshold * med:
+            self.flagged.append((step, seconds, med))
+            return True
+        return False
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    global_batch: int
+    host_count: int
+
+    @property
+    def host_batch(self) -> int:
+        return self.global_batch // self.host_count
+
+    def rescale(self, new_host_count: int) -> "ElasticPlan":
+        """Shrink/grow the host set; the global batch (and therefore the
+        optimization trajectory) is preserved as long as it divides."""
+        if self.global_batch % new_host_count:
+            raise ValueError(
+                f"global batch {self.global_batch} not divisible by "
+                f"{new_host_count} hosts")
+        return ElasticPlan(self.global_batch, new_host_count)
+
+
+class Preempted(Exception):
+    pass
+
+
+class RestartableLoop:
+    """Checkpoint-every-N crash-safe training driver."""
+
+    def __init__(self, ckpt_dir, *, ckpt_every: int = 50, keep: int = 3,
+                 monitor: StragglerMonitor | None = None,
+                 on_straggler: Callable[[int], None] | None = None):
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.ckpt_every = ckpt_every
+        self.monitor = monitor or StragglerMonitor()
+        self.on_straggler = on_straggler
+        self._preempt = False
+
+    def signal_preemption(self) -> None:
+        """SIGTERM-style hook: finish the current step, checkpoint, stop."""
+        self._preempt = True
+
+    def resume_step(self) -> int:
+        return (self.mgr.latest_step() or 0)
+
+    def run(self, state, step_fn, batch_fn, *, start_step: int,
+            num_steps: int, state_template=None):
+        """Run ``num_steps`` from ``start_step``; returns (state, metrics).
+
+        ``step_fn(state, batch) -> (state, metrics)``;
+        ``batch_fn(step) -> batch`` must be stateless (pure in step).
+        Raises :class:`Preempted` after the emergency checkpoint when
+        ``signal_preemption`` was called.
+        """
+        last_metrics = None
+        try:
+            for step in range(start_step, start_step + num_steps):
+                t0 = time.time()
+                state, last_metrics = step_fn(state, batch_fn(step))
+                dt = time.time() - t0
+                if self.monitor.record(step, dt) and self.on_straggler:
+                    self.on_straggler(step)
+                done = step + 1
+                if done % self.ckpt_every == 0:
+                    self.mgr.save_async(done, state)
+                if self._preempt:
+                    self.mgr.wait()
+                    self.mgr.save(done, state)   # emergency checkpoint
+                    raise Preempted(f"preempted at step {done}")
+        finally:
+            # a crash must never abandon an in-flight async checkpoint
+            self.mgr.wait()
+        self.mgr.save(start_step + num_steps, state)
+        return state, last_metrics

@@ -1,0 +1,143 @@
+"""Flash attention for TPU in Pallas: causal + sliding-window + GQA.
+
+Online-softmax blocked attention (Dao et al., adapted to the TPU memory
+hierarchy): the grid is ``(batch, q_head, q_blocks, k_blocks)`` with the
+k-block axis innermost — TPU grids execute sequentially over the trailing
+axis, so the running max/denominator/accumulator live in VMEM scratch and
+carry across k-blocks (the canonical TPU formulation; there is no shared
+memory or warp shuffling to port — HW-adaptation note in DESIGN.md).
+
+Block shapes are MXU-aligned (multiples of 128 on the q/k dims when the
+sequence allows; head_dim is the lane dim).  K/V BlockSpec index maps fold
+grouped-query attention (q head h reads kv head ``h // group``), so no
+repeated-KV materialization happens in HBM.
+
+Fully-masked k-blocks (beyond the causal frontier or outside the sliding
+window) are skipped with ``@pl.when`` — for long sequences causal skipping
+halves the work, and a 2048-window at 32k context touches 1/16 of the
+blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_k: int, causal: bool,
+                 window: int, q_offset: int, seq_k: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    n_kb = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this block's queries/keys
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0) \
+        + q_offset
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+
+    # block-level skip: any overlap with the visible band?
+    q_lo = qb * block_q + q_offset
+    q_hi = q_lo + block_q - 1
+    k_lo = kb * block_k
+    visible = jnp.asarray(True)
+    if causal:
+        visible = jnp.logical_and(visible, k_lo <= q_hi)
+    if window:
+        k_hi = k_lo + block_k - 1
+        visible = jnp.logical_and(visible, k_hi > q_lo - window)
+
+    @pl.when(visible)
+    def _block():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        # ragged tail blocks are padded with undefined values: a NaN in a
+        # padded V row would survive `0 * NaN` in the p@v matmul
+        valid_k = (kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0)) < seq_k
+        v = jnp.where(valid_k, v, 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] \
+            + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q (B,S,H,dh); k/v (B,T,Hkv,dh) -> (B,S,H,dh).
+
+    ``interpret=True`` runs the kernel body in Python on CPU (validation
+    path in this container); on TPU pass ``interpret=False``.
+    """
+    b, s, h, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    n_qb = pl.cdiv(s, block_q)
+    n_kb = pl.cdiv(t, block_k)
+    scale = 1.0 / math.sqrt(dh)
+
+    grid = (b, h, n_qb, n_kb)
+    q_spec = pl.BlockSpec((1, block_q, 1, dh),
+                          lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+    kv_spec = pl.BlockSpec((1, block_k, 1, dh),
+                           lambda bi, hi, qi, ki: (bi, ki, hi // group, 0))
+    o_spec = pl.BlockSpec((1, block_q, 1, dh),
+                          lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, q_offset=q_offset, seq_k=t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # softmax denominator
+            pltpu.VMEM((block_q, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

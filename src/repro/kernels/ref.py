@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the direct mathematical definition with no blocking or
+numerically clever tricks beyond f32 softmax — the kernels must match these
+within bf16/f32 tolerance across the shape/dtype sweeps in
+tests/test_kernels_*.py.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset: int = 0):
+    """(B,S,H,dh) x (B,T,Hkv,dh) GQA attention; f32 softmax."""
+    b, s, h, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    qi = jnp.arange(s)[:, None] + q_offset
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window:
+        mask = mask & (kj > qi - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", p, v)
+    return out.reshape(b, s, h, dh)
+
+
+def rglru(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + x_t over axis 1.
+
+    a, x: (B, S, D) f32; returns (B, S, D) f32.
+    """
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    a_t = jnp.moveaxis(a, 1, 0)
+    x_t = jnp.moveaxis(x, 1, 0)
+    h0 = jnp.zeros_like(x[:, 0])
+    _, hs = jax.lax.scan(step, h0, (a_t, x_t))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def wkv6(r, k, v, w, u):
+    """RWKV6 recurrence (see nn.rwkv6.wkv6_scan); all (B,S,H,dh), u (H,dh)."""
+    b, s, h, dh = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         state + uf[None, :, :, None] * kv)
+        return wt[..., None] * state + kv, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(step, jnp.zeros((b, h, dh, dh), jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1)

@@ -1,0 +1,63 @@
+"""RG-LRU diagonal linear recurrence in Pallas.
+
+Computes ``h_t = a_t * h_{t-1} + x_t`` over the time axis.  The recurrence
+is elementwise in the channel dim, so the kernel tiles ``(batch, channel)``
+across the grid's parallel axes and walks sequence chunks on the innermost
+(sequential) axis, carrying ``h`` in VMEM scratch — HBM traffic is exactly
+one read of (a, x) and one write of h, the streaming minimum.
+
+Channel tiles are lane-aligned (multiples of 128 when the width allows).
+The time loop inside a chunk is a ``fori_loop`` over VREG-resident rows —
+on TPU this is the idiomatic replacement for the GPU block-parallel-scan
+formulation (HW-adaptation note in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, x_ref, o_ref, h_ref, *, block_s: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)      # (block_s, block_d)
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + x[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_ref[...])
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d",
+                                             "interpret"))
+def rglru_scan(a, x, *, block_s: int = 256, block_d: int = 512,
+               interpret: bool = True):
+    """a, x: (B, S, D) -> h (B, S, D) with h_t = a_t*h_{t-1} + x_t."""
+    b, s, d = a.shape
+    block_s = min(block_s, s)
+    block_d = min(block_d, d)
+    grid = (b, pl.cdiv(d, block_d), pl.cdiv(s, block_s))
+    spec = pl.BlockSpec((1, block_s, block_d),
+                        lambda bi, di, si: (bi, si, di))
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

@@ -1,0 +1,62 @@
+"""RWKV6 WKV recurrence in Pallas (data-dependent per-channel decay).
+
+State is one (dh x dh) f32 matrix per (batch, head); the grid tiles
+``(batch, head)`` in parallel and walks time chunks sequentially, carrying
+the state in VMEM scratch.  Inside a chunk each timestep performs rank-1
+state updates (outer product k_t v_t^T) and a row-gather-free readout
+``r_t^T (S + u k_t v_t^T)`` — all VREG-sized ops with dh = 64 (the RWKV6
+head size), so the working set is 16 KiB/head and the kernel is purely
+HBM-streaming in (r,k,v,w) and out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                block_s: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)   # (block_s, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)          # (dh,)
+
+    def step(t, state):
+        kv = k[t][:, None] * v[t][None, :]       # (dh, dh) rank-1
+        out = jnp.sum(r[t][:, None] * (state + u[:, None] * kv), axis=0)
+        o_ref[0, t, 0, :] = out.astype(o_ref.dtype)
+        return w[t][:, None] * state + kv
+
+    s_ref[...] = jax.lax.fori_loop(0, block_s, step, s_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def rwkv6_wkv(r, k, v, w, u, *, block_s: int = 128, interpret: bool = True):
+    """r,k,v,w: (B, S, H, dh); u: (H, dh) -> (B, S, H, dh)."""
+    b, s, h, dh = r.shape
+    block_s = min(block_s, s)
+    grid = (b, h, pl.cdiv(s, block_s))
+    spec = pl.BlockSpec((1, block_s, 1, dh),
+                        lambda bi, hi, si: (bi, si, hi, 0))
+    u_spec = pl.BlockSpec((1, dh), lambda bi, hi, si: (hi, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, u_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(r.shape, r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

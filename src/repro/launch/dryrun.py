@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the production 16x16 / 2x16x16
+# meshes out of 512 host placeholder devices; smoke tests and benches see
+# the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the real step function (train_step /
+prefill / serve_step) against ShapeDtypeStruct inputs with production
+shardings, proving the distribution config is coherent:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+
+Results (memory, FLOPs, collective schedule, roofline terms) are written to
+``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and summarized into
+EXPERIMENTS.md by ``benchmarks/report.py``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_1_5b \
+        --shape train_4k [--multi-pod] [--fsdp] [--out DIR]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPES, get_config, runnable_cells)
+from repro.distributed import shardings as shd
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.nn import transformer as tfm
+from repro.training.train_loop import TrainConfig, make_train_step
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _train_overrides(cfg, shape):
+    """Per-cell model-config tweaks needed to fit/train at scale."""
+    over = {}
+    if shape.kind == "train":
+        over["remat"] = "block"
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _microbatches(cfg, shape) -> int:
+    # keep per-microbatch activations bounded: ~2 sequences per data shard
+    if shape.kind != "train":
+        return 1
+    per_shard = max(1, shape.global_batch // 16)
+    return max(1, min(per_shard // 2, 16))
+
+
+def _lower_one(cfg, shape, mesh, *, fsdp: bool, tcfg, microbatches: int,
+               tp: bool = True):
+    """Build + lower the cell's step function under the given mesh."""
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        lowered = _build_lowered(cfg, shape, mesh, fsdp=fsdp, tcfg=tcfg,
+                                 microbatches=microbatches, tp=tp)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    return lowered, compiled, t_lower, t_compile
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               fsdp: bool = True, tp: bool = True, cfg=None,
+               tcfg: TrainConfig | None = None,
+               extra_note: str = "", cost_pass: bool = True):
+    """Lower + compile one cell; returns (result dict, compiled)."""
+    shape = SHAPES[shape_name]
+    if cfg is None:
+        cfg = _train_overrides(get_config(arch), shape)
+    # an explicitly-supplied cfg (hillclimb plans) is used verbatim
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mb = _microbatches(cfg, shape) if tcfg is None else tcfg.microbatches
+
+    # production pass: scan-over-layers program (the one that would run)
+    lowered, compiled, t_lower, t_compile = _lower_one(
+        cfg, shape, mesh, fsdp=fsdp, tcfg=tcfg, microbatches=mb, tp=tp)
+    mem = compiled.memory_analysis()
+
+    # cost-fidelity pass: XLA's cost_analysis counts while-loop bodies once
+    # (see nn.transformer._scan), so FLOPs/bytes/collectives are measured on
+    # UNROLLED modules.  Full unroll of 40-128-expert stacks takes tens of
+    # minutes on this CPU, so two shallow unrolled compiles (L1/L2 layers)
+    # are linearly extrapolated per layer — exact for uniform block stacks.
+    if cost_pass:
+        cost, hlo_colls, cost_note = _extrapolated_cost(
+            cfg, shape, mesh, fsdp=fsdp, tcfg=tcfg, tp=tp)
+        extra_note = (extra_note + " " + cost_note).strip()
+    else:
+        cost = compiled.cost_analysis()
+        hlo_colls = roofline.collective_bytes(compiled.as_text())
+
+    bytes_per_dev = _bytes_per_device(mem)
+    terms = roofline.derive_from_parts(
+        arch, shape_name, mesh_name, chips, cost, hlo_colls, cfg, shape,
+        shape.kind, bytes_per_dev, note=extra_note)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "kind": shape.kind, "fsdp": fsdp,
+        "microbatches": mb,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "flops": terms.hlo_flops,
+        "bytes": terms.hlo_bytes,
+        "collectives": terms.coll_breakdown,
+        "roofline": terms.to_json(),
+        "note": extra_note,
+    }
+    return result, compiled
+
+
+def _layer_counts_for_extrapolation(cfg) -> tuple[int, int]:
+    """Two shallow depths aligned to the block period (hybrid: 3)."""
+    period = (cfg.rglru_pattern + 1) if cfg.rglru_pattern else 1
+    l1 = 2 * period
+    l2 = 4 * period
+    return l1, l2
+
+
+def _shallow(cfg, n_layers: int):
+    return dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False)
+
+
+def _measure(cfg, shape, mesh, *, fsdp, tcfg, tp=True):
+    _, compiled, _, _ = _lower_one(cfg, shape, mesh, fsdp=fsdp, tcfg=tcfg,
+                                   microbatches=1, tp=tp)
+    ca = compiled.cost_analysis()
+    colls = roofline.collective_bytes(compiled.as_text())
+    return ({"flops": float(ca.get("flops", 0.0)),
+             "bytes accessed": float(ca.get("bytes accessed", 0.0))},
+            colls)
+
+
+def _extrapolated_cost(cfg, shape, mesh, *, fsdp, tcfg, tp=True):
+    """(cost dict, collective bytes dict, note) with per-layer
+    linear extrapolation from two shallow unrolled compiles."""
+    l1, l2 = _layer_counts_for_extrapolation(cfg)
+    if cfg.n_layers <= l2:
+        cost, colls = _measure(_shallow(cfg, cfg.n_layers), shape, mesh,
+                               fsdp=fsdp, tcfg=tcfg, tp=tp)
+        return cost, colls, "cost: full unroll"
+    c1, k1 = _measure(_shallow(cfg, l1), shape, mesh, fsdp=fsdp, tcfg=tcfg,
+                      tp=tp)
+    c2, k2 = _measure(_shallow(cfg, l2), shape, mesh, fsdp=fsdp, tcfg=tcfg,
+                      tp=tp)
+    scale = (cfg.n_layers - l1) / (l2 - l1)
+    cost = {k: c1[k] + (c2[k] - c1[k]) * scale for k in c1}
+    colls = {k: k1.get(k, 0.0) + (k2.get(k, 0.0) - k1.get(k, 0.0)) * scale
+             for k in set(k1) | set(k2)}
+    return cost, colls, f"cost: unrolled L={l1},{l2} extrapolated"
+
+
+def _build_lowered(cfg, shape, mesh, *, fsdp: bool, tcfg, microbatches: int,
+                   tp: bool = True):
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig(microbatches=microbatches, fsdp=fsdp)
+        tcfg = dataclasses.replace(tcfg, microbatches=microbatches)
+        specs = input_specs(cfg, shape, tcfg)
+        state, batch = specs["state"], specs["batch"]
+        pspec = shd.param_specs(cfg, state.params, mesh, fsdp=tcfg.fsdp,
+                                tp=tp)
+        sspec = type(state)(P(), pspec,
+                            type(state.opt)(P(), pspec, pspec),
+                            None if state.err is None else pspec)
+        bspec = shd.batch_specs(cfg, mesh, batch)
+        step = make_train_step(
+            cfg, tcfg, param_specs=pspec if tcfg.grad_sharding else None)
+        jitted = jax.jit(step,
+                         in_shardings=(_ns(mesh, sspec), _ns(mesh, bspec)),
+                         out_shardings=(_ns(mesh, sspec), None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state, batch)
+    elif shape.kind == "prefill":
+        specs = input_specs(cfg, shape)
+        params, batch = specs["params"], specs["batch"]
+        pspec = shd.param_specs(cfg, params, mesh, fsdp=False, tp=tp)
+        bspec = shd.batch_specs(cfg, mesh, batch)
+        cache_shape = jax.eval_shape(partial(tfm.prefill, cfg), params, batch)
+        cspec = shd.cache_specs(cfg, mesh, cache_shape[1])
+        jitted = jax.jit(partial(tfm.prefill, cfg),
+                         in_shardings=(_ns(mesh, pspec), _ns(mesh, bspec)),
+                         out_shardings=(None, _ns(mesh, cspec)))
+        lowered = jitted.lower(params, batch)
+    else:  # decode
+        specs = input_specs(cfg, shape)
+        params, tokens, pos, cache = (specs["params"], specs["tokens"],
+                                      specs["pos"], specs["cache"])
+        pspec = shd.param_specs(cfg, params, mesh, fsdp=False, tp=tp)
+        cspec = shd.cache_specs(cfg, mesh, cache)
+        tspec = shd.batch_specs(cfg, mesh, tokens)
+        jitted = jax.jit(partial(tfm.decode_step, cfg),
+                         in_shardings=(_ns(mesh, pspec), _ns(mesh, tspec),
+                                       None, _ns(mesh, cspec)),
+                         out_shardings=(None, _ns(mesh, cspec)),
+                         donate_argnums=(3,))
+        lowered = jitted.lower(params, tokens, pos, cache)
+    return lowered
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _bytes_per_device(mem) -> float:
+    try:
+        return float(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    except Exception:
+        return 0.0
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             fsdp: bool = True) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    try:
+        result, compiled = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                      fsdp=fsdp)
+        result["status"] = "ok"
+        print(f"[dryrun] {tag}: OK compile={result['compile_s']}s "
+              f"flops={result['flops']:.3e} "
+              f"coll={result['roofline']['coll_bytes']:.3e}B "
+              f"bottleneck={result['roofline']['bottleneck']}")
+    except Exception as e:  # failures here are bugs in the system
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "fail", "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {e}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for a, s in runnable_cells():
+            cells.append((a, s, False))
+            cells.append((a, s, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    n_ok = 0
+    for arch, shape_name, mp in cells:
+        r = run_cell(arch, shape_name, mp, args.out, fsdp=not args.no_fsdp)
+        n_ok += r.get("status") == "ok"
+    print(f"[dryrun] {n_ok}/{len(cells)} cells OK")
+    if n_ok < len(cells):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

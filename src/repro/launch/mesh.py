@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then calls it.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the ``pod``
+axis carries data parallelism across pods (gradient all-reduce crosses the
+inter-pod links once per step).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_host_mesh(model_axis: int | None = None):
+    """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    m = model_axis or 1
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a == "model")

@@ -1,0 +1,208 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes accessed; collective bytes are
+parsed out of the compiled HLO text (operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).  Hardware
+constants: TPU v5e-class, 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format: [num_groups, group_size]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int = 2) -> dict[str, float]:
+    """Per-chip ICI link bytes for every collective in the compiled HLO.
+
+    The SPMD-partitioned module prints per-device buffer types but not
+    operand types, so bytes are derived from the *result* type(s) with a
+    ring-algorithm model over the replica group size g:
+
+        all-gather         (g-1)/g * out      (out = gathered buffer)
+        all-reduce         2*(g-1)/g * out    (reduce-scatter + all-gather)
+        reduce-scatter     (g-1)   * out      (input = g * out)
+        all-to-all         (g-1)/g * out
+        collective-permute out
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["total"] = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s*([^=]*?)\b(" + "|".join(_COLLECTIVES)
+                      + r")(-start|-done)?\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        if m.group(3) == "-done":
+            continue  # -done pairs with -start; count once
+        result_types = m.group(1)
+        shapes = _SHAPE_RE.findall(result_types)
+        out_bytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        g = _group_size(s, default_group)
+        ring = (g - 1) / g
+        nbytes = {
+            "all-gather": ring * out_bytes,
+            "all-reduce": 2 * ring * out_bytes,
+            "reduce-scatter": (g - 1) * out_bytes,
+            "all-to-all": ring * out_bytes,
+            "collective-permute": float(out_bytes),
+        }[kind]
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs
+    bytes_per_device: float
+    coll_breakdown: dict
+    note: str = ""
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline-limited step time."""
+        if self.step_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.step_s
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["step_s"] = self.step_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def model_flops_for(cfg, shape, *, kind: str) -> float:
+    """6*N*D (dense train) / 2*N*D (fwd-only); MoE uses active params."""
+    n = cfg.active_param_count
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # one token per sequence
+    return 2.0 * n * tokens
+
+
+def _rwkv_scan_correction(cfg, shape, kind: str) -> float:
+    """Analytic FLOPs for the wkv6 sequential scan (B,S,H,dh,dh recurrence).
+
+    The scan over time is an HLO while loop whose body XLA's cost model
+    counts once; the correction adds the remaining (S-1)/S of the work:
+    ~6 flops per (token, head, dh, dh) state element per layer.
+    """
+    if not getattr(cfg, "attn_free", False) or kind == "decode":
+        return 0.0
+    tokens = shape.global_batch * shape.seq_len
+    per_layer = 6.0 * tokens * cfg.n_heads * cfg.d_head * cfg.d_head
+    total = per_layer * cfg.n_layers
+    if kind == "train":
+        total *= 3.0  # fwd + bwd recurrence
+    return total * (shape.seq_len - 1) / shape.seq_len
+
+
+def derive(arch: str, shape_name: str, mesh_name: str, chips: int,
+           cost: dict, hlo_text: str, cfg, shape, kind: str,
+           bytes_per_device: float, note: str = "") -> RooflineTerms:
+    return derive_from_parts(arch, shape_name, mesh_name, chips, cost,
+                             collective_bytes(hlo_text), cfg, shape, kind,
+                             bytes_per_device, note)
+
+
+def derive_from_parts(arch: str, shape_name: str, mesh_name: str, chips: int,
+                      cost: dict, coll: dict, cfg, shape, kind: str,
+                      bytes_per_device: float,
+                      note: str = "") -> RooflineTerms:
+    # cost_analysis runs on the SPMD-partitioned module: per-DEVICE numbers.
+    flops_dev = float(cost.get("flops", 0.0))
+    # exact key only: per-operand keys ('bytes accessed0{}', ...) are already
+    # folded into the total and would double-count
+    nbytes_dev = float(cost.get("bytes accessed", 0.0))
+    corr = _rwkv_scan_correction(cfg, shape, kind)
+    if corr:
+        note = (note + " " if note else "") + \
+            f"+{corr:.2e} analytic wkv-scan flops (while-body counted once)"
+    flops = flops_dev * chips + corr           # global
+    nbytes = nbytes_dev * chips
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = nbytes / (chips * HBM_BW)
+    collective_s = coll["total"] / LINK_BW     # per-chip bytes over its link
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_for(cfg, shape, kind=kind)
+    return RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes,
+        coll_bytes=coll["total"] * chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf,
+        useful_ratio=mf / flops if flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        coll_breakdown={k: v for k, v in coll.items() if k != "total"},
+        note=note)

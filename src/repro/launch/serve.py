@@ -1,0 +1,39 @@
+"""Serving launcher: batched requests against a (reduced) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b \
+        --slots 4 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.nn import transformer as T
+from repro.serving.engine import Engine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2_0_5b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
+                 seed=args.seed)
+    probe = eng.throughput_probe(prompt_len=args.prompt_len,
+                                 new_tokens=args.new_tokens)
+    print(f"[serve:{args.arch}] {probe['tokens']} tokens in "
+          f"{probe['seconds']:.2f}s -> {probe['tok_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

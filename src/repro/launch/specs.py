@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation happens here: parameters/optimizer state come from
+``jax.eval_shape`` over the init closures, batches are hand-built structs.
+``[audio]``/``[vlm]`` configs get precomputed frame/patch embeddings from the
+stub frontend, as the assignment prescribes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..nn import transformer as tfm
+from ..training.train_loop import TrainConfig, init_state
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs_for(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Train/prefill batch structure for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio":
+        batch = {"embeds": sds((b, s, cfg.d_model), cfg.dtype)}
+        if shape.kind == "train":
+            batch["targets"] = sds((b, s), jnp.int32)
+        return batch
+    if cfg.frontend == "vision":
+        fs = min(cfg.frontend_seq, s // 2)
+        batch = {
+            "tokens": sds((b, s - fs), jnp.int32),
+            "patch_embeds": sds((b, fs, cfg.d_model), cfg.dtype),
+        }
+        if shape.kind == "train":
+            batch["targets"] = sds((b, s - fs), jnp.int32)
+        return batch
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        batch["targets"] = sds((b, s), jnp.int32)
+    return batch
+
+
+def decode_specs_for(cfg: ArchConfig, shape: ShapeSpec):
+    """(tokens, pos, cache) structure for a serve_step cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(partial(tfm.init_cache, cfg, b, s))
+    if cfg.frontend == "audio":
+        tokens = sds((b, cfg.d_model), cfg.dtype)  # frame embedding stub
+    else:
+        tokens = sds((b,), jnp.int32)
+    return tokens, sds((), jnp.int32), cache
+
+
+def state_specs_for(cfg: ArchConfig, tcfg: TrainConfig):
+    """TrainState structure via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_state(cfg, tcfg, jax.random.PRNGKey(0)))
+
+
+def param_specs_for(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                tcfg: TrainConfig | None = None) -> dict:
+    """Everything the lowered step consumes, as ShapeDtypeStructs."""
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        return {"state": state_specs_for(cfg, tcfg),
+                "batch": batch_specs_for(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": param_specs_for(cfg),
+                "batch": batch_specs_for(cfg, shape)}
+    tokens, pos, cache = decode_specs_for(cfg, shape)
+    return {"params": param_specs_for(cfg), "tokens": tokens,
+            "pos": pos, "cache": cache}

@@ -1,0 +1,160 @@
+"""Attention: GQA / MHA, causal + sliding-window, prefill + decode paths.
+
+Two implementations behind ``cfg.attention_impl``:
+
+* ``"xla"`` — pure jnp einsum/softmax.  Used by the dry-run/roofline so the
+  compiled HLO reflects what XLA:TPU would schedule.
+* ``"pallas"`` — the flash-attention kernel in ``repro.kernels`` (TPU target,
+  validated with interpret=True on CPU).  Numerically equivalent; swapped in
+  for real-hardware runs and exercised by the kernel tests.
+
+Shapes: q ``(B, S, H, dh)``; k/v ``(B, T, Hkv, dh)`` with ``H % Hkv == 0``.
+Softmax in f32.  ``window = 0`` means full causal.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _causal_mask(s: int, t: int, q_offset, window: int) -> jnp.ndarray:
+    """(S, T) boolean mask; query i attends key j iff j <= i (+window)."""
+    qi = jnp.arange(s)[:, None] + q_offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m
+
+
+def attend_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+               window: int = 0, q_offset=0,
+               kv_positions: jnp.ndarray | None = None,
+               q_positions: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Grouped-query attention, causal (+ optional sliding window).
+
+    ``kv_positions``/``q_positions`` override the iota mask for ring-buffer
+    decode caches (entries with position < 0 are invalid).
+    """
+    b, s, h, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dh)
+    if kv_positions is not None:
+        qp = q_positions[:, :, None] if q_positions is not None else None
+        kp = kv_positions[:, None, :]
+        m = (kp >= 0) & (kp <= qp)
+        if window:
+            m = m & (kp > qp - window)
+        mask = m[:, None, None, :, :]               # (b,1,1,s,t)
+    else:
+        mask = _causal_mask(s, t, q_offset, window)[None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def attend_xla_chunked(q, k, v, *, window: int = 0, q_offset=0,
+                       chunk: int = 2048) -> jnp.ndarray:
+    """Online-softmax attention over K/V chunks — the flash pattern at the
+    XLA level (never materializes the full (S, T) scores buffer).
+
+    The chunk loop is a Python unroll, so the dry-run's cost analysis sees
+    every block; peak scores memory drops T/chunk-fold.  This is the
+    beyond-paper §Perf candidate for memory-bound prefill cells; on TPU the
+    Pallas kernel (kernels/flash_attention.py) is the native equivalent.
+    """
+    b, s, h, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    qi = jnp.arange(s)[:, None] + q_offset
+    m = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, hkv, g, s), jnp.float32)
+    acc = jnp.zeros((b, s, hkv, g, dh), jnp.float32)
+    for start in range(0, t, chunk):
+        kc = k[:, start:start + chunk]
+        vc = v[:, start:start + chunk]
+        cc = kc.shape[1]
+        scores = jnp.einsum("bsngd,btnd->bngst", qg, kc,
+                            preferred_element_type=jnp.float32)
+        scores = scores / math.sqrt(dh)
+        kj = start + jnp.arange(cc)[None, :]
+        mask = kj <= qi
+        if window:
+            mask = mask & (kj > qi - window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * jnp.moveaxis(alpha, -1, 1)[..., None] \
+            + jnp.einsum("bngst,btnd->bsngd", p, vc.astype(jnp.float32))
+        m = m_new
+    denom = jnp.moveaxis(jnp.maximum(l, 1e-20), -1, 1)[..., None]
+    return (acc / denom).astype(q.dtype).reshape(b, s, h, dh)
+
+
+def attend(q, k, v, *, impl: str = "xla", window: int = 0, q_offset=0,
+           kv_positions=None, q_positions=None):
+    if impl == "pallas" and kv_positions is None:
+        from ..kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=True, window=window,
+                                    q_offset=q_offset)
+    if impl == "xla_chunked" and kv_positions is None and q.shape[1] > 2048:
+        return attend_xla_chunked(q, k, v, window=window, q_offset=q_offset)
+    return attend_xla(q, k, v, window=window, q_offset=q_offset,
+                      kv_positions=kv_positions, q_positions=q_positions)
+
+
+# -- parameter init -------------------------------------------------------------
+
+
+def init_attention(key, cfg, n_layers: int) -> dict:
+    from .layers import dense_init
+    d, dh = cfg.d_model, cfg.d_head
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (n_layers, d, h * dh), dtype),
+        "wk": dense_init(ks[1], d, (n_layers, d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], d, (n_layers, d, hkv * dh), dtype),
+        "wo": dense_init(ks[3], h * dh, (n_layers, h * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, h * dh), dtype)
+        p["bk"] = jnp.zeros((n_layers, hkv * dh), dtype)
+        p["bv"] = jnp.zeros((n_layers, hkv * dh), dtype)
+    return p
+
+
+def qkv_project(x: jnp.ndarray, lp: dict, cfg) -> tuple:
+    """x: (B, S, D) -> q (B,S,H,dh), k/v (B,S,Hkv,dh) for ONE layer's params."""
+    b, s, _ = x.shape
+    dh = cfg.d_head
+    q = jnp.einsum("bsd,de->bse", x, lp["wq"])
+    k = jnp.einsum("bsd,de->bse", x, lp["wk"])
+    v = jnp.einsum("bsd,de->bse", x, lp["wv"])
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    from ..distributed.shardings import attn_constraints
+    q = q.reshape(b, s, cfg.n_heads, dh)
+    k = k.reshape(b, s, cfg.n_kv_heads, dh)
+    v = v.reshape(b, s, cfg.n_kv_heads, dh)
+    # Without an explicit layout GSPMD may shard the head_dim contraction,
+    # turning QK^T into a partial-sum + all-reduce of the full scores tensor
+    # (~TB/chip at 4k seq); see distributed.shardings.attn_constraints.
+    return attn_constraints(q, k, v)

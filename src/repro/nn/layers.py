@@ -1,0 +1,123 @@
+"""Shared NN building blocks: norms, RoPE, embeddings, MLPs, init helpers.
+
+Conventions (followed by every model in the zoo):
+
+* parameters are plain dict pytrees; per-layer tensors are **stacked** along a
+  leading ``L`` axis so the block stack runs under ``jax.lax.scan`` (keeps the
+  dry-run HLO small enough to compile 64 cells on one CPU core);
+* compute dtype is the config dtype (bf16 by default) with f32 for softmax,
+  norms, and loss;
+* every function is pure; sharding comes from pjit in/out specs plus GSPMD
+  propagation (see distributed/shardings.py for the logical rules).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def truncated_normal(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, fan_in: int, shape, dtype) -> jnp.ndarray:
+    return truncated_normal(key, shape, 1.0 / math.sqrt(fan_in), dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# -- rotary position embeddings ----------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                              # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# -- embeddings ----------------------------------------------------------------
+
+
+def embed_tokens(embedding: jnp.ndarray, tokens: jnp.ndarray,
+                 scale_by_dim: bool = False) -> jnp.ndarray:
+    out = jnp.take(embedding, tokens, axis=0)
+    if scale_by_dim:
+        out = out * math.sqrt(embedding.shape[-1])
+    return out
+
+
+def logits_from_embedding(x: jnp.ndarray, embedding: jnp.ndarray) -> jnp.ndarray:
+    """Tied head: (..., D) x (V, D)^T — accumulate in f32."""
+    return jnp.einsum("...d,vd->...v", x, embedding,
+                      preferred_element_type=jnp.float32)
+
+
+# -- MLPs ----------------------------------------------------------------------
+
+
+def swiglu(x: jnp.ndarray, w1, w3, w2) -> jnp.ndarray:
+    """SwiGLU FFN: (x@w1 * silu(x@w3)) @ w2 with bf16 compute."""
+    h = jnp.einsum("...d,df->...f", x, w1)
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w3))
+    return jnp.einsum("...f,fd->...d", h * g, w2)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, n_layers: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, d_model, (n_layers, d_model, d_ff), dtype),
+        "w3": dense_init(k2, d_model, (n_layers, d_model, d_ff), dtype),
+        "w2": dense_init(k3, d_ff, (n_layers, d_ff, d_model), dtype),
+    }
+
+
+# -- losses ----------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                          mask: jnp.ndarray | None = None,
+                          z_loss: float = 1e-4) -> jnp.ndarray:
+    """Token-mean CE (+ z-loss), sharding-friendly over the vocab dim.
+
+    logits: (..., V) f32-accumulated; targets: (...,) int32.  The target
+    logit is selected with a fused iota-compare masked sum instead of
+    ``take_along_axis`` — a gather across a model-sharded vocab axis would
+    force an all-gather of the full logits buffer.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    tgt = jnp.sum(jnp.where(vocab_iota == targets[..., None], logits, 0.0),
+                  axis=-1)
+    ce = lse - tgt
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(ce)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)

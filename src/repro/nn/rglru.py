@@ -1,0 +1,135 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+The recurrence, per channel:
+
+    r_t = sigmoid(W_r u_t)                      (recurrence gate)
+    i_t = sigmoid(W_i u_t)                      (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)      (data-dependent decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+recurrence is linear in ``h``); decode carries ``h`` as explicit state.  The
+full recurrent block is: linear in, short temporal conv (width 4), RG-LRU,
+gated linear out — all per RecurrentGemma.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+C_CONST = 8.0
+
+
+def _decay(lp: dict, r: jnp.ndarray) -> jnp.ndarray:
+    """log a_t = -c * softplus(lambda) * r_t  (f32)."""
+    lam = jax.nn.softplus(lp["lambda"].astype(jnp.float32))
+    return -C_CONST * lam * r
+
+
+def rglru_scan(u: jnp.ndarray, lp: dict) -> jnp.ndarray:
+    """Associative linear scan over (B, S, D) inputs -> (B, S, D)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,d->bsd", uf, lp["wr_diag"].astype(jnp.float32))
+                       + lp["br"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,d->bsd", uf, lp["wi_diag"].astype(jnp.float32))
+                       + lp["bi"].astype(jnp.float32))
+    log_a = _decay(lp, r)
+    a = jnp.exp(log_a)
+    x = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(u: jnp.ndarray, h_prev: jnp.ndarray, lp: dict) -> tuple:
+    """One decode step: u (B, D), h_prev (B, D) f32 -> (out, h)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * lp["wr_diag"].astype(jnp.float32)
+                       + lp["br"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * lp["wi_diag"].astype(jnp.float32)
+                       + lp["bi"].astype(jnp.float32))
+    log_a = _decay(lp, r)
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * uf)
+    return h.astype(u.dtype), h
+
+
+# -- temporal conv (width w, causal) -------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,D), w (W,D) -> (B,S,D)."""
+    width = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pads[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def conv1d_step(x: jnp.ndarray, state: jnp.ndarray, w: jnp.ndarray) -> tuple:
+    """x (B,D); state (B, W-1, D) holds previous inputs."""
+    width = w.shape[0]
+    hist = jnp.concatenate([state, x[:, None, :]], axis=1)   # (B, W, D)
+    out = jnp.einsum("bwd,wd->bd", hist, w)
+    return out, hist[:, 1:, :]
+
+
+# -- the full recurrent block ----------------------------------------------------
+
+
+def init_rglru_block(key, cfg, n_layers: int) -> dict:
+    from .layers import dense_init
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], d, (n_layers, d, d), dtype),
+        "wy": dense_init(ks[1], d, (n_layers, d, d), dtype),
+        "wo": dense_init(ks[2], d, (n_layers, d, d), dtype),
+        "conv_w": dense_init(ks[3], cfg.conv1d_width,
+                             (n_layers, cfg.conv1d_width, d), dtype),
+        "wr_diag": jnp.ones((n_layers, d), jnp.float32),
+        "wi_diag": jnp.ones((n_layers, d), jnp.float32),
+        "br": jnp.zeros((n_layers, d), jnp.float32),
+        "bi": jnp.zeros((n_layers, d), jnp.float32),
+        # Lambda init so decay a in [0.9, 0.999] at r=1 (paper appendix)
+        "lambda": jnp.linspace(0.3, 1.4, d, dtype=jnp.float32)[None, :]
+        * jnp.ones((n_layers, 1), jnp.float32),
+    }
+
+
+def rglru_block(x: jnp.ndarray, lp: dict, cfg, *,
+                return_state: bool = False):
+    """Full recurrent block for train/prefill: (B,S,D) -> (B,S,D)."""
+    y = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, lp["wy"]))
+    u_raw = jnp.einsum("bsd,de->bse", x, lp["wx"])
+    u = causal_conv1d(u_raw, lp["conv_w"])
+    h = rglru_scan(u, lp)
+    out = jnp.einsum("bsd,de->bse", h * y, lp["wo"])
+    if return_state:
+        width = lp["conv_w"].shape[0]
+        keep = width - 1
+        if x.shape[1] < keep:  # short prefill: left-pad the history
+            u_raw = jnp.pad(u_raw, ((0, 0), (keep - x.shape[1], 0), (0, 0)))
+        conv_state = u_raw[:, -keep:, :]
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+def rglru_block_step(x: jnp.ndarray, state: dict, lp: dict, cfg) -> tuple:
+    """Decode step: x (B,D), state {'h': (B,D) f32, 'conv': (B,W-1,D)}."""
+    y = jax.nn.gelu(x @ lp["wy"])
+    u = x @ lp["wx"]
+    u, conv_state = conv1d_step(u, state["conv"], lp["conv_w"])
+    out, h = rglru_step(u, state["h"], lp)
+    return (out * y) @ lp["wo"], {"h": h, "conv": conv_state}

@@ -1,0 +1,172 @@
+"""RWKV6 "Finch" token mixer (arXiv:2404.05892): data-dependent decay WKV.
+
+Per head (dimension ``dh``), with per-channel data-dependent decay ``w_t``:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: dh x dh)
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)    (u: per-channel bonus)
+
+Token shift mixes each projection's input between x_t and x_{t-1} with
+learned per-channel coefficients; the decay w_t comes from a small LoRA on
+the shifted input (the "data-dependent" part that distinguishes v6 from v5).
+
+Train/prefill runs the recurrence with ``jax.lax.scan`` over time (the
+Pallas kernel in repro.kernels provides the chunked TPU version); decode
+carries ``S`` explicitly.  The channel mixer is RWKV's squared-ReLU FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DECAY_LORA = 64
+
+
+def init_rwkv6_block(key, cfg, n_layers: int) -> dict:
+    from .layers import dense_init
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    p = {
+        "wr": dense_init(ks[0], d, (n_layers, d, d), dtype),
+        "wk": dense_init(ks[1], d, (n_layers, d, d), dtype),
+        "wv": dense_init(ks[2], d, (n_layers, d, d), dtype),
+        "wg": dense_init(ks[3], d, (n_layers, d, d), dtype),
+        "wo": dense_init(ks[4], d, (n_layers, d, d), dtype),
+        # data-dependent decay LoRA: d -> 64 -> d
+        "wd1": dense_init(ks[5], d, (n_layers, d, DECAY_LORA), dtype),
+        "wd2": dense_init(ks[6], DECAY_LORA, (n_layers, DECAY_LORA, d), dtype),
+        "w0": jnp.full((n_layers, d), -6.0, jnp.float32),  # base decay
+        "u": jnp.zeros((n_layers, cfg.n_heads, cfg.d_head), jnp.float32),
+        # token-shift mixing coefficients per projection
+        "mu_r": jnp.full((n_layers, d), 0.5, dtype),
+        "mu_k": jnp.full((n_layers, d), 0.5, dtype),
+        "mu_v": jnp.full((n_layers, d), 0.5, dtype),
+        "mu_g": jnp.full((n_layers, d), 0.5, dtype),
+        "mu_w": jnp.full((n_layers, d), 0.5, dtype),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, x_prev: jnp.ndarray | None = None):
+    """(B,S,D) -> previous-token tensor (first position sees zeros/x_prev)."""
+    if x_prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _projections(x: jnp.ndarray, xs: jnp.ndarray, lp: dict, cfg):
+    b = x.shape[0]
+    s = x.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+    r = jnp.einsum("bsd,de->bse", _mix(x, xs, lp["mu_r"]), lp["wr"])
+    k = jnp.einsum("bsd,de->bse", _mix(x, xs, lp["mu_k"]), lp["wk"])
+    v = jnp.einsum("bsd,de->bse", _mix(x, xs, lp["mu_v"]), lp["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", _mix(x, xs, lp["mu_g"]),
+                               lp["wg"]))
+    xw = _mix(x, xs, lp["mu_w"])
+    dd = jnp.einsum("bsk,ke->bse", jnp.tanh(
+        jnp.einsum("bsd,dk->bsk", xw, lp["wd1"])), lp["wd2"])
+    logw = -jnp.exp(jnp.clip(lp["w0"].astype(jnp.float32)
+                             + dd.astype(jnp.float32), -20.0, 10.0))
+    from ..distributed.shardings import constrain, BATCH_AXES
+    shape = (b, s, h, dh)
+
+    def _c(t):
+        return constrain(t.reshape(shape), BATCH_AXES, None, "model", None)
+
+    return (_c(r), _c(k), _c(v), g.reshape(b, s, h * dh),
+            _c(jnp.exp(logw)))
+
+
+def wkv6_scan(r, k, v, w, u, *, return_state: bool = False):
+    """Reference recurrence over time: all inputs (B,S,H,dh); u (H,dh)."""
+    b, s, h, dh = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                       # (B,H,dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    final, outs = jax.lax.scan(step, state0, xs)
+    outs = jnp.moveaxis(outs, 0, 1)                # (B,S,H,dh)
+    if return_state:
+        return outs, final
+    return outs
+
+
+def rwkv6_time_mix(x: jnp.ndarray, lp: dict, cfg, *, impl: str = "xla",
+                   return_state: bool = False):
+    """Full time-mix block for train/prefill: (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    xs = _token_shift(x)
+    r, k, v, g, w = _projections(x, xs, lp, cfg)
+    final = None
+    if impl == "pallas" and not return_state:
+        from ..kernels import ops as kops
+        out = kops.rwkv6(r, k, v, w, lp["u"])
+    else:
+        out = wkv6_scan(r, k, v, w, lp["u"], return_state=True)
+        out, final = out
+    out = out.reshape(b, s, d).astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", out, lp["wo"])
+    if return_state:
+        return out, {"S": final, "shift": x[:, -1]}
+    return out
+
+
+def rwkv6_time_mix_step(x: jnp.ndarray, state: dict, lp: dict, cfg) -> tuple:
+    """Decode step: x (B,D); state {'S': (B,H,dh,dh) f32, 'shift': (B,D)}."""
+    b, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x3 = x[:, None, :]
+    xs3 = state["shift"][:, None, :]
+    r, k, v, g, w = _projections(x3, xs3, lp, cfg)
+    rt, kt, vt, wt = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    uf = lp["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    out = jnp.einsum("bhk,bhkv->bhv", rt, state["S"] + uf[None, :, :, None] * kv)
+    new_s = wt[..., None] * state["S"] + kv
+    out = out.reshape(b, d).astype(x.dtype) * g[:, 0]
+    return out @ lp["wo"], {"S": new_s, "shift": x}
+
+
+# -- channel mixer ----------------------------------------------------------------
+
+
+def init_rwkv6_channel(key, cfg, n_layers: int) -> dict:
+    from .layers import dense_init
+    d, f = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ck": dense_init(k1, d, (n_layers, d, f), dtype),
+        "cv": dense_init(k2, f, (n_layers, f, d), dtype),
+        "mu_c": jnp.full((n_layers, d), 0.5, dtype),
+    }
+
+
+def rwkv6_channel_mix(x: jnp.ndarray, lp: dict) -> jnp.ndarray:
+    xs = _token_shift(x)
+    xk = _mix(x, xs, lp["mu_c"])
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, lp["ck"])))
+    return jnp.einsum("bsf,fd->bsd", k, lp["cv"])
+
+
+def rwkv6_channel_mix_step(x: jnp.ndarray, shift: jnp.ndarray,
+                           lp: dict) -> tuple:
+    xk = _mix(x, shift, lp["mu_c"])
+    k = jnp.square(jax.nn.relu(xk @ lp["ck"]))
+    return k @ lp["cv"], x

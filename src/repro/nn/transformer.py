@@ -1,0 +1,527 @@
+"""Model assembly: every assigned architecture behind one API.
+
+Entry points (all pure functions of ``(cfg, params, ...)``):
+
+* ``init_params(cfg, key)``            — parameter pytree (per-layer stacked)
+* ``forward(cfg, params, batch)``      — logits for train/prefill
+* ``loss_fn(cfg, params, batch)``      — scalar LM loss (+ metrics)
+* ``prefill(cfg, params, batch)``      — (last_logits, cache)
+* ``init_cache(cfg, batch_size, max_len)`` — empty decode cache
+* ``decode_step(cfg, params, tokens, pos, cache)`` — one-token serve step
+
+Families: ``dense`` / ``audio`` / ``vlm`` (GQA attention + SwiGLU — frontends
+are stub embeddings), ``moe`` (top-k expert FFN), ``ssm`` (RWKV6), ``hybrid``
+(RecurrentGemma: 2 RG-LRU blocks per local-attention block, scanned in
+supergroups).  Blocks run under ``jax.lax.scan`` over stacked parameters;
+``cfg.remat="block"`` wraps the block body in ``jax.checkpoint``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attend, init_attention, qkv_project
+from .layers import (apply_rope, dense_init, embed_tokens,
+                     logits_from_embedding, init_mlp, rms_norm,
+                     softmax_cross_entropy, swiglu)
+from .moe import init_moe, moe_ffn
+from .rglru import (causal_conv1d, init_rglru_block, rglru_block,
+                    rglru_block_step)
+from .rwkv6 import (init_rwkv6_block, init_rwkv6_channel, rwkv6_channel_mix,
+                    rwkv6_channel_mix_step, rwkv6_time_mix,
+                    rwkv6_time_mix_step)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_counts(cfg) -> tuple[int, int, int]:
+    """(n_groups, n_rec, n_attn) for the rglru 2:1 layer pattern."""
+    period = cfg.rglru_pattern + 1
+    n_groups = cfg.n_layers // period
+    n_attn = n_groups
+    n_rec = cfg.n_layers - n_attn
+    return n_groups, n_rec, n_attn
+
+
+def init_params(cfg, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {
+        "embed": dense_init(keys[0], d, (cfg.vocab, d), dtype),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(keys[1], d, (d, cfg.vocab), dtype)
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        p["blocks"] = {
+            "ln1": jnp.zeros((L, d), jnp.float32),
+            "ln2": jnp.zeros((L, d), jnp.float32),
+            "time": init_rwkv6_block(keys[2], cfg, L),
+            "chan": init_rwkv6_channel(keys[3], cfg, L),
+        }
+    elif cfg.rglru_pattern > 0:
+        ng, n_rec, n_attn = _hybrid_counts(cfg)
+        p["rec_blocks"] = {
+            "ln1": jnp.zeros((n_rec, d), jnp.float32),
+            "ln2": jnp.zeros((n_rec, d), jnp.float32),
+            "mix": init_rglru_block(keys[2], cfg, n_rec),
+            "mlp": init_mlp(keys[3], d, cfg.d_ff, dtype, n_rec),
+        }
+        p["attn_blocks"] = {
+            "ln1": jnp.zeros((n_attn, d), jnp.float32),
+            "ln2": jnp.zeros((n_attn, d), jnp.float32),
+            "attn": init_attention(keys[4], cfg, n_attn),
+            "mlp": init_mlp(keys[5], d, cfg.d_ff, dtype, n_attn),
+        }
+    else:
+        blocks = {
+            "ln1": jnp.zeros((L, d), jnp.float32),
+            "ln2": jnp.zeros((L, d), jnp.float32),
+            "attn": init_attention(keys[2], cfg, L),
+        }
+        if cfg.moe_experts > 1:
+            blocks["moe"] = init_moe(keys[3], cfg, L)
+        else:
+            blocks["mlp"] = init_mlp(keys[3], d, cfg.d_ff, dtype, L)
+        p["blocks"] = blocks
+    return p
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# block bodies (single layer; lp = this layer's slice of the stacked params)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(cfg, lp, x, positions, window):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = qkv_project(h, lp["attn"], cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attend(q, k, v, impl=cfg.attention_impl, window=window)
+    b, s, _, _ = o.shape
+    x = x + jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1), lp["attn"]["wo"])
+    return x, (k, v)
+
+
+def _ffn_block(cfg, lp, x):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        out, aux = moe_ffn(h, lp["moe"], cfg)
+        return x + out, aux
+    return x + swiglu(h, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"]), 0.0
+
+
+def _dense_layer(cfg, lp, x, positions, window=0):
+    x, kv = _attn_block(cfg, lp, x, positions, window)
+    x, aux = _ffn_block(cfg, lp, x)
+    return x, kv, aux
+
+
+def _rec_layer(cfg, lp, x):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + rglru_block(h, lp["mix"], cfg)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + swiglu(h, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+
+
+def _rwkv_layer(cfg, lp, x):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + rwkv6_time_mix(h, lp["time"], cfg, impl=cfg.attention_impl)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + rwkv6_channel_mix(h, lp["chan"])
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat == "block" else fn
+
+
+def _scan(cfg, body, carry, xs):
+    """lax.scan over stacked layer params, or a Python unroll when
+    ``cfg.scan_layers=False`` (used by the roofline pass: XLA's
+    cost_analysis does not multiply while-loop bodies by trip count)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(length):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        outs.append(y)
+    if outs and outs[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_input(cfg, params, batch) -> jnp.ndarray:
+    """Token and/or frontend-stub embeddings -> (B, S, D)."""
+    if cfg.frontend == "audio":
+        return batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    if cfg.frontend == "vision":
+        tok = embed_tokens(params["embed"], batch["tokens"])
+        return jnp.concatenate(
+            [batch["patch_embeds"].astype(tok.dtype), tok], axis=1)
+    return embed_tokens(params["embed"], batch["tokens"])
+
+
+def _lm_head(cfg, params, x) -> jnp.ndarray:
+    from ..distributed.shardings import constrain, BATCH_AXES
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = logits_from_embedding(x, params["embed"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["head"],
+                            preferred_element_type=jnp.float32)
+    # keep the vocab dim sharded over `model`: an unsharded (B,S,V) f32
+    # logits buffer dominates step memory for 100k+ vocabularies
+    if logits.ndim == 3:
+        return constrain(logits, BATCH_AXES, None, "model")
+    return constrain(logits, BATCH_AXES, "model")
+
+
+def forward(cfg, params, batch, *, return_cache: bool = False,
+            last_only: bool = False):
+    """Logits (B, S, V) [f32]; optionally also the prefill KV cache.
+
+    ``last_only`` computes the LM head for the final position only —
+    prefill never needs the full (B, S, V) logits buffer, which otherwise
+    dominates memory traffic for 100k+ vocabularies at 32k context.
+    """
+    x = _embed_input(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    aux_total = 0.0
+    cache = None
+
+    if cfg.family == "ssm":
+        def body(xc, lp):
+            h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            if return_cache:
+                out, st = rwkv6_time_mix(h, lp["time"], cfg,
+                                         impl=cfg.attention_impl,
+                                         return_state=True)
+            else:
+                out = rwkv6_time_mix(h, lp["time"], cfg,
+                                     impl=cfg.attention_impl)
+                st = None
+            xc = xc + out
+            h2 = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + rwkv6_channel_mix(h2, lp["chan"])
+            out_state = (st["S"], st["shift"], h2[:, -1]) if return_cache \
+                else None
+            return xc, out_state
+
+        body = _maybe_remat(cfg, body) if not return_cache else body
+        x, states = _scan(cfg, body, x, params["blocks"])
+        if return_cache:
+            cache = {"S": states[0], "shift_t": states[1],
+                     "shift_c": states[2]}
+    elif cfg.rglru_pattern > 0:
+        x, cache = _hybrid_forward(cfg, params, x, positions, return_cache)
+    else:
+        win = cfg.local_window
+
+        def body(carry, lp):
+            xc, aux = carry
+            fn = _maybe_remat(
+                cfg, lambda l, x_, p_: _dense_layer(cfg, l, x_, p_, win))
+            xo, kv, a = fn(lp, xc, positions)
+            out = kv if return_cache else None
+            return (xo, aux + a), out
+
+        (x, aux_total), kvs = _scan(cfg, body, (x, 0.0), params["blocks"])
+        if return_cache:
+            cache = {"k": kvs[0], "v": kvs[1]}   # (L, B, S, Hkv, dh)
+    if last_only:
+        x = x[:, -1:]
+    logits = _lm_head(cfg, params, x)
+    if return_cache:
+        return logits, cache, aux_total
+    return logits, aux_total
+
+
+def _ring_from_prefill(k, v, seq: int, window: int):
+    """Pack the last ``window`` prefill K/V into the decode ring layout
+    (entry for position p lives at slot ``p % window``).  The ring is sized
+    by the attention window, NOT the prefill length — a shorter ring would
+    evict keys that are still visible."""
+    w = window if window else seq
+    t = min(seq, w)
+    p0 = seq - t
+    idx = (jnp.arange(t) + p0) % w
+    b, _, hkv, dh = k.shape
+    ring_k = jnp.zeros((b, w, hkv, dh), k.dtype).at[:, idx].set(k[:, p0:])
+    ring_v = jnp.zeros((b, w, hkv, dh), v.dtype).at[:, idx].set(v[:, p0:])
+    kpos = jnp.full((b, w), -1, jnp.int32).at[:, idx].set(
+        jnp.arange(p0, seq, dtype=jnp.int32)[None, :])
+    return ring_k, ring_v, kpos
+
+
+def _rec_layer_state(cfg, lp, x):
+    """_rec_layer variant that also returns the RG-LRU/conv decode state."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    out, st = rglru_block(h, lp["mix"], cfg, return_state=True)
+    x = x + out
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + swiglu(h, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"])
+    return x, st
+
+
+def _hybrid_forward(cfg, params, x, positions, return_cache):
+    """RecurrentGemma stack: scan over (rec, rec, attn) supergroups."""
+    ng, n_rec, n_attn = _hybrid_counts(cfg)
+    per = cfg.rglru_pattern
+    rec = params["rec_blocks"]
+    att = params["attn_blocks"]
+    seq = x.shape[1]
+    # supergroup slices: rec layers [g*per:(g+1)*per], attn layer g
+    rec_main = jax.tree.map(lambda a: a[:ng * per].reshape(
+        ng, per, *a.shape[1:]), rec)
+    rec_tail = jax.tree.map(lambda a: a[ng * per:], rec)
+    win = cfg.local_window
+
+    def group(xc, lps):
+        rlp, alp = lps
+        rec_states = []
+        for i in range(per):
+            lpi = jax.tree.map(lambda a: a[i], rlp)
+            if return_cache:
+                xc, st = _rec_layer_state(cfg, lpi, xc)
+                rec_states.append(st)
+            else:
+                xc = _maybe_remat(cfg, partial(_rec_layer, cfg))(lpi, xc)
+        fn = _maybe_remat(
+            cfg, lambda l, x_, p_: _dense_layer(cfg, l, x_, p_, win))
+        xc, (k, v), _ = fn(alp, xc, positions)
+        if not return_cache:
+            return xc, None
+        ring_k, ring_v, kpos = _ring_from_prefill(k, v, seq, win)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *rec_states)
+        return xc, (stacked, ring_k, ring_v, kpos)
+
+    x, outs = _scan(cfg, group, x, (rec_main, att))
+    n_tail = n_rec - ng * per
+    tail_states = []
+    for i in range(n_tail):
+        lpi = jax.tree.map(lambda a: a[i], rec_tail)
+        if return_cache:
+            x, st = _rec_layer_state(cfg, lpi, x)
+            tail_states.append(st)
+        else:
+            x = _rec_layer(cfg, lpi, x)
+    cache = None
+    if return_cache:
+        rec_states, ring_k, ring_v, kpos = outs
+        # (ng, per, ...) -> (n_rec_main, ...)
+        h_all = rec_states["h"].reshape(-1, *rec_states["h"].shape[2:])
+        c_all = rec_states["conv"].reshape(-1, *rec_states["conv"].shape[2:])
+        if tail_states:
+            h_all = jnp.concatenate(
+                [h_all, jnp.stack([s["h"] for s in tail_states])], 0)
+            c_all = jnp.concatenate(
+                [c_all, jnp.stack([s["conv"] for s in tail_states])], 0)
+        cache = {"h": h_all, "conv": c_all, "k": ring_k, "v": ring_v,
+                 "kpos": kpos}
+    return x, cache
+
+
+def loss_fn(cfg, params, batch):
+    """Next-token CE over the batch; returns (loss, metrics)."""
+    logits, aux = forward(cfg, params, batch)
+    targets = batch["targets"]
+    if cfg.frontend == "vision":   # image prefix carries no LM loss
+        logits = logits[:, -targets.shape[1]:]
+    mask = batch.get("mask")
+    ce = softmax_cross_entropy(logits[:, :-1], targets[:, 1:],
+                               None if mask is None else mask[:, 1:])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    """Empty decode state sized for ``max_len`` context."""
+    dtype = jnp.dtype(cfg.dtype)
+    d, dh, hkv = cfg.d_model, cfg.d_head, cfg.n_kv_heads
+    if cfg.family == "ssm":
+        L = cfg.n_layers
+        return {
+            "S": jnp.zeros((L, batch_size, cfg.n_heads, dh, dh), jnp.float32),
+            "shift_t": jnp.zeros((L, batch_size, d), dtype),
+            "shift_c": jnp.zeros((L, batch_size, d), dtype),
+        }
+    if cfg.rglru_pattern > 0:
+        ng, n_rec, n_attn = _hybrid_counts(cfg)
+        w = min(cfg.local_window or max_len, max_len)
+        return {
+            "h": jnp.zeros((n_rec, batch_size, d), jnp.float32),
+            "conv": jnp.zeros((n_rec, batch_size, cfg.conv1d_width - 1, d),
+                              dtype),
+            "k": jnp.zeros((n_attn, batch_size, w, hkv, dh), dtype),
+            "v": jnp.zeros((n_attn, batch_size, w, hkv, dh), dtype),
+            "kpos": jnp.full((n_attn, batch_size, w), -1, jnp.int32),
+        }
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch_size, max_len, hkv, dh), dtype),
+        "v": jnp.zeros((L, batch_size, max_len, hkv, dh), dtype),
+    }
+
+
+def _decode_attn(cfg, lp, x, pos, kc, vc, kpos=None, window=0):
+    """One-token attention against the cache; returns (x, new slices)."""
+    b = x.shape[0]
+    h = rms_norm(x[:, None, :], lp["ln1"], cfg.norm_eps)
+    q, k, v = qkv_project(h, lp["attn"], cfg)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    if kpos is None:
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        t = kc.shape[1]
+        kv_positions = jnp.where(jnp.arange(t)[None, :] <= pos,
+                                 jnp.arange(t)[None, :], -1)
+        kv_positions = jnp.broadcast_to(kv_positions, (b, t))
+        new_kpos = None
+    else:
+        slot = pos % kc.shape[1]
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(kpos, posb, (0, slot))
+        kv_positions = kpos
+        new_kpos = kpos
+    o = attend(q, kc, vc, impl="xla", window=window,
+               kv_positions=kv_positions, q_positions=posb)
+    x = x + jnp.einsum("be,ed->bd", o.reshape(b, -1), lp["attn"]["wo"])
+    return x, kc, vc, new_kpos
+
+
+def decode_step(cfg, params, tokens, pos, cache):
+    """One serve step: tokens (B,) int32 at position ``pos`` -> (logits, cache)."""
+    if cfg.frontend == "audio":
+        # audio decode consumes a precomputed frame embedding instead
+        x = tokens if tokens.ndim == 2 else \
+            embed_tokens(params["embed"], tokens)
+    else:
+        x = embed_tokens(params["embed"], tokens)
+
+    if cfg.family == "ssm":
+        def body(xc, lps):
+            lp, st, sh_t, sh_c = lps
+            h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            out, nst = rwkv6_time_mix_step(h, {"S": st, "shift": sh_t}, lp["time"], cfg)
+            xc = xc + out
+            h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            out, nshc = rwkv6_channel_mix_step(h, sh_c, lp["chan"])
+            return xc + out, (nst["S"], nst["shift"], nshc)
+
+        x, (S, sh_t, sh_c) = _scan(
+            cfg, body, x, (params["blocks"], cache["S"], cache["shift_t"],
+                           cache["shift_c"]))
+        cache = {"S": S, "shift_t": sh_t, "shift_c": sh_c}
+    elif cfg.rglru_pattern > 0:
+        x, cache = _hybrid_decode(cfg, params, x, pos, cache)
+    else:
+        def body(xc, lps):
+            lp, kc, vc = lps
+            xc, kc, vc, _ = _decode_attn(cfg, lp, xc, pos, kc, vc,
+                                         window=cfg.local_window)
+            h = rms_norm(xc[:, None], lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                out, _ = moe_ffn(h, lp["moe"], cfg)
+            else:
+                out = swiglu(h, lp["mlp"]["w1"], lp["mlp"]["w3"],
+                             lp["mlp"]["w2"])
+            return xc + out[:, 0], (kc, vc)
+
+        x, (k, v) = _scan(cfg, body, x, (params["blocks"], cache["k"],
+                                          cache["v"]))
+        cache = {"k": k, "v": v}
+    logits = _lm_head(cfg, params, x)
+    return logits, cache
+
+
+def _hybrid_decode(cfg, params, x, pos, cache):
+    ng, n_rec, n_attn = _hybrid_counts(cfg)
+    per = cfg.rglru_pattern
+    rec = params["rec_blocks"]
+    att = params["attn_blocks"]
+
+    def rec_one(xc, lp, h, conv):
+        hh = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        out, st = rglru_block_step(hh, {"h": h, "conv": conv}, lp["mix"], cfg)
+        xc = xc + out
+        hh = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + swiglu(hh[:, None], lp["mlp"]["w1"], lp["mlp"]["w3"],
+                         lp["mlp"]["w2"])[:, 0]
+        return xc, st["h"], st["conv"]
+
+    rec_main = jax.tree.map(lambda a: a[:ng * per].reshape(
+        ng, per, *a.shape[1:]), rec)
+    h_main = cache["h"][:ng * per].reshape(ng, per, *cache["h"].shape[1:])
+    c_main = cache["conv"][:ng * per].reshape(ng, per, *cache["conv"].shape[1:])
+
+    def group(xc, lps):
+        rlp, hg, cg, alp, kc, vc, kp = lps
+        nh, nc = [], []
+        for i in range(per):
+            lpi = jax.tree.map(lambda a: a[i], rlp)
+            xc, hi, ci = rec_one(xc, lpi, hg[i], cg[i])
+            nh.append(hi)
+            nc.append(ci)
+        xc, kc, vc, kp = _decode_attn(cfg, alp, xc, pos, kc, vc, kp,
+                                      window=cfg.local_window)
+        hh = rms_norm(xc[:, None], alp["ln2"], cfg.norm_eps)
+        xc = xc + swiglu(hh, alp["mlp"]["w1"], alp["mlp"]["w3"],
+                         alp["mlp"]["w2"])[:, 0]
+        return xc, (jnp.stack(nh), jnp.stack(nc), kc, vc, kp)
+
+    x, (h_new, c_new, k, v, kp) = _scan(
+        cfg, group, x, (rec_main, h_main, c_main, att, cache["k"], cache["v"],
+                        cache["kpos"]))
+    h_all = h_new.reshape(-1, *h_new.shape[2:])
+    c_all = c_new.reshape(-1, *c_new.shape[2:])
+    # tail recurrent layers (un-scanned remainder)
+    n_tail = n_rec - ng * per
+    h_tail, c_tail = [], []
+    for i in range(n_tail):
+        li = ng * per + i
+        lpi = jax.tree.map(lambda a: a[li], rec)
+        x, hi, ci = rec_one(x, lpi, cache["h"][li], cache["conv"][li])
+        h_tail.append(hi)
+        c_tail.append(ci)
+    if n_tail:
+        h_all = jnp.concatenate([h_all, jnp.stack(h_tail)], 0)
+        c_all = jnp.concatenate([c_all, jnp.stack(c_tail)], 0)
+    return x, {"h": h_all, "conv": c_all, "k": k, "v": v, "kpos": kp}
+
+
+def prefill(cfg, params, batch):
+    """Prefill: full forward returning (last-token logits, cache)."""
+    logits, cache, _ = forward(cfg, params, batch, return_cache=True,
+                               last_only=True)
+    return logits[:, 0], cache

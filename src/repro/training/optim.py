@@ -1,0 +1,98 @@
+"""Pure-JAX optimizers over pytrees (no optax offline).
+
+Provides Adam/AdamW with optional global-norm clipping and LR schedules.
+Used both by the PIM-Tuner's models (core/tuner.py) and the LM training loop
+(training/train_loop.py).  State is a plain pytree so it checkpoints and
+shards like parameters.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray   # scalar int32
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclass(frozen=True)
+class Adam:
+    """Adam/AdamW: functional init/update mirroring the optax interface."""
+
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = None
+
+    def init(self, params: PyTree) -> AdamState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+        return AdamState(jnp.zeros((), jnp.int32), zeros,
+                         jax.tree.map(lambda p: jnp.zeros_like(p), params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads: PyTree, state: AdamState,
+               params: PyTree) -> tuple[PyTree, AdamState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, AdamState(step, mu, nu)
+
+    def apply(self, grads: PyTree, state: AdamState,
+              params: PyTree) -> tuple[PyTree, AdamState]:
+        updates, state = self.update(grads, state, params)
+        return jax.tree.map(lambda p, u: p + u, params, updates), state
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    floor: float = 0.1) -> Callable:
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        t = jnp.clip((step - warmup_steps) /
+                     max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 \
+            * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

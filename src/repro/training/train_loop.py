@@ -1,0 +1,131 @@
+"""Distributed training step: grad accumulation, mixed precision, metrics.
+
+``make_train_step`` builds the pjit-able function lowered by the dry-run and
+driven by ``launch/train.py``:
+
+* microbatched gradient accumulation via ``jax.lax.scan`` (keeps activation
+  memory at 1/A of the naive step; grads accumulate in f32);
+* bf16 parameters / f32 optimizer state (Adam from training.optim);
+* global-norm clipping, cosine LR, token-weighted loss metrics.
+
+The returned step is a pure ``(state, batch) -> (state, metrics)`` function;
+all sharding comes from the pjit in/out specs (distributed/shardings.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import transformer as tfm
+from .optim import Adam, AdamState, cosine_schedule, global_norm
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10000
+    microbatches: int = 1
+    clip_norm: float = 1.0
+    weight_decay: float = 0.01
+    fsdp: bool = True
+    grad_compression: str = "none"   # none | int8
+    # constrain grads to the param sharding (reduce-scatter instead of a
+    # full all-reduce). Off by default: the paper-faithful baseline keeps
+    # GSPMD's native choice; the §Perf hillclimb flips it on.
+    grad_sharding: bool = False
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt: AdamState
+    # int8-compression error-feedback residual (zeros when compression off)
+    err: Any = None
+
+
+def make_optimizer(tcfg: TrainConfig) -> Adam:
+    return Adam(lr=cosine_schedule(tcfg.lr, tcfg.warmup_steps,
+                                   tcfg.total_steps),
+                clip_norm=tcfg.clip_norm, weight_decay=tcfg.weight_decay)
+
+
+def init_state(cfg, tcfg: TrainConfig, key) -> TrainState:
+    params = tfm.init_params(cfg, key)
+    opt = make_optimizer(tcfg).init(params)
+    err = None
+    if tcfg.grad_compression == "int8":
+        err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(jnp.zeros((), jnp.int32), params, opt, err)
+
+
+def _split_micro(batch: Any, a: int) -> Any:
+    return jax.tree.map(
+        lambda x: x.reshape(a, x.shape[0] // a, *x.shape[1:]), batch)
+
+
+def make_train_step(cfg, tcfg: TrainConfig, param_specs: Any = None):
+    """``param_specs`` (a PartitionSpec pytree matching params) constrains
+    gradients to the parameter sharding.  Without it GSPMD may materialize
+    replicated f32 gradients and reduce them with a full-size all-reduce
+    (measured: 381 GiB/chip on moonshot-16B) instead of the reduce-scatter
+    the sharded optimizer update needs."""
+    optimizer = make_optimizer(tcfg)
+
+    def _constrain_grads(grads):
+        if param_specs is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, param_specs)
+
+    def train_step(state: TrainState, batch: Any):
+        a = tcfg.microbatches
+
+        def gfn(params, mb):
+            return jax.value_and_grad(
+                lambda p: tfm.loss_fn(cfg, p, mb), has_aux=True)(params)
+
+        if a > 1:
+            micro = _split_micro(batch, a)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = gfn(state.params, mb)
+                gsum = jax.tree.map(
+                    lambda s, gi: s + gi.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / a, gsum)
+            loss = lsum / a
+        else:
+            (loss, _), grads = gfn(state.params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        grads = _constrain_grads(grads)
+        err = state.err
+        if tcfg.grad_compression == "int8":
+            from .compression import compress_decompress
+            grads, err = compress_decompress(grads, err)
+
+        params, opt = optimizer.apply(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads),
+                   "step": state.step + 1}
+        return TrainState(state.step + 1, params, opt, err), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = tfm.loss_fn(cfg, params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

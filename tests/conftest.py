@@ -1,0 +1,11 @@
+import os
+
+# Keep the test run on the single real CPU device; the 512-device setting is
+# applied ONLY by repro.launch.dryrun (which must be a fresh process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None,
+                          derandomize=True)
+settings.load_profile("ci")

@@ -1,0 +1,164 @@
+"""Checkpointing (atomic/async/elastic) + fault tolerance (restart/straggler)."""
+
+import dataclasses
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed.fault import (ElasticPlan, Preempted, RestartableLoop,
+                                     StragglerMonitor)
+from repro.training.train_loop import TrainConfig, init_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny():
+    cfg = dataclasses.replace(
+        get_config("qwen2_0_5b").reduced(), n_layers=2, d_model=64,
+        head_dim=16, d_ff=128, vocab=256, dtype="float32")
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=0, total_steps=100)
+    return cfg, tcfg
+
+
+def batch_fn_for(cfg):
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                  global_batch=4, seed=3))
+    return lambda step: {k: jnp.asarray(v)
+                         for k, v in data.batch(step).items()}
+
+
+def test_save_restore_bitexact(tmp_path):
+    cfg, tcfg = tiny()
+    state = init_state(cfg, tcfg, KEY)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(7, state)
+    restored, step = mgr.restore(state)
+    assert step == 7
+    same = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                        state, restored)
+    assert all(jax.tree.leaves(same))
+
+
+def test_atomic_commit_ignores_tmp(tmp_path):
+    cfg, tcfg = tiny()
+    state = init_state(cfg, tcfg, KEY)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, state)
+    # simulate a crash mid-write: a lingering .tmp dir must be invisible
+    (tmp_path / "step_00000009.tmp").mkdir()
+    assert mgr.latest_step() == 1
+
+
+def test_retention_gc(tmp_path):
+    cfg, tcfg = tiny()
+    state = init_state(cfg, tcfg, KEY)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    cfg, tcfg = tiny()
+    state = init_state(cfg, tcfg, KEY)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_async(5, state)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_elastic_restore_dtype_and_structure(tmp_path):
+    """Restore into a differently-placed (and abstract) template."""
+    cfg, tcfg = tiny()
+    state = init_state(cfg, tcfg, KEY)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, state)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, _ = mgr.restore(template)
+    same = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)),
+                        state, restored)
+    assert all(jax.tree.leaves(same))
+
+
+def test_preempt_resume_bitexact(tmp_path):
+    """Kill at step 6, resume, and match the uninterrupted run exactly."""
+    cfg, tcfg = tiny()
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    batch_fn = batch_fn_for(cfg)
+
+    # uninterrupted reference: 10 steps
+    ref = init_state(cfg, tcfg, KEY)
+    for s in range(10):
+        ref, _ = step_fn(ref, batch_fn(s))
+
+    loop = RestartableLoop(tmp_path / "ck", ckpt_every=3)
+    state = init_state(cfg, tcfg, KEY)
+
+    class Boom(RuntimeError):
+        pass
+
+    calls = {"n": 0}
+
+    def crashy(st, b):
+        if calls["n"] == 6:
+            raise Boom()
+        calls["n"] += 1
+        return step_fn(st, b)
+
+    with pytest.raises(Boom):
+        loop.run(state, crashy, batch_fn, start_step=0, num_steps=10)
+    # restart from the last committed checkpoint
+    loop2 = RestartableLoop(tmp_path / "ck", ckpt_every=3)
+    start = loop2.resume_step()
+    assert start == 6
+    state2, _ = loop2.mgr.restore(init_state(cfg, tcfg, KEY))
+    state2, _ = loop2.run(state2, lambda st, b: step_fn(st, b), batch_fn,
+                          start_step=start, num_steps=10 - start)
+    same = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        ref.params, state2.params)
+    assert max(jax.tree.leaves(same)) < 1e-6
+
+
+def test_signal_preemption(tmp_path):
+    cfg, tcfg = tiny()
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    loop = RestartableLoop(tmp_path / "ck", ckpt_every=100)
+    state = init_state(cfg, tcfg, KEY)
+    batch_fn = batch_fn_for(cfg)
+
+    def step_and_preempt(st, b):
+        out = step_fn(st, b)
+        loop.signal_preemption()
+        return out
+
+    with pytest.raises(Preempted):
+        loop.run(state, step_and_preempt, batch_fn, start_step=0,
+                 num_steps=10)
+    assert loop.mgr.latest_step() == 1  # emergency checkpoint at step 1
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0)
+    for i in range(10):
+        assert not mon.record(i, 0.1)
+    assert mon.record(10, 0.5)
+    assert mon.flagged[0][0] == 10
+
+
+def test_elastic_plan():
+    p = ElasticPlan(global_batch=256, host_count=32)
+    assert p.host_batch == 8
+    q = p.rescale(16)
+    assert q.host_batch == 16
+    with pytest.raises(ValueError):
+        p.rescale(7)

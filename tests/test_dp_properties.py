@@ -1,0 +1,79 @@
+"""Property tests: Algorithm-2 DP vs brute force, layout enumeration."""
+
+import itertools
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import enumerate_layouts
+from repro.core.mapper import RegionTable, INF
+
+
+@st.composite
+def knapsack_instance(draw):
+    n_layers = draw(st.integers(1, 4))
+    layers = []
+    for i in range(n_layers):
+        n_cands = draw(st.integers(1, 3))
+        cands = []
+        for c in range(n_cands):
+            perf = draw(st.floats(0.1, 10.0))
+            size = draw(st.integers(0, 6)) * 1000.0
+            cands.append((c, perf, size, None))  # (wr, perf, size, lm)
+        # mimic mapper convention: sorted by size desc
+        cands.sort(key=lambda t: -t[2])
+        layers.append((f"l{i}", tuple(cands)))
+    units = draw(st.integers(4, 12))
+    return layers, units
+
+
+@given(knapsack_instance())
+@settings(max_examples=40)
+def test_region_knapsack_matches_bruteforce(inst):
+    layers, units = inst
+    unit_bytes = 1000.0
+    tab = RegionTable(layers, units, unit_bytes)
+
+    # brute force: every combination of candidate choices
+    best = INF
+    spaces = [range(len(cands)) for _, cands in layers]
+    for combo in itertools.product(*spaces):
+        perf = 0.0
+        size_units = 0
+        for (name, cands), ci in zip(layers, combo):
+            perf += cands[ci][1]
+            size_units += math.ceil(cands[ci][2] / unit_bytes)
+        if size_units <= units:
+            best = min(best, perf)
+    if best == INF:
+        assert not np.isfinite(tab.perf[units])
+        return
+    assert tab.perf[units] <= best + 1e-9
+    assert tab.perf[units] >= best - 1e-9
+    # backtrack must reproduce the DP value and respect capacity
+    picks = tab.backtrack(units)
+    perf = sum(cands[picks[name]][1] for name, cands in layers)
+    size = sum(math.ceil(cands[picks[name]][2] / unit_bytes)
+               for name, cands in layers)
+    assert perf <= best + 1e-9
+    assert size <= units
+
+
+@given(knapsack_instance())
+@settings(max_examples=20)
+def test_region_knapsack_monotone(inst):
+    layers, units = inst
+    tab = RegionTable(layers, units, 1000.0)
+    p = tab.perf
+    assert all(p[i + 1] <= p[i] + 1e-12 for i in range(units))
+
+
+@given(st.integers(1, 512))
+def test_enumerate_layouts_groups(c):
+    outs = enumerate_layouts(c, max_group=32)
+    assert outs[0].order == "BHWC"
+    groups = [dl.group for dl in outs if dl.order == "BCHW"]
+    assert groups[0] == 1
+    assert all(g <= min(c, 32) for g in groups)
+    assert all(b == 2 * a for a, b in zip(groups, groups[1:]))

@@ -1,0 +1,75 @@
+"""IR: layer math, cut points, segment/branch extraction."""
+
+import pytest
+
+from repro.core.ir import DnnGraph, Layer, conv, matmul
+from repro.core.workloads import (bert_base, darknet53, googlenet,
+                                  resnet152, vgg16)
+
+
+def toy_inception():
+    g = DnnGraph("toy")
+    g.add(conv("stem", 1, 3, 32, 32, 16))
+    g.add(conv("b1a", 1, 16, 32, 32, 8, HK=1), ["stem"])
+    g.add(conv("b1b", 1, 8, 32, 32, 8), ["b1a"])
+    g.add(conv("b2a", 1, 16, 32, 32, 8, HK=1), ["stem"])
+    g.add(conv("b2b", 1, 8, 32, 32, 8, HK=5), ["b2a"])
+    g.add(Layer("cat", "concat", B=1, C=16, H=32, W=32, K=16),
+          ["b1b", "b2b"])
+    g.add(conv("tail", 1, 16, 32, 32, 32), ["cat"])
+    return g
+
+
+def test_conv_dims():
+    l = conv("c", 2, 16, 56, 56, 32, HK=3, stride=2, pad=1)
+    assert (l.P, l.Q) == (28, 28)
+    assert l.macs == 2 * 32 * 16 * 28 * 28 * 9
+    assert l.weight_count == 32 * 16 * 9
+
+
+def test_matmul_as_conv():
+    l = matmul("m", 4, 128, 256)
+    assert (l.P, l.Q, l.HK, l.WK) == (1, 1, 1, 1)
+    assert l.macs == 4 * 128 * 256
+
+
+def test_cut_points_and_segments():
+    g = toy_inception()
+    assert g.cut_points() == ["stem", "cat", "tail"]
+    segs = g.segments()
+    assert len(segs) == 3
+    assert segs[1].n_branches == 2
+    names = sorted(tuple(b.layers) for b in segs[1].branches)
+    assert ["b1a", "b1b", "cat"] in [list(n) for n in names]
+
+
+def test_resnet_shortcut_branches():
+    g = resnet152(1, scale=4)
+    segs = g.segments()
+    # bottleneck blocks have at most 2 branches (chain + conv shortcut)
+    assert max(s.n_branches for s in segs) == 2
+
+
+def test_cycle_detection():
+    g = DnnGraph("bad")
+    g.add(conv("a", 1, 3, 8, 8, 8))
+    g.add(conv("b", 1, 8, 8, 8, 8), ["a"])
+    g._preds["a"].append("b")  # force a cycle
+    g._succs["b"].append("a")
+    with pytest.raises(ValueError):
+        g.topo_order()
+
+
+@pytest.mark.parametrize("builder,gmacs", [
+    (vgg16, 15.47), (googlenet, 1.58), (resnet152, 11.28),
+    (darknet53, 9.29), (bert_base, 11.17)])
+def test_workload_mac_counts(builder, gmacs):
+    g = builder(1)
+    assert abs(g.total_macs / 1e9 - gmacs) / gmacs < 0.05
+
+
+def test_bert_heads_are_branches():
+    g = bert_base(1, n_layers=1)
+    segs = g.segments()
+    multi = max(s.n_branches for s in segs)
+    assert multi >= 12  # 12 heads become parallel branches

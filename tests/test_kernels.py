@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps against the ref.py oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+# ---------------------------------------------------------------- attention
+
+ATTN_CASES = [
+    # b, s, h, hkv, dh, window, bq, bk, dtype
+    (2, 128, 4, 2, 64, 0, 64, 64, jnp.float32),
+    (1, 256, 4, 1, 64, 64, 128, 64, jnp.float32),
+    (2, 96, 2, 2, 32, 0, 64, 64, jnp.float32),    # ragged blocks
+    (1, 200, 4, 2, 64, 50, 64, 64, jnp.float32),  # ragged + window
+    (2, 128, 4, 4, 128, 0, 128, 128, jnp.bfloat16),
+    (1, 128, 8, 2, 64, 32, 64, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hkv,dh,win,bq,bk,dtype", ATTN_CASES)
+def test_flash_attention_sweep(b, s, h, hkv, dh, win, bq, bk, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * h + win), 3)
+    q = _rand(ks[0], (b, s, h, dh), dtype)
+    k = _rand(ks[1], (b, s, hkv, dh), dtype)
+    v = _rand(ks[2], (b, s, hkv, dh), dtype)
+    got = ops.flash_attention(q, k, v, window=win, block_q=bq, block_k=bk,
+                              interpret=True)
+    want = ref.attention(q, k, v, window=win)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@given(st.integers(1, 3), st.sampled_from([64, 96, 160]),
+       st.sampled_from([1, 2, 4]))
+@settings(max_examples=8)
+def test_flash_attention_property(b, s, hkv):
+    h = hkv * 2
+    ks = jax.random.split(jax.random.fold_in(KEY, b * s + hkv), 3)
+    q = _rand(ks[0], (b, s, h, 32), jnp.float32)
+    k = _rand(ks[1], (b, s, hkv, 32), jnp.float32)
+    v = _rand(ks[2], (b, s, hkv, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_attention_q_offset():
+    """Decode-style: 1 query at offset attends the full prefix."""
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (1, 8, 2, 32), jnp.float32)
+    k = _rand(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = _rand(ks[2], (1, 64, 2, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, q_offset=56, block_q=8, block_k=32,
+                              interpret=True)
+    want = ref.attention(q, k, v, q_offset=56)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------- rglru
+
+RGLRU_CASES = [
+    (2, 64, 128, 32, 64, jnp.float32),
+    (1, 100, 96, 32, 64, jnp.float32),   # ragged both dims
+    (3, 256, 512, 128, 256, jnp.float32),
+    (2, 64, 128, 64, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,d,bs,bd,dtype", RGLRU_CASES)
+def test_rglru_sweep(b, s, d, bs, bd, dtype):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, s + d))
+    a = jax.nn.sigmoid(jax.random.normal(k1, (b, s, d))).astype(dtype)
+    x = _rand(k2, (b, s, d), dtype)
+    got = ops.rglru(a, x, block_s=bs, block_d=bd, interpret=True)
+    want = ref.rglru(a.astype(jnp.float32), x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want),
+                               atol=_tol(dtype) * 4, rtol=_tol(dtype) * 4)
+
+
+# ---------------------------------------------------------------- rwkv6
+
+WKV_CASES = [
+    (2, 64, 2, 64, 32, jnp.float32),
+    (1, 96, 4, 32, 48, jnp.float32),    # ragged chunks
+    (2, 128, 2, 64, 128, jnp.float32),
+    (1, 64, 2, 64, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,dh,bs,dtype", WKV_CASES)
+def test_rwkv6_sweep(b, s, h, dh, bs, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * h), 5)
+    r = _rand(ks[0], (b, s, h, dh), dtype)
+    k = (_rand(ks[1], (b, s, h, dh), dtype) * 0.3).astype(dtype)
+    v = _rand(ks[2], (b, s, h, dh), dtype)
+    w = jax.nn.sigmoid(
+        jax.random.normal(ks[3], (b, s, h, dh)) * 0.5 + 2).astype(dtype)
+    u = (_rand(ks[4], (h, dh), dtype) * 0.1).astype(dtype)
+    got = ops.rwkv6(r, k, v, w, u, block_s=bs, interpret=True)
+    want = ref.wkv6(r, k, v, w, u)
+    rel = np.max(np.abs(np.asarray(got, np.float32) - np.asarray(want))) \
+        / (np.max(np.abs(np.asarray(want))) + 1e-9)
+    assert rel < (5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_rwkv6_state_continuity():
+    """Chunked kernel must carry state across chunk boundaries exactly."""
+    ks = jax.random.split(KEY, 5)
+    b, s, h, dh = 1, 128, 2, 32
+    r = _rand(ks[0], (b, s, h, dh), jnp.float32)
+    k = _rand(ks[1], (b, s, h, dh), jnp.float32) * 0.3
+    v = _rand(ks[2], (b, s, h, dh), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, dh)) * 0.5 + 2)
+    u = _rand(ks[4], (h, dh), jnp.float32) * 0.1
+    small = ops.rwkv6(r, k, v, w, u, block_s=16, interpret=True)
+    big = ops.rwkv6(r, k, v, w, u, block_s=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(small), np.asarray(big), atol=1e-5)

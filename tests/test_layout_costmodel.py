@@ -1,0 +1,100 @@
+"""DRAM layout model (Fig. 6) + analytic cost model properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.costmodel import part_layer_cost
+from repro.core.hardware import PAPER_4X4, PAPER_BEST, HwConfig
+from repro.core.ir import conv, matmul
+from repro.core.layout import (DataLayout, enumerate_layouts, mean_bursts,
+                               sequential_access_cost, tile_access_cost)
+
+
+def test_fig6_burst_counts():
+    """Paper Fig. 6: 3x3 window over 2 of 4 channels, 4 values/burst."""
+    fm, tile = (1, 4, 5, 5), (1, 2, 3, 3)
+    b_bchw, _ = tile_access_cost(fm, tile, DataLayout("BCHW", 1), 4, 512)
+    b_c2, _ = tile_access_cost(fm, tile, DataLayout("BCHW", 2), 4, 512)
+    assert b_bchw == 9.0      # 6 runs of 3 @ 1.5 bursts
+    assert b_c2 == 6.0        # 3 runs of 6 @ 2 bursts (2-aligned)
+    assert b_c2 < b_bchw
+
+
+def test_contiguous_tile_is_sequential():
+    """A whole-fmap tile in BCHW must cost the sequential minimum."""
+    fm = (4, 16, 8, 8)
+    n = 4 * 16 * 8 * 8
+    bursts, rows = tile_access_cost(fm, fm, DataLayout("BCHW", 1), 32, 1024)
+    sb, sr = sequential_access_cost(n, 32, 1024)
+    # tile model averages over start alignments: within one burst of ideal
+    assert sb <= bursts <= sb + 1
+    assert rows == sr
+
+
+@given(st.integers(1, 16), st.integers(1, 32), st.integers(1, 12),
+       st.integers(1, 12))
+def test_burst_bounds(g, c, th, tw):
+    """bursts >= values/burst_width and <= values (one value per burst)."""
+    fm = (1, 32, 16, 16)
+    tile = (1, c, th, tw)
+    burst = 8
+    for dl in (DataLayout("BCHW", g), DataLayout("BHWC")):
+        bursts, rows = tile_access_cost(fm, tile, dl, burst, 2048)
+        vals = min(c, 32) * min(th, 16) * min(tw, 16)
+        assert bursts >= vals / burst - 1e-6
+        assert bursts <= vals + burst
+        assert rows >= 1.0
+
+
+@given(st.sampled_from([1, 2, 3, 5, 8, 13, 21]), st.integers(1, 8))
+def test_mean_bursts_monotone(run, align):
+    a = mean_bursts(run, align, 8)
+    b = mean_bursts(run + 8, align, 8)
+    assert b >= a + 1 - 1e-9  # 8 more values = at least one more burst
+
+
+def test_cost_model_compute_napkin():
+    """64x64 3x3 conv on 56x56 @ 32x32 PEs -> exact cycle count."""
+    l = conv("c", 1, 64, 56, 56, 64)
+    pc = part_layer_cost(PAPER_4X4, l, DataLayout("BCHW", 8),
+                         DataLayout("BCHW", 8))
+    want_cycles = 2 * 2 * 9 * 56 * 56  # ceil(64/32)^2 * HKWK * P*Q
+    assert abs(pc.compute_s * PAPER_4X4.cons.freq_hz - want_cycles) < 1
+    assert pc.latency_s >= pc.compute_s
+    assert pc.latency_s >= pc.dram_s
+
+
+def test_bigger_pe_array_not_slower():
+    l = conv("c", 1, 128, 28, 28, 128)
+    dl = DataLayout("BCHW", 8)
+    small = part_layer_cost(PAPER_4X4.replace(pea_row=16, pea_col=16), l, dl, dl)
+    big = part_layer_cost(PAPER_4X4.replace(pea_row=64, pea_col=64), l, dl, dl)
+    assert big.compute_s <= small.compute_s
+
+
+def test_bigger_buffers_not_more_dram():
+    l = conv("c", 1, 256, 28, 28, 256)
+    dl = DataLayout("BCHW", 8)
+    small = part_layer_cost(PAPER_4X4.replace(wbuf_kib=8, ibuf_kib=8,
+                                              obuf_kib=8), l, dl, dl)
+    big = part_layer_cost(PAPER_4X4.replace(wbuf_kib=512, ibuf_kib=512,
+                                            obuf_kib=512), l, dl, dl)
+    assert big.dram_bytes <= small.dram_bytes + 1
+
+
+def test_dl_changes_dram_cost():
+    l = conv("c", 1, 32, 112, 112, 32)
+    costs = {dl.short(): part_layer_cost(PAPER_4X4, l, dl, dl).dram_s
+             for dl in enumerate_layouts(32, 16)}
+    assert len(set(costs.values())) > 1  # layout matters
+
+
+def test_area_model_anchors():
+    assert PAPER_BEST.area_legal()
+    assert PAPER_4X4.area_legal()
+    big = HwConfig(16, 16, 256, 256, 2048, 2048, 2048)
+    assert not big.area_legal()
+    assert big.area_mm2() > 1000

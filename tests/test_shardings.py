@@ -1,0 +1,77 @@
+"""Sharding rules: divisibility guards, spec structure, constrain no-op."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.distributed import shardings as shd
+from repro.nn import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+def one_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_param_specs_match_structure():
+    cfg = get_config("qwen2_0_5b").reduced()
+    params = T.init_params(cfg, KEY)
+    mesh = one_device_mesh()
+    specs = shd.param_specs(cfg, params, mesh)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert isinstance(s, P)
+        assert len(s) <= p.ndim
+
+
+def test_specs_drop_non_divisible_axes():
+    cfg = get_config("qwen2_0_5b").reduced()
+    params = T.init_params(cfg, KEY)
+    # a fake big mesh object for divisibility checks only
+    devs = jax.devices() * 1
+    mesh = one_device_mesh()
+    specs = shd.param_specs(cfg, params, mesh)
+    # every axis with mesh size 1 must be dropped (None)
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert all(a is None for a in s)
+
+
+def test_constrain_is_noop_outside_mesh():
+    x = jnp.ones((4, 8))
+    y = shd.constrain(x, ("data",), "model")
+    assert (x == y).all()
+
+
+def test_constrain_inside_mesh():
+    mesh = one_device_mesh()
+    with jax.sharding.set_mesh(mesh):
+        x = jnp.ones((4, 8))
+        y = shd.constrain(x, ("data",), "model")
+        assert y.shape == x.shape
+
+
+def test_attn_constraints_shapes_preserved():
+    mesh = one_device_mesh()
+    with jax.sharding.set_mesh(mesh):
+        q = jnp.ones((2, 16, 14, 64))
+        k = jnp.ones((2, 16, 2, 64))
+        v = jnp.ones((2, 16, 2, 64))
+        q2, k2, v2 = shd.attn_constraints(q, k, v)
+        assert q2.shape == q.shape and k2.shape == k.shape
+
+
+def test_cache_specs_cover_all_families():
+    mesh = one_device_mesh()
+    for arch in ("qwen2_0_5b", "rwkv6_1_6b", "recurrentgemma_2b"):
+        cfg = get_config(arch).reduced()
+        cache = T.init_cache(cfg, 2, 32)
+        specs = shd.cache_specs(cfg, mesh, cache)
+        flat_c = jax.tree.leaves(cache)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_c) == len(flat_s)

@@ -1,0 +1,43 @@
+"""End-to-end behaviour tests for the whole system (paper Fig. 7 loop)."""
+
+import numpy as np
+import pytest
+
+from repro.core.dse import WorkloadEvaluator, run_dse
+from repro.core.surrogates import make_strategy
+from repro.core.tuner import PimTuner
+from repro.core.workloads import googlenet
+
+
+@pytest.fixture(scope="module")
+def evaluator():
+    return WorkloadEvaluator(
+        [googlenet(1, scale=8)],
+        mapper_kwargs=dict(max_optim_iter=1, lm_cap=40, n_wr=3))
+
+
+def test_dse_loop_runs_and_records(evaluator):
+    tuner = PimTuner(n_sample=256, seed=0)
+    res = run_dse(tuner, evaluator, iterations=4)
+    evals = [o for o in res.observations if o.cost is not None]
+    assert len(evals) >= 3
+    best = res.best()
+    assert best.area_mm2 <= 48.0
+    assert best.cost > 0
+    q = res.quality_curve()
+    assert len(q) >= 3 and q[-1] >= q[0]  # best-3 quality is monotone
+
+
+def test_dse_strategies_share_interface(evaluator):
+    for name in ("random", "simanneal", "gp", "gbt"):
+        strat = make_strategy(name, seed=1, n_sample=128)
+        res = run_dse(strat, evaluator, iterations=2)
+        assert any(o.cost is not None for o in res.observations), name
+
+
+def test_evaluator_cache(evaluator):
+    from repro.core.hardware import PAPER_4X4
+    c1, _, _ = evaluator(PAPER_4X4)
+    c2, _, _ = evaluator(PAPER_4X4)
+    assert c1 == c2
+    assert PAPER_4X4.as_tuple() in evaluator._cache
