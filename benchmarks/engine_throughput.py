@@ -1,0 +1,114 @@
+"""Engine throughput: batched vs scalar cost-model evaluation (configs/sec).
+
+The scalar baseline is exactly what the per-candidate DSE loop does today:
+one ``part_layer_cost`` Python call per (config, part-layer) point.  The
+batched path scores the same fig9-style sweep — N sampled hardware configs
+x L part-layers from the workload nets — in one ``engine.batch_part_cost``
+pipeline.  Reported ``configs/sec`` numbers feed the perf trajectory in
+EXPERIMENTS.md; the engine tests separately pin the 1e-6 parity contract,
+so this benchmark is purely about throughput.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core.costmodel import part_layer_cost
+from repro.core.layout import DataLayout
+from repro.core.partition import enumerate_lms, part_layer
+from repro.core.tuner import sample_configs
+from repro.core.workloads import googlenet, resnet50
+from repro.engine.batch_cost import PartSpec, batch_part_cost
+
+
+def _default_dl(channels: int) -> DataLayout:
+    """Mirror of ``PimMapper._default_dl`` — the mapper's starting layout."""
+    g = 1
+    while g * 2 <= min(channels, 16):
+        g *= 2
+    return DataLayout("BCHW", g)
+
+
+def make_specs(n_layers: int = 12) -> list[PartSpec]:
+    """Representative part-layers: mapper-style partitions of real nets."""
+    layers = []
+    for g in (googlenet(1, scale=4), resnet50(1, scale=4)):
+        layers += [l for l in g.layers if l.is_heavy]
+    specs = []
+    for l in layers[:n_layers]:
+        lm = enumerate_lms(l, 4, 8, cap=3)[0]
+        pl = part_layer(l, lm)
+        specs.append(PartSpec(pl, _default_dl(pl.C), _default_dl(pl.K)))
+    return specs
+
+
+def _unique_configs(n: int, rng) -> list:
+    seen, outs = set(), []
+    while len(outs) < n:
+        for c in sample_configs(n, rng):
+            t = c.as_tuple()
+            if t not in seen:
+                seen.add(t)
+                outs.append(c)
+            if len(outs) >= n:
+                break
+    return outs
+
+
+def run(n_configs: int = 192, n_layers: int = 12, seed: int = 0,
+        chunk: int = 64, scalar_configs: int | None = None) -> list[dict]:
+    """Time scalar loop vs batched engine on the same (config, layer) grid.
+
+    ``scalar_configs`` caps how many configs the scalar loop times (it is
+    the slow side; the measured per-config rate extrapolates linearly).
+    """
+    rng = np.random.default_rng(seed)
+    configs = _unique_configs(n_configs, rng)
+    specs = make_specs(n_layers)
+
+    # ---- scalar per-candidate loop (the pre-engine DSE hot path) ----------
+    n_scalar = min(scalar_configs or n_configs, n_configs)
+    part_layer_cost.cache_clear()
+    t0 = time.perf_counter()
+    for c in configs[:n_scalar]:
+        for s in specs:
+            part_layer_cost(c, s.layer, s.dl_in, s.dl_out)
+    scalar_s = time.perf_counter() - t0
+    scalar_cps = n_scalar / scalar_s
+
+    # ---- batched engine ----------------------------------------------------
+    t0 = time.perf_counter()
+    batch_part_cost(configs, specs, chunk=chunk)
+    cold_s = time.perf_counter() - t0          # includes XLA compile
+    t0 = time.perf_counter()
+    batch_part_cost(configs, specs, chunk=chunk)
+    warm_s = time.perf_counter() - t0
+    warm_cps = n_configs / warm_s
+
+    return [{
+        "table": "engine", "n_configs": n_configs, "n_layers": n_layers,
+        "scalar_s": scalar_s, "scalar_configs": n_scalar,
+        "scalar_configs_per_s": scalar_cps,
+        "batched_cold_s": cold_s, "batched_warm_s": warm_s,
+        "batched_configs_per_s": warm_cps,
+        "speedup": warm_cps / scalar_cps,
+    }]
+
+
+def main(n_configs: int = 192, n_layers: int = 12) -> None:
+    r = run(n_configs=n_configs, n_layers=n_layers)[0]
+    print(f"engine_scalar,{1e6 / r['scalar_configs_per_s']:.1f},"
+          f"configs_per_s={r['scalar_configs_per_s']:.1f}")
+    print(f"engine_batched,{1e6 / r['batched_configs_per_s']:.1f},"
+          f"configs_per_s={r['batched_configs_per_s']:.1f} "
+          f"speedup={r['speedup']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

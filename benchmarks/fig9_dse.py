@@ -6,40 +6,41 @@ five workload DNNs (the full-size nets cost minutes per architecture —
 the strategy ranking, which is what Fig. 9 shows, is preserved).
 Quality metric matches the paper: mean reciprocal cost of the best 3
 architectures seen so far, cost = EDP (alpha = beta = 1).
+
+The strategies run as one :class:`repro.engine.campaign.Campaign`: a shared
+content-addressed evaluation cache (costs are deterministic per config, so
+sharing cannot bias any strategy — it only avoids re-mapping configs several
+strategies visit), a shared Pareto front over (latency, energy, area), and
+optional JSON checkpoint/resume via ``checkpoint=``.
 """
 
 from __future__ import annotations
 
-import time
-
-from repro.core.dse import WorkloadEvaluator, run_dse
-from repro.core.surrogates import make_strategy
+from repro.engine.campaign import Campaign
 from repro.core.workloads import bert_base, googlenet, resnet50
 
 STRATEGIES = ("nicepim", "random", "simanneal", "gp", "xgboost")
 
+MAPPER_KWARGS = dict(max_optim_iter=1, lm_cap=60, n_wr=3)
 
-def make_evaluator(tiny: bool = False) -> WorkloadEvaluator:
+
+def _nets(tiny: bool = False):
     if tiny:
-        nets = [googlenet(1, scale=8)]
-    else:
-        nets = [googlenet(1, scale=4), resnet50(1, scale=4),
-                bert_base(1, seq=64, n_layers=2, n_heads=4)]
-    return WorkloadEvaluator(
-        nets, mapper_kwargs=dict(max_optim_iter=1, lm_cap=60, n_wr=3))
+        return [googlenet(1, scale=8)]
+    return [googlenet(1, scale=4), resnet50(1, scale=4),
+            bert_base(1, seq=64, n_layers=2, n_heads=4)]
 
 
 def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
-        strategies=STRATEGIES) -> list[dict]:
+        strategies=STRATEGIES, checkpoint=None) -> list[dict]:
+    campaign = Campaign(
+        _nets(tiny), strategies, iterations=iterations, seed=seed,
+        n_sample=512, evaluator_kwargs=dict(mapper_kwargs=dict(MAPPER_KWARGS)),
+        checkpoint=checkpoint)
+    out = campaign.run()
     rows = []
-    # one shared evaluator: costs are deterministic per config, so sharing
-    # the cache cannot bias any strategy — it only avoids re-mapping configs
-    # that several strategies happen to visit
-    evaluator = make_evaluator(tiny)
     for name in strategies:
-        strat = make_strategy(name, seed=seed, n_sample=512)
-        t0 = time.time()
-        res = run_dse(strat, evaluator, iterations=iterations)
+        res = out.results[name]
         q = res.quality_curve()
         best = res.best()
         rows.append({
@@ -49,14 +50,22 @@ def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
             "quality_mid": q[len(q) // 2] if q else 0.0,
             "best_cost": best.cost,
             "best_cfg": best.cfg.as_tuple(),
-            "solve_s": time.time() - t0,
+            "solve_s": out.timings_s.get(name, 0.0),
             "curve": q,
         })
+    rows.append({
+        "table": "fig9", "strategy": "pareto",
+        "iterations": iterations,
+        "pareto_size": len(out.pareto),
+        "pareto": out.pareto.to_jsonable(),
+        "cache": out.cache_stats,
+    })
     return rows
 
 
 def main(iterations: int = 12, tiny: bool = False) -> None:
-    rows = run(iterations=iterations, tiny=tiny)
+    rows = [r for r in run(iterations=iterations, tiny=tiny)
+            if r["strategy"] != "pareto"]
     base = [r for r in rows if r["strategy"] == "random"][0]["quality_final"]
     for r in rows:
         rel = r["quality_final"] / max(base, 1e-30)

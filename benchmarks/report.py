@@ -138,7 +138,8 @@ def paper_section() -> str:
                          f"**{-avg[0]['latency_reduction']:.0%}** | | | "
                          f"**{-avg[0]['energy_reduction']:.0%}** |")
         lines.append("")
-    fig9 = [r for r in rows if r.get("table") == "fig9"]
+    fig9 = [r for r in rows
+            if r.get("table") == "fig9" and "quality_final" in r]
     if fig9:
         lines += ["### Fig. 9 — DSE quality (mean 1/cost of best-3; "
                   "higher is better)", "",
@@ -149,6 +150,23 @@ def paper_section() -> str:
             lines.append(f"| {r['strategy']} | {r['quality_final']:.3e} | "
                          f"{r['quality_final'] / max(base, 1e-30):.2f}x |")
         lines.append("")
+    par = next((r for r in rows if r.get("table") == "fig9"
+                and r.get("strategy") == "pareto"), None)
+    if par:
+        lines += [f"Campaign Pareto front: {par['pareto_size']} points; "
+                  f"eval cache: {par['cache']['hits']} hits / "
+                  f"{par['cache']['misses']} misses.", ""]
+    eng = [r for r in rows if r.get("table") == "engine"]
+    if eng:
+        r = eng[-1]
+        lines += ["### Engine — batched vs scalar cost-model throughput", "",
+                  "| path | configs/sec | speedup |", "|---|---|---|",
+                  f"| scalar per-candidate loop | "
+                  f"{r['scalar_configs_per_s']:.1f} | 1.0x |",
+                  f"| batched engine ({r['n_configs']} cfgs x "
+                  f"{r['n_layers']} part-layers) | "
+                  f"{r['batched_configs_per_s']:.1f} | "
+                  f"{r['speedup']:.1f}x |", ""]
     fig11 = [r for r in rows if r.get("table") == "fig11"]
     if fig11:
         lines += ["### Fig. 11 — throughput vs DDAM-lite "

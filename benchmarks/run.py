@@ -18,7 +18,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
-from benchmarks import fig9_dse, fig10_mapper, fig11_ddam, fig12_scheduler
+from benchmarks import (engine_throughput, fig9_dse, fig10_mapper, fig11_ddam,
+                        fig12_scheduler)
 
 
 def main() -> None:
@@ -74,17 +75,37 @@ def main() -> None:
                  f"lat_ratio={r['latency_ratio']:.1f}x")
         print(f"# fig11 took {time.time() - t0:.1f}s", flush=True)
 
+    if "engine" not in skip:
+        t0 = time.time()
+        rows = engine_throughput.run(
+            n_configs=64 if args.fast else 192,
+            scalar_configs=16 if args.fast else None)
+        all_rows += rows
+        r = rows[0]
+        emit("engine_scalar", 1e6 / r["scalar_configs_per_s"],
+             f"configs_per_s={r['scalar_configs_per_s']:.1f}")
+        emit("engine_batched", 1e6 / r["batched_configs_per_s"],
+             f"configs_per_s={r['batched_configs_per_s']:.1f} "
+             f"speedup={r['speedup']:.1f}x")
+        print(f"# engine took {time.time() - t0:.1f}s", flush=True)
+
     if "fig9" not in skip:
         t0 = time.time()
         rows = fig9_dse.run(iterations=args.fig9_iters, tiny=not args.full)
         all_rows += rows
-        base = next((r["quality_final"] for r in rows
+        curves = [r for r in rows if "quality_final" in r]
+        base = next((r["quality_final"] for r in curves
                      if r["strategy"] == "random"), 1e-30)
-        for r in rows:
+        for r in curves:
             emit(f"fig9_{r['strategy']}",
                  r["solve_s"] * 1e6 / max(1, r["iterations"]),
                  f"quality={r['quality_final']:.3e} "
                  f"vs_random={r['quality_final'] / max(base, 1e-30):.2f}x")
+        pareto = next((r for r in rows if r["strategy"] == "pareto"), None)
+        if pareto:
+            emit("fig9_pareto", 0.0,
+                 f"front={pareto['pareto_size']} "
+                 f"cache_hits={pareto['cache']['hits']}")
         print(f"# fig9 took {time.time() - t0:.1f}s", flush=True)
 
     out = ROOT / "experiments" / "paper_benchmarks.json"

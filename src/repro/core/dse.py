@@ -80,22 +80,51 @@ class DseResult:
 
 
 class WorkloadEvaluator:
-    """Maps + schedules every workload on a config; caches by config tuple."""
+    """Maps + schedules every workload on a config; caches by config tuple.
+
+    An optional :class:`repro.engine.cache.EvalCache` adds content-addressed
+    memoization shared across strategies / processes / checkpoint resumes on
+    top of the per-instance tuple cache.
+    """
 
     def __init__(self, workloads: list[DnnGraph], *, alpha: float = 1.0,
                  beta: float = 1.0, gamma: float = 1.0,
-                 mapper_kwargs: dict | None = None):
+                 mapper_kwargs: dict | None = None, cache=None):
         self.workloads = workloads
         self.alpha = alpha
         self.beta = beta
         self.gamma = gamma
         self.mapper_kwargs = mapper_kwargs or {}
         self._cache: dict[tuple, tuple[float, dict, dict]] = {}
+        self.cache = cache
+        self._wl_digest: str | None = None
+        self.evaluations = 0   # mapper runs actually performed
+
+    def _content_key(self, cfg: HwConfig) -> str:
+        from ..engine.cache import _sha, hw_digest, workloads_digest
+        if self._wl_digest is None:
+            # the result depends on the cost-function exponents and every
+            # mapper knob, not just (hw, workloads) — key them all
+            self._wl_digest = _sha({
+                "workloads": workloads_digest(self.workloads),
+                "alpha": self.alpha, "beta": self.beta, "gamma": self.gamma,
+                "mapper_kwargs": repr(sorted(self.mapper_kwargs.items())),
+            })
+        return hw_digest(cfg) + ":" + self._wl_digest
 
     def __call__(self, cfg: HwConfig) -> tuple[float, dict, dict]:
         key = cfg.as_tuple()
         if key in self._cache:
             return self._cache[key]
+        ckey = None
+        if self.cache is not None:
+            ckey = self._content_key(cfg)
+            hit = self.cache.get(ckey)
+            if hit is not None:
+                out = (hit[0], dict(hit[1]), dict(hit[2]))
+                self._cache[key] = out
+                return out
+        self.evaluations += 1
         mapper = PimMapper(cfg, **self.mapper_kwargs)
         lats: dict[str, float] = {}
         ens: dict[str, float] = {}
@@ -113,38 +142,65 @@ class WorkloadEvaluator:
                 * self.gamma
         out = (cost, lats, ens)
         self._cache[key] = out
+        if ckey is not None:
+            self.cache.put(ckey, out)
         return out
 
 
 def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
             propose_k: int = 8,
             cons: PimConstraints = DEFAULT_CONSTRAINTS,
-            verbose: bool = False) -> DseResult:
+            verbose: bool = False, pareto=None, start_iteration: int = 0,
+            on_iteration=None) -> DseResult:
+    """One strategy's DSE loop (Fig. 7).
+
+    The whole proposal batch is area-checked in one vectorized call
+    (``engine.batch_cost.batch_area_mm2``) instead of one ``area_mm2()``
+    per candidate.  ``pareto`` (anything with ``.offer``) receives a
+    latency/energy/area :class:`ParetoPoint` per legal finite observation;
+    ``on_iteration(it, new_obs)`` fires after every iteration (campaign
+    checkpointing); ``start_iteration`` supports checkpoint resume.
+    """
+    from ..engine.batch_cost import batch_area_mm2
     obs: list[Observation] = []
-    for it in range(iterations):
+    for it in range(start_iteration, iterations):
         t0 = time.time()
+        it_obs: list[Observation] = []
         props = strategy.propose(propose_k)
         chosen = None
-        # area-check one-by-one until a legal architecture appears (Fig. 7-4)
-        for cfg in props:
-            area = cfg.area_mm2()
+        areas = batch_area_mm2(props)
+        # walk the batch in proposal order until a legal architecture
+        # appears (Fig. 7-4); illegal prefixes still train the filter model
+        for cfg, area in zip(props, areas):
+            area = float(area)
             legal = area <= cons.area_budget_mm2
             if legal:
                 chosen = (cfg, area)
                 break
             strategy.observe(cfg, area, None)
-            obs.append(Observation(it, cfg, area, False))
+            it_obs.append(Observation(it, cfg, area, False))
         if chosen is None:
+            obs.extend(it_obs)
+            if on_iteration is not None:
+                on_iteration(it, it_obs)
             continue
         cfg, area = chosen
         cost, lats, ens = evaluator(cfg)
         if math.isinf(cost):
             strategy.observe(cfg, area, None)
-            obs.append(Observation(it, cfg, area, True))
+            it_obs.append(Observation(it, cfg, area, True))
         else:
             strategy.observe(cfg, area, cost)
-            obs.append(Observation(it, cfg, area, True, cost, lats, ens))
+            it_obs.append(Observation(it, cfg, area, True, cost, lats, ens))
+            if pareto is not None:
+                from ..engine.pareto import ParetoPoint
+                pareto.offer(ParetoPoint(sum(lats.values()),
+                                         sum(ens.values()), area,
+                                         payload=list(cfg.as_tuple())))
         strategy.fit()
+        obs.extend(it_obs)
+        if on_iteration is not None:
+            on_iteration(it, it_obs)
         if verbose:
             print(f"[dse:{getattr(strategy, 'name', 'nicepim')}] it={it} "
                   f"cfg={cfg.as_tuple()} area={area:.1f} "

@@ -62,17 +62,24 @@ def enumerate_layouts(C: int, max_group: int = 32) -> list[DataLayout]:
     return outs
 
 
-@lru_cache(maxsize=None)
-def _burst_offsets(align: int, burst: int) -> np.ndarray:
-    step = math.gcd(max(1, int(align)), int(burst))
-    return np.arange(0, burst, step, dtype=np.float64)
-
-
 def mean_bursts(run_len, align: int, burst: int):
-    """Alignment-averaged bursts to read a contiguous run (vectorizable)."""
-    offs = _burst_offsets(align, burst)
+    """Alignment-averaged bursts to read a contiguous run (vectorizable).
+
+    Closed form of the mean over start offsets ``{0, g, .., burst-g}`` (with
+    ``g = gcd(align, burst)``) of ``ceil((off + run) / burst)``: writing
+    ``run = q*burst + r`` with ``r`` in ``(0, burst]``, an offset adds one
+    extra burst exactly when ``off > burst - r``, so the mean is ``q + 1``
+    plus the fraction of the ``m = burst/g`` offsets past that point.  O(1)
+    per run instead of O(burst/gcd) — this is the inner loop of the batched
+    DSE engine (engine/batch_cost mirrors this formula in JAX).
+    """
+    g = math.gcd(max(1, int(align)), int(burst))
+    m = burst // g
     run = np.asarray(run_len, dtype=np.float64)
-    return np.ceil((offs + run[..., None]) / burst).mean(axis=-1)
+    q = np.ceil(run / burst) - 1.0
+    r = run - q * burst                          # residual in (0, burst]
+    over = m - 1.0 - np.floor((burst - r) / g)   # offsets costing 1 extra
+    return q + 1.0 + over / m
 
 
 def access_pattern(fmap, tb, tc, th, tw, order: str, group: int):

@@ -410,8 +410,11 @@ def _sharing_latency(hw: HwConfig, lm: LM, region_shape: tuple[int, int],
         sets = [s for s in sets if len(s) > 1]
         if not sets or chunk <= 0:
             return
+        # every solver draws from an explicit Random(seed): repeated DSE
+        # runs over the same mapping are bit-reproducible
         res = solve(noc, sets, [chunk] * len(sets), hw.link_bw_bytes,
-                    hw.cons.freq_hz, hw.cons.noc_energy_pj_per_bit_hop)
+                    hw.cons.freq_hz, hw.cons.noc_energy_pj_per_bit_hop,
+                    seed=seed)
         lat += res.latency_s
         en += res.energy_pj
 

@@ -66,9 +66,15 @@ def _finish(noc: MeshNoc, cycles, chunks, link_bw: float, freq: float,
 def solve_ilp_ls(noc: MeshNoc, sharing_sets: list[list[int]],
                  chunk_bytes: list[float], link_bw: float, freq: float,
                  pj_per_bit_hop: float, *, seed: int = 0,
-                 restarts: int = 4, iters: int = 400) -> ScheduleResult:
-    """Joint min-max-link-load Hamilton cycle selection (paper Eq. 2–4)."""
-    rng = random.Random(seed)
+                 restarts: int = 4, iters: int = 400,
+                 rng: random.Random | None = None) -> ScheduleResult:
+    """Joint min-max-link-load Hamilton cycle selection (paper Eq. 2–4).
+
+    The multi-restart 2-opt search draws every random choice from one
+    explicit ``random.Random`` — pass ``rng`` (or ``seed``) to make repeated
+    DSE runs reproducible; the global ``random`` state is never touched.
+    """
+    rng = rng if rng is not None else random.Random(seed)
     small = all(len(s) <= 7 for s in sharing_sets) and len(sharing_sets) == 1
     if small:
         return _solve_exact(noc, sharing_sets, chunk_bytes, link_bw, freq,
@@ -153,8 +159,12 @@ def _solve_exact(noc: MeshNoc, sharing_sets, chunk_bytes, link_bw, freq,
 
 def solve_tsp(noc: MeshNoc, sharing_sets: list[list[int]],
               chunk_bytes: list[float], link_bw: float, freq: float,
-              pj_per_bit_hop: float) -> ScheduleResult:
-    """Per-set min-total-hop Hamilton cycle (the TSP method of [47])."""
+              pj_per_bit_hop: float, *, seed: int = 0,
+              rng: random.Random | None = None) -> ScheduleResult:
+    """Per-set min-total-hop Hamilton cycle (the TSP method of [47]).
+
+    Deterministic; ``seed``/``rng`` accepted for SOLVERS signature parity.
+    """
     cycles = []
     for s in sharing_sets:
         cyc = _nearest_neighbor_cycle(noc, s)
@@ -194,8 +204,12 @@ def _two_opt_distance(noc: MeshNoc, cyc: list[int]) -> list[int]:
 
 def solve_shp(noc: MeshNoc, sharing_sets: list[list[int]],
               chunk_bytes: list[float], link_bw: float, freq: float,
-              pj_per_bit_hop: float) -> ScheduleResult:
-    """Shortest-path unicast: every chunk goes owner→consumer directly."""
+              pj_per_bit_hop: float, *, seed: int = 0,
+              rng: random.Random | None = None) -> ScheduleResult:
+    """Shortest-path unicast: every chunk goes owner→consumer directly.
+
+    Deterministic; ``seed``/``rng`` accepted for SOLVERS signature parity.
+    """
     tr: list[tuple[int, int, float]] = []
     for s, ch in zip(sharing_sets, chunk_bytes):
         for src in s:

@@ -1,0 +1,26 @@
+"""Batched DSE evaluation engine.
+
+Turns the scalar per-candidate DSE hot path into a batched, JAX-native
+pipeline:
+
+* :mod:`.batch_cost` — vmapped/jitted reimplementation of the analytic
+  tiling/DRAM/compute cost that scores ``[configs, part-layers]`` in one
+  call (Pallas inner reduction, 1e-6 parity with ``core.costmodel``).
+* :mod:`.pareto` — streaming latency/energy/area Pareto-frontier tracker.
+* :mod:`.cache` — content-addressed memoization of mapper/scheduler results
+  keyed by (HwConfig, DnnGraph) digests.
+* :mod:`.campaign` — multi-strategy, multi-workload DSE campaigns with JSON
+  checkpoint/resume.
+"""
+
+from .batch_cost import (BatchCostResult, PartSpec, batch_area_mm2,
+                         batch_max_link_load, batch_part_cost)
+from .cache import EvalCache, graph_digest, hw_digest
+from .pareto import ParetoFront, ParetoPoint
+from .campaign import Campaign, CampaignResult
+
+__all__ = [
+    "BatchCostResult", "PartSpec", "batch_area_mm2", "batch_max_link_load",
+    "batch_part_cost", "EvalCache", "graph_digest", "hw_digest",
+    "ParetoFront", "ParetoPoint", "Campaign", "CampaignResult",
+]

@@ -1,0 +1,517 @@
+"""Batched (vmapped/jitted) reimplementation of ``core.costmodel``.
+
+``batch_part_cost`` scores a ``[N configs] x [L part-layers]`` grid through
+the analytic tiling/DRAM/compute model in one JAX call instead of ``N * L``
+scalar Python calls.  The computation mirrors ``costmodel.part_layer_cost``
+operation-for-operation in float64 (``jax.experimental.enable_x64``), so the
+batched result matches the scalar reference within 1e-6 relative tolerance —
+including the chosen tiling and loop order — which the engine tests enforce.
+
+Host-side preprocessing builds, per part-layer, the same power-of-two tiling
+candidate grid the scalar model searches (padded to a common ``T`` with a
+validity mask); the per-candidate ``max(compute, dram)`` bottleneck and the
+first-argmin over candidates run in the Pallas kernel
+``kernels.dse_eval.tile_select`` (``interpret=True`` off-TPU).
+
+Batch axes:
+  * configs vary ``pea_row/pea_col``, the three buffer sizes, and the
+    DRAM port geometry (``burst_words`` / ``row_words``) — everything a
+    Fig. 9 sweep explores;
+  * part-layers vary the full conv loop nest plus the in/out
+    :class:`~repro.core.layout.DataLayout`.
+
+All configs in one batch must share the same :class:`PimConstraints`
+(true for any single DSE campaign).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..core.costmodel import (MAC_ENERGY_PJ, PartCost, _sram_pj_per_bit,
+                              _tile_candidates)
+from ..core.hardware import HwConfig
+from ..core.ir import Layer
+from ..core.layout import DataLayout
+from ..kernels import dse_eval
+
+INF = float("inf")
+
+
+@dataclass(frozen=True)
+class PartSpec:
+    """One row of the layer axis: a part-layer plus its DRAM layouts."""
+
+    layer: Layer
+    dl_in: DataLayout
+    dl_out: DataLayout
+
+
+# ---------------------------------------------------------------------------
+# Host-side preprocessing
+# ---------------------------------------------------------------------------
+
+
+def _candidate_grid(layer: Layer):
+    """The exact candidate tiling grid of ``part_layer_cost`` (same order)."""
+    tks = np.array(_tile_candidates(layer.K), dtype=np.int64)
+    tcs = np.array(_tile_candidates(layer.C), dtype=np.int64)
+    tps = np.array(_tile_candidates(layer.P), dtype=np.int64)
+    tqs = np.array([layer.Q], dtype=np.int64) if layer.Q <= 64 else \
+        np.array(_tile_candidates(layer.Q, cap=4), dtype=np.int64)
+    tbs = np.array(_tile_candidates(layer.B, cap=4), dtype=np.int64)
+    tb, tk, tc, tp, tq = [a.reshape(-1) for a in
+                          np.meshgrid(tbs, tks, tcs, tps, tqs, indexing="ij")]
+    return np.stack([tb, tk, tc, tp, tq], axis=0)  # [5, T_l]
+
+
+def _dl_fields(dl: DataLayout, channels: int) -> tuple[bool, int, int]:
+    """(is_bhwc, effective group, alignment) for a fmap with ``channels``."""
+    if dl.order == "BHWC":
+        return True, channels, channels
+    g = min(max(1, dl.group), channels)
+    return False, g, g
+
+
+def _prep_specs(specs: Sequence[PartSpec]):
+    """Pack L part-layer specs into padded numpy arrays."""
+    grids = [_candidate_grid(s.layer) for s in specs]
+    t_max = max(g.shape[1] for g in grids)
+    L = len(specs)
+    tiles = np.ones((5, L, t_max), dtype=np.int64)
+    valid = np.zeros((L, t_max), dtype=bool)
+    fallback = np.zeros(L, dtype=np.int64)
+    ints = {k: np.zeros(L, dtype=np.int64) for k in
+            ("B", "C", "H", "W", "K", "HK", "WK", "stride", "P", "Q",
+             "in_g", "in_align", "out_g", "out_align")}
+    flags = {k: np.zeros(L, dtype=bool) for k in
+             ("heavy", "in_bhwc", "out_bhwc")}
+    floats = {k: np.zeros(L, dtype=np.float64) for k in
+              ("macs", "w_vals", "i_vals", "o_vals")}
+    for i, s in enumerate(specs):
+        l = s.layer
+        g = grids[i]
+        t = g.shape[1]
+        tiles[:, i, :t] = g
+        valid[i, :t] = True
+        tb, tk, tc, tp, tq = g
+        th = (tp - 1) * l.stride + l.HK
+        tw = (tq - 1) * l.stride + l.WK
+        fallback[i] = int(np.argmin(tb * tc * th * tw))
+        for k in ("B", "C", "H", "W", "K", "HK", "WK", "stride", "P", "Q"):
+            ints[k][i] = getattr(l, k)
+        flags["heavy"][i] = l.is_heavy
+        floats["macs"][i] = float(l.macs)
+        floats["w_vals"][i] = float(l.weight_count)
+        floats["i_vals"][i] = float(l.B * l.C * l.H * l.W)
+        floats["o_vals"][i] = float(l.B * l.K * l.P * l.Q)
+        bh, gi, al = _dl_fields(s.dl_in, l.C)
+        flags["in_bhwc"][i], ints["in_g"][i], ints["in_align"][i] = bh, gi, al
+        bh, go, al = _dl_fields(s.dl_out, l.K)
+        flags["out_bhwc"][i], ints["out_g"][i], ints["out_align"][i] = bh, go, al
+    return {"tiles": tiles, "valid": valid, "fallback": fallback,
+            **ints, **flags, **floats}
+
+
+def _prep_configs(configs: Sequence[HwConfig]):
+    cons = configs[0].cons
+    if any(c.cons != cons for c in configs[1:]):
+        raise ValueError("all configs in a batch must share PimConstraints")
+    n = len(configs)
+    out = {k: np.zeros(n, dtype=np.int64) for k in
+           ("pea_row", "pea_col", "ibuf_kib", "wbuf_kib", "obuf_kib",
+            "burst_words", "row_words", "width_bits")}
+    sram = {k: np.zeros(n, dtype=np.float64) for k in
+            ("sram_i", "sram_w", "sram_o")}
+    dbytes = cons.data_bits // 8
+    for i, c in enumerate(configs):
+        out["pea_row"][i] = c.pea_row
+        out["pea_col"][i] = c.pea_col
+        out["ibuf_kib"][i] = c.ibuf_kib
+        out["wbuf_kib"][i] = c.wbuf_kib
+        out["obuf_kib"][i] = c.obuf_kib
+        bw = max(1, c.node_dram_width_bits // cons.data_bits)
+        out["burst_words"][i] = bw
+        out["row_words"][i] = max(
+            bw, cons.dram_row_bytes * c.banks_per_node // dbytes)
+        out["width_bits"][i] = c.node_dram_width_bits
+        sram["sram_i"][i] = _sram_pj_per_bit(c.ibuf_kib)
+        sram["sram_w"][i] = _sram_pj_per_bit(c.wbuf_kib)
+        sram["sram_o"][i] = _sram_pj_per_bit(c.obuf_kib)
+    return {**out, **sram}, cons
+
+
+# ---------------------------------------------------------------------------
+# The jitted [N, L, T] cost pipeline
+# ---------------------------------------------------------------------------
+
+
+def _mean_bursts(run, align, burst):
+    """JAX port of ``layout.mean_bursts`` (closed form, identical math)."""
+    g = jnp.gcd(jnp.maximum(align, 1), burst)
+    m = (burst // g).astype(run.dtype)
+    burst_f = burst.astype(run.dtype)
+    g_f = g.astype(run.dtype)
+    q = jnp.ceil(run / burst_f) - 1.0
+    r = run - q * burst_f
+    over = m - 1.0 - jnp.floor((burst_f - r) / g_f)
+    return q + 1.0 + over / m
+
+
+def _access_cost(fmap, tb, tc, th, tw, is_bhwc, group, align,
+                 burst, row_words):
+    """JAX port of ``layout.tile_cost_vec`` covering both orders via select.
+
+    ``fmap`` is ``(B, C, H, W)`` as f64 arrays broadcastable against the tile
+    arrays; ``is_bhwc/group/align`` are per-layer, ``burst/row_words`` per
+    config.
+    """
+    B, C, H, W = fmap
+    tb = jnp.minimum(tb, B)
+    tc = jnp.minimum(tc, C)
+    th = jnp.minimum(th, H)
+    tw = jnp.minimum(tw, W)
+    full_w = tw >= W
+    full_h = th >= H
+    full_c = tc >= C
+
+    # ---- BHWC: linear index ((b*H + h)*W + w)*C + c ------------------------
+    run_p = jnp.where(full_c, tw * C, tc)
+    nruns_p = jnp.where(full_c, tb * th, tb * th * tw)
+    run_p = jnp.where(full_c & full_w, th * W * C, run_p)
+    nruns_p = jnp.where(full_c & full_w, tb, nruns_p)
+    whole_p = full_c & full_w & full_h
+    run_p = jnp.where(whole_p, tb * H * W * C, run_p)
+    nruns_p = jnp.where(whole_p, 1.0, nruns_p)
+    span_p = jnp.where(whole_p, tb * H * W * C, ((th - 1) * W + tw) * C)
+    next_p = jnp.where(whole_p, 1.0, tb)
+
+    # ---- BCHW[Cg]: linear index (((b*(C/g) + cg)*H + h)*W + w)*g + c -------
+    g = group
+    c_groups = jnp.ceil(tc / g)
+    run_c = tw * g * jnp.ones_like(tc)
+    nruns_c = tb * c_groups * th
+    run_c = jnp.where(full_w, tw * g * th, run_c)
+    nruns_c = jnp.where(full_w, tb * c_groups, nruns_c)
+    plane = full_w & full_h
+    run_c = jnp.where(plane, H * W * g * c_groups, run_c)
+    nruns_c = jnp.where(plane, tb, nruns_c)
+    whole = plane & full_c
+    run_c = jnp.where(whole, tb * C * H * W, run_c)
+    nruns_c = jnp.where(whole, 1.0, nruns_c)
+    span_c = jnp.where(plane, run_c, ((th - 1) * W + tw) * g)
+    next_c = jnp.where(plane, nruns_c, tb * c_groups)
+
+    run = jnp.where(is_bhwc, run_p, run_c)
+    n_runs = jnp.where(is_bhwc, nruns_p, nruns_c)
+    span = jnp.where(is_bhwc, span_p, span_c)
+    n_extents = jnp.where(is_bhwc, next_p, next_c)
+
+    bursts = n_runs * _mean_bursts(run, align, burst)
+    rows = n_extents * jnp.maximum(1.0, span / row_words)
+    return bursts, rows
+
+
+@partial(jax.jit, static_argnames=("data_bits", "psum_bits", "dram_row_miss",
+                                   "interpret"))
+def _batch_cost(cfg, lay, *, data_bits: int, psum_bits: int,
+                dram_row_miss: int, interpret: bool):
+    """Score every (config, part-layer, candidate-tiling) point.
+
+    ``cfg`` arrays are [N], ``lay`` per-layer arrays [L] and tile arrays
+    [5, L, T].  Returns per-(config, layer) selections, all [N, L].
+    """
+    f64 = jnp.float64
+
+    def c3(name):  # config axis -> [N, 1, 1]
+        return cfg[name][:, None, None]
+
+    def l3(name):  # layer axis -> [1, L, 1]
+        return lay[name][None, :, None]
+
+    dbytes = data_bits // 8
+    pbytes = psum_bits // 8
+
+    TB, TK, TC, TP, TQ = [lay["tiles"][i][None] for i in range(5)]  # [1,L,T]
+    stride, HK, WK = l3("stride"), l3("HK"), l3("WK")
+    TH = (TP - 1) * stride + HK
+    TW = (TQ - 1) * stride + WK
+
+    # ---- capacity filter (int64, exactly as the scalar model) --------------
+    fits = ((TB * TC * TH * TW * dbytes * 2 <= c3("ibuf_kib") * 1024)
+            & (TK * TC * HK * WK * dbytes * 2 <= c3("wbuf_kib") * 1024)
+            & (TB * TK * TP * TQ * pbytes <= c3("obuf_kib") * 1024))
+    eligible = fits & lay["valid"][None]
+    any_fit = eligible.any(axis=-1, keepdims=True)
+    t = TB.shape[-1]
+    onehot = (jnp.arange(t)[None, None, :] == l3("fallback"))
+    mask = jnp.where(any_fit, eligible, onehot)
+
+    # ---- float views -------------------------------------------------------
+    TBf, TKf, TCf = TB.astype(f64), TK.astype(f64), TC.astype(f64)
+    TPf, TQf = TP.astype(f64), TQ.astype(f64)
+    THf, TWf = TH.astype(f64), TW.astype(f64)
+    B, C, H, W = [l3(k).astype(f64) for k in ("B", "C", "H", "W")]
+    K, P, Q = [l3(k).astype(f64) for k in ("K", "P", "Q")]
+    HKf, WKf = HK.astype(f64), WK.astype(f64)
+
+    n_k = jnp.ceil(K / TKf)
+    n_c = jnp.ceil(C / TCf)
+    n_bpq = jnp.ceil(B / TBf) * jnp.ceil(P / TPf) * jnp.ceil(Q / TQf)
+    n_tiles_i = jnp.ceil(B / TBf) * n_c * jnp.ceil(P / TPf) * jnp.ceil(Q / TQf)
+    n_tiles_o = jnp.ceil(B / TBf) * n_k * jnp.ceil(P / TPf) * jnp.ceil(Q / TQf)
+
+    # ---- compute cycles ----------------------------------------------------
+    pea_row = c3("pea_row").astype(f64)
+    pea_col = c3("pea_col").astype(f64)
+    cyc_tile = (jnp.ceil(TCf / pea_row) * jnp.ceil(TKf / pea_col)
+                * HKf * WKf * TPf * TQf * TBf)
+    compute_cycles = cyc_tile * n_k * n_c * n_bpq
+
+    # ---- DRAM traffic under the two loop orders ----------------------------
+    burst = c3("burst_words")
+    row_words = c3("row_words").astype(f64)
+    ib, ir = _access_cost((B, C, H, W), TBf, TCf, THf, TWf,
+                          l3("in_bhwc"), l3("in_g").astype(f64),
+                          l3("in_align"), burst, row_words)
+    ob, orow = _access_cost((B, K, P, Q), TBf, TKf, TPf, TQf,
+                            l3("out_bhwc"), l3("out_g").astype(f64),
+                            l3("out_align"), burst, row_words)
+    w_vals = l3("w_vals")
+    w_bursts = jnp.ceil(w_vals / burst.astype(f64))
+    w_rows = jnp.maximum(1.0, w_vals / row_words)
+
+    all_w_fit = (l3("K") * l3("C") * HK * WK * dbytes * 2
+                 <= c3("wbuf_kib") * 1024)
+    all_i_fit = (l3("B") * l3("C") * l3("H") * l3("W") * dbytes * 2
+                 <= c3("ibuf_kib") * 1024)
+    i_passes_ko = jnp.where(all_i_fit, 1.0, n_k)
+    i_passes_bo = jnp.ones_like(n_k)
+    w_passes_ko = jnp.ones_like(n_bpq)
+    w_passes_bo = jnp.where(all_w_fit, 1.0, n_bpq)
+
+    i_vals, o_vals = l3("i_vals"), l3("o_vals")
+
+    def dram_terms(i_passes, w_passes):
+        bursts = (ib * n_tiles_i * i_passes + w_bursts * w_passes
+                  + ob * n_tiles_o)
+        rows = (ir * n_tiles_i * i_passes + w_rows * w_passes
+                + orow * n_tiles_o)
+        values = i_vals * i_passes + w_vals * w_passes + o_vals
+        return bursts, rows, values
+
+    b_ko, r_ko, v_ko = dram_terms(i_passes_ko, w_passes_ko)
+    b_bo, r_bo, v_bo = dram_terms(i_passes_bo, w_passes_bo)
+    dram_cycles_ko = b_ko + r_ko * dram_row_miss
+    dram_cycles_bo = b_bo + r_bo * dram_row_miss
+    use_bo = dram_cycles_bo < dram_cycles_ko
+    dram_cycles = jnp.where(use_bo, dram_cycles_bo, dram_cycles_ko)
+    bursts = jnp.where(use_bo, b_bo, b_ko)
+    rows = jnp.where(use_bo, r_bo, r_ko)
+    values = jnp.where(use_bo, v_bo, v_ko)
+
+    # ---- Pallas inner reduction: bottleneck + first-argmin -----------------
+    n, l_dim = compute_cycles.shape[0], compute_cycles.shape[1]
+    shape3 = (n, l_dim, t)
+    # one grid step: in interpret mode the row-block loop runs sequentially,
+    # so a full-batch block keeps the reduction a single vectorized op
+    total_flat, best_flat = dse_eval.tile_select(
+        jnp.broadcast_to(compute_cycles, shape3).reshape(n * l_dim, t),
+        jnp.broadcast_to(dram_cycles, shape3).reshape(n * l_dim, t),
+        jnp.broadcast_to(mask, shape3).reshape(n * l_dim, t),
+        block_r=n * l_dim, interpret=interpret)
+    total = total_flat.reshape(n, l_dim)
+    best = best_flat.reshape(n, l_dim)
+
+    def pick(arr):
+        full = jnp.broadcast_to(arr, shape3)
+        return jnp.take_along_axis(full, best[:, :, None], axis=-1)[:, :, 0]
+
+    def pick_tile(arr):  # config-independent [1, L, T]: cheap [L, T] gather
+        return arr[0][jnp.arange(l_dim)[None, :], best]
+
+    tb_, tk_, tc_ = pick_tile(TB), pick_tile(TK), pick_tile(TC)
+    tp_, tq_ = pick_tile(TP), pick_tile(TQ)
+    compute_best = pick(compute_cycles)
+    dram_best = pick(dram_cycles)
+    bursts_best = pick(bursts)
+    rows_best = pick(rows)
+    values_best = pick(values)
+    use_bo_best = pick(use_bo)
+
+    # ---- energies at the chosen tiling -------------------------------------
+    macs = lay["macs"][None, :]
+    e_mac = macs * MAC_ENERGY_PJ
+    pea_row2 = cfg["pea_row"][:, None]
+    pea_col2 = cfg["pea_col"][:, None]
+    ibuf_reads = macs / jnp.maximum(1, jnp.minimum(tk_, pea_col2)).astype(f64)
+    wbuf_reads = macs / jnp.maximum(1, tb_ * tp_ * tq_).astype(f64)
+    obuf_acc = 2.0 * macs / jnp.maximum(
+        1, jnp.minimum(tc_, pea_row2)).astype(f64)
+    e_sram = (ibuf_reads * data_bits * cfg["sram_i"][:, None]
+              + wbuf_reads * data_bits * cfg["sram_w"][:, None]
+              + obuf_acc * psum_bits * cfg["sram_o"][:, None])
+
+    width_bits = cfg["width_bits"][:, None].astype(f64)
+    moved_bits = bursts_best * width_bits
+    useful_bits = values_best * data_bits
+    heavy = lay["heavy"][None, :]
+
+    out = {
+        "total_cycles": total,
+        "compute_cycles": compute_best,
+        "dram_cycles": dram_best,
+        "dram_values": values_best,
+        "rows": rows_best,
+        "moved_bits": moved_bits,
+        "useful_bits": useful_bits,
+        "e_mac": e_mac,
+        "e_sram": e_sram,
+        "use_bo": use_bo_best,
+        "tb": tb_, "tk": tk_, "tc": tc_, "tp": tp_, "tq": tq_,
+    }
+    zero = jnp.zeros_like(total)
+    for k in ("total_cycles", "compute_cycles", "dram_cycles", "dram_values",
+              "rows", "moved_bits", "useful_bits", "e_mac", "e_sram"):
+        out[k] = jnp.where(heavy, out[k], zero)
+    for k in ("tb", "tk", "tc", "tp", "tq"):
+        out[k] = jnp.where(heavy, out[k], 1)
+    out["use_bo"] = jnp.where(heavy, out["use_bo"], False)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchCostResult:
+    """Per-(config, part-layer) costs; every array is ``[N, L]``."""
+
+    configs: list[HwConfig]
+    specs: list[PartSpec]
+    latency_s: np.ndarray
+    energy_pj: np.ndarray
+    compute_s: np.ndarray
+    dram_s: np.ndarray
+    dram_bytes: np.ndarray
+    e_mac_pj: np.ndarray
+    e_sram_pj: np.ndarray
+    e_dram_pj: np.ndarray
+    tiling: np.ndarray           # [N, L, 5] int
+    use_bpq_outer: np.ndarray    # [N, L] bool
+
+    def part_cost(self, i: int, j: int) -> PartCost:
+        """Reconstruct the scalar :class:`PartCost` view of one cell."""
+        return PartCost(
+            latency_s=float(self.latency_s[i, j]),
+            energy_pj=float(self.energy_pj[i, j]),
+            compute_s=float(self.compute_s[i, j]),
+            dram_s=float(self.dram_s[i, j]),
+            dram_bytes=float(self.dram_bytes[i, j]),
+            e_mac_pj=float(self.e_mac_pj[i, j]),
+            e_sram_pj=float(self.e_sram_pj[i, j]),
+            e_dram_pj=float(self.e_dram_pj[i, j]),
+            tiling=tuple(int(v) for v in self.tiling[i, j]),
+            loop_order="BPQ_outer" if self.use_bpq_outer[i, j] else "K_outer",
+        )
+
+
+def batch_part_cost(configs: Sequence[HwConfig],
+                    specs: Sequence[PartSpec | tuple],
+                    *, chunk: int = 32,
+                    interpret: bool | None = None) -> BatchCostResult:
+    """Score ``[len(configs), len(specs)]`` part-layer costs in one pipeline.
+
+    ``chunk`` bounds the config-axis block handed to one jit call (the
+    candidate axis is materialized per block, so memory scales with
+    ``chunk * L * T``).  Configs are padded to a full final chunk so XLA
+    compiles exactly one program per (L, T, chunk) shape.
+    """
+    specs = [s if isinstance(s, PartSpec) else PartSpec(*s) for s in specs]
+    if not configs or not specs:
+        raise ValueError("need at least one config and one spec")
+    lay_np = _prep_specs(specs)
+    cfg_np, cons = _prep_configs(configs)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    n = len(configs)
+    chunk = max(1, min(chunk, n))
+    pad = (-n) % chunk
+    if pad:
+        cfg_np = {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                  for k, v in cfg_np.items()}
+
+    outs: dict[str, list[np.ndarray]] = {}
+    with enable_x64():
+        lay = {k: jnp.asarray(v) for k, v in lay_np.items()}
+        for s in range(0, n + pad, chunk):
+            cfg = {k: jnp.asarray(v[s:s + chunk]) for k, v in cfg_np.items()}
+            res = _batch_cost(cfg, lay, data_bits=cons.data_bits,
+                              psum_bits=cons.psum_bits,
+                              dram_row_miss=cons.dram_row_miss_cycles,
+                              interpret=interpret)
+            for k, v in res.items():
+                outs.setdefault(k, []).append(np.asarray(v))
+    res = {k: np.concatenate(v, axis=0)[:n] for k, v in outs.items()}
+
+    freq = cons.freq_hz
+    dbytes = cons.data_bits // 8
+    e_dram = (np.maximum(res["moved_bits"], res["useful_bits"])
+              * cons.dram_energy_pj_per_bit
+              + res["rows"] * cons.dram_row_act_energy_pj)
+    heavy = np.array([s.layer.is_heavy for s in specs])[None, :]
+    e_dram = np.where(heavy, e_dram, 0.0)
+    tiling = np.stack([res["tb"], res["tk"], res["tc"], res["tp"], res["tq"]],
+                      axis=-1)
+    return BatchCostResult(
+        configs=list(configs), specs=specs,
+        latency_s=res["total_cycles"] / freq,
+        energy_pj=res["e_mac"] + res["e_sram"] + e_dram,
+        compute_s=res["compute_cycles"] / freq,
+        dram_s=res["dram_cycles"] / freq,
+        dram_bytes=res["dram_values"] * dbytes,
+        e_mac_pj=res["e_mac"],
+        e_sram_pj=res["e_sram"],
+        e_dram_pj=e_dram,
+        tiling=tiling,
+        use_bpq_outer=res["use_bo"].astype(bool),
+    )
+
+
+def batch_area_mm2(configs: Sequence[HwConfig]) -> np.ndarray:
+    """Vectorized ``HwConfig.area_mm2`` for a whole proposal batch."""
+    if not configs:
+        return np.zeros(0)
+    cons = configs[0].cons
+    t = np.array([c.as_tuple() for c in configs], dtype=np.float64)
+    na = t[:, 0] * t[:, 1]
+    pe = t[:, 2] * t[:, 3] * cons.mac_area_um2 * 1e-6
+    buf_mib = (t[:, 4] + t[:, 5] + t[:, 6]) / 1024
+    return na * (pe + buf_mib * cons.sram_area_mm2_per_mib
+                 + cons.node_fixed_area_mm2)
+
+
+def batch_max_link_load(loads: np.ndarray, valid: np.ndarray | None = None,
+                        *, interpret: bool | None = None) -> np.ndarray:
+    """Max-link-load (Eq. 4) for a batch of candidate schedules.
+
+    ``loads`` is ``[S, E]`` — one row per candidate schedule, one column per
+    directed mesh link (``MeshNoc.link_loads`` order).  Runs the Pallas
+    ``max_rows`` reduction; returns ``[S]``.
+    """
+    with enable_x64():
+        out = dse_eval.max_rows(jnp.asarray(np.asarray(loads, np.float64)),
+                                None if valid is None else jnp.asarray(valid),
+                                interpret=interpret)
+        return np.asarray(out)

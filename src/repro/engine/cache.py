@@ -1,0 +1,112 @@
+"""Content-addressed memoization of mapper/scheduler evaluations.
+
+The DSE loop re-costs any (hardware config, workload set) pair every time a
+strategy proposes it; across a multi-strategy campaign the same points recur
+constantly (strategies converge on the same promising region).  This cache
+keys results on a content digest of the :class:`HwConfig` (including its
+:class:`PimConstraints`) and the :class:`DnnGraph` structure — not on object
+identity — so repeated strategies, restarted campaigns, and checkpoint
+resumes never re-run the mapper for an identical point.
+
+Digests are SHA-256 over a canonical JSON encoding; thread-safe for the
+campaign orchestrator's concurrent strategy runners.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from pathlib import Path
+from typing import Any, Iterable
+
+from ..core.hardware import HwConfig
+from ..core.ir import DnnGraph
+
+_LAYER_FIELDS = ("name", "kind", "B", "C", "H", "W", "K", "HK", "WK",
+                 "stride", "pad")
+
+
+def _sha(obj: Any) -> str:
+    payload = json.dumps(obj, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()[:32]
+
+
+def hw_digest(cfg: HwConfig) -> str:
+    """Digest of the full hardware point: variables + substrate constants."""
+    cons = cfg.cons
+    return _sha({
+        "var": cfg.as_tuple(),
+        "cons": {k: getattr(cons, k) for k in (
+            "tech_nm", "ba_row", "ba_col", "width_bank_bits",
+            "cap_bank_bytes", "area_budget_mm2", "freq_hz", "data_bits",
+            "psum_bits", "dram_energy_pj_per_bit", "dram_row_bytes",
+            "dram_row_act_energy_pj", "dram_row_miss_cycles",
+            "noc_energy_pj_per_bit_hop", "router_latency_cycles",
+            "mac_area_um2", "sram_area_mm2_per_mib", "node_fixed_area_mm2")},
+    })
+
+
+def graph_digest(graph: DnnGraph) -> str:
+    """Digest of a workload DNN: layer fields + DAG edges (name-stable)."""
+    layers = [{f: getattr(l, f) for f in _LAYER_FIELDS}
+              for l in graph.layers]
+    edges = [(n, p) for n in (l.name for l in graph.layers)
+             for p in graph.preds(n)]
+    return _sha({"name": graph.name, "layers": layers, "edges": edges})
+
+
+def workloads_digest(graphs: Iterable[DnnGraph]) -> str:
+    return _sha([graph_digest(g) for g in graphs])
+
+
+class EvalCache:
+    """Thread-safe content-addressed result store with optional persistence.
+
+    Values must be JSON-serializable (the evaluator stores
+    ``(cost, lats, ens)`` tuples).  ``save``/``load`` let a campaign carry
+    its evaluation table across checkpoint/resume cycles.
+    """
+
+    def __init__(self):
+        self._data: dict[str, Any] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(cfg: HwConfig, workloads: Iterable[DnnGraph]) -> str:
+        return hw_digest(cfg) + ":" + workloads_digest(workloads)
+
+    def get(self, key: str) -> Any | None:
+        with self._lock:
+            if key in self._data:
+                self.hits += 1
+                return self._data[key]
+            self.misses += 1
+            return None
+
+    def put(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._data)}
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str | Path) -> None:
+        with self._lock:
+            Path(path).write_text(json.dumps(self._data))
+
+    @classmethod
+    def load(cls, path: str | Path) -> "EvalCache":
+        cache = cls()
+        p = Path(path)
+        if p.exists():
+            cache._data = json.loads(p.read_text())
+        return cache

@@ -1,0 +1,203 @@
+"""Campaign orchestration: multi-strategy, multi-workload DSE runs.
+
+A *campaign* runs several proposal strategies (the NicePIM tuner plus the
+Fig. 9 comparison baselines) over a shared workload set, concurrently, with:
+
+* one shared content-addressed :class:`EvalCache` — strategies converging on
+  the same promising region never re-map an identical hardware point;
+* a shared :class:`ParetoFront` fed by every legal evaluated observation;
+* JSON checkpointing after every DSE iteration and resume: completed
+  strategies are loaded from the checkpoint verbatim; a partially-finished
+  strategy is replayed (its saved observations re-fed to a fresh model) and
+  continued from the first missing iteration.
+
+Replayed strategies see their history in one batch instead of iteration by
+iteration, so a resumed stochastic strategy is statistically — not bitwise —
+equivalent to the uninterrupted run; cached evaluations ARE bitwise stable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Sequence
+
+from ..core.dse import DseResult, Observation, WorkloadEvaluator, run_dse
+from ..core.hardware import DEFAULT_CONSTRAINTS, HwConfig, PimConstraints
+from ..core.ir import DnnGraph
+from ..core.surrogates import make_strategy
+from .cache import EvalCache, _sha, workloads_digest
+from .pareto import ParetoFront, ParetoPoint
+
+
+def _obs_to_json(o: Observation) -> dict:
+    return {"iteration": o.iteration, "cfg": list(o.cfg.as_tuple()),
+            "area_mm2": o.area_mm2, "legal": o.legal, "cost": o.cost,
+            "latency_s": o.latency_s, "energy_pj": o.energy_pj}
+
+
+def _obs_from_json(d: dict, cons: PimConstraints) -> Observation:
+    return Observation(
+        iteration=d["iteration"],
+        cfg=HwConfig.from_tuple(d["cfg"], cons=cons),
+        area_mm2=d["area_mm2"], legal=d["legal"], cost=d["cost"],
+        latency_s=d.get("latency_s") or {}, energy_pj=d.get("energy_pj") or {})
+
+
+@dataclass
+class CampaignResult:
+    results: dict[str, DseResult]
+    pareto: ParetoFront
+    cache_stats: dict
+    resumed: list[str] = field(default_factory=list)
+    timings_s: dict[str, float] = field(default_factory=dict)
+
+    def best(self) -> Observation:
+        cands = [o for r in self.results.values() for o in r.observations
+                 if o.cost is not None]
+        return min(cands, key=lambda o: o.cost)
+
+
+class Campaign:
+    """Run ``strategies x workloads`` DSE concurrently with checkpointing."""
+
+    def __init__(self, workloads: Sequence[DnnGraph],
+                 strategies: Sequence[str] = ("nicepim", "random"),
+                 *, iterations: int = 20, propose_k: int = 8, seed: int = 0,
+                 n_sample: int = 512,
+                 cons: PimConstraints = DEFAULT_CONSTRAINTS,
+                 evaluator_kwargs: dict | None = None,
+                 checkpoint: str | Path | None = None,
+                 max_workers: int | None = None,
+                 cache: EvalCache | None = None,
+                 verbose: bool = False):
+        self.workloads = list(workloads)
+        self.strategies = list(strategies)
+        self.iterations = iterations
+        self.propose_k = propose_k
+        self.seed = seed
+        self.n_sample = n_sample
+        self.cons = cons
+        self.evaluator_kwargs = evaluator_kwargs or {}
+        self.checkpoint = Path(checkpoint) if checkpoint else None
+        self.max_workers = max_workers or min(4, max(1, len(self.strategies)))
+        self.cache = cache if cache is not None else EvalCache()
+        self.verbose = verbose
+        self.pareto = ParetoFront()
+        self._obs: dict[str, list[Observation]] = {}
+        self._lock = threading.Lock()
+
+    # -- checkpoint I/O ------------------------------------------------------
+    def _fingerprint(self) -> str:
+        """Everything that must match for saved observations to be reusable."""
+        return _sha({
+            "workloads": workloads_digest(self.workloads),
+            "iterations": self.iterations, "seed": self.seed,
+            "propose_k": self.propose_k, "n_sample": self.n_sample,
+            "evaluator_kwargs": repr(sorted(self.evaluator_kwargs.items())),
+        })
+
+    def _load_checkpoint(self) -> dict[str, list[Observation]]:
+        if not self.checkpoint or not self.checkpoint.exists():
+            return {}
+        try:
+            state = json.loads(self.checkpoint.read_text())
+        except (json.JSONDecodeError, OSError):
+            return {}  # unreadable/truncated checkpoint: start fresh
+        if state.get("fingerprint") != self._fingerprint():
+            return {}  # different campaign (workloads/params/seed): start over
+        return {name: [_obs_from_json(d, self.cons) for d in rows]
+                for name, rows in state.get("strategies", {}).items()}
+
+    def _write_checkpoint(self) -> None:
+        if not self.checkpoint:
+            return
+        with self._lock:
+            state = {
+                "fingerprint": self._fingerprint(),
+                "iterations": self.iterations, "seed": self.seed,
+                "strategies": {n: [_obs_to_json(o) for o in obs]
+                               for n, obs in self._obs.items()},
+                "pareto": self.pareto.to_jsonable(),
+            }
+            tmp = self.checkpoint.with_suffix(".tmp")
+            tmp.write_text(json.dumps(state))
+            os.replace(tmp, self.checkpoint)
+
+    # -- the run -------------------------------------------------------------
+    def _completed_iters(self, obs: list[Observation]) -> int:
+        return max((o.iteration for o in obs), default=-1) + 1
+
+    def _offer_pareto(self, obs: list[Observation]) -> None:
+        for o in obs:
+            if o.cost is None or o.cost != o.cost:
+                continue
+            lat = sum(o.latency_s.values())
+            en = sum(o.energy_pj.values())
+            with self._lock:
+                self.pareto.offer(ParetoPoint(lat, en, o.area_mm2,
+                                              payload=list(o.cfg.as_tuple())))
+
+    def _run_strategy(self, name: str, evaluator: WorkloadEvaluator,
+                      saved: list[Observation]
+                      ) -> tuple[str, DseResult, bool, float]:
+        # thread CPU time: strategies run concurrently under the GIL, so
+        # wall time would charge each strategy for the others' bytecode
+        t0 = time.thread_time()
+        start = self._completed_iters(saved)
+        if start >= self.iterations:
+            with self._lock:
+                self._obs[name] = saved
+            self._offer_pareto(saved)
+            return name, DseResult(saved), True, time.thread_time() - t0
+        strat = make_strategy(name, cons=self.cons, seed=self.seed,
+                              n_sample=self.n_sample)
+        resumed = bool(saved)
+        if saved:  # replay history into the fresh model, then continue
+            for o in saved:
+                strat.observe(o.cfg, o.area_mm2,
+                              o.cost if o.legal else None)
+            strat.fit()
+        with self._lock:
+            self._obs[name] = list(saved)
+        self._offer_pareto(saved)
+
+        def on_iteration(it: int, new_obs: list[Observation]) -> None:
+            with self._lock:
+                self._obs[name].extend(new_obs)
+            self._offer_pareto(new_obs)
+            self._write_checkpoint()
+
+        res = run_dse(strat, evaluator, iterations=self.iterations,
+                      propose_k=self.propose_k, cons=self.cons,
+                      verbose=self.verbose, start_iteration=start,
+                      on_iteration=on_iteration)
+        return (name, DseResult(saved + res.observations), resumed,
+                time.thread_time() - t0)
+
+    def run(self) -> CampaignResult:
+        saved = self._load_checkpoint()
+        evaluator = WorkloadEvaluator(self.workloads, cache=self.cache,
+                                      **self.evaluator_kwargs)
+        results: dict[str, DseResult] = {}
+        resumed: list[str] = []
+        timings: dict[str, float] = {}
+        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            futs = [pool.submit(self._run_strategy, name, evaluator,
+                                saved.get(name, []))
+                    for name in self.strategies]
+            for fut in futs:
+                name, res, was_resumed, elapsed = fut.result()
+                results[name] = res
+                timings[name] = elapsed
+                if was_resumed:
+                    resumed.append(name)
+        self._write_checkpoint()
+        return CampaignResult(results=results, pareto=self.pareto,
+                              cache_stats=dict(self.cache.stats),
+                              resumed=resumed, timings_s=timings)

@@ -1,0 +1,99 @@
+"""Streaming latency/energy/area Pareto-frontier tracker.
+
+The DSE cost function (Eq. 1) collapses the objectives into one scalar; a
+production exploration system also wants the full trade-off surface.
+:class:`ParetoFront` ingests evaluated design points one at a time (any
+order) and maintains the set of non-dominated points.  Properties the engine
+tests enforce:
+
+* no point in :meth:`front` is dominated by any other;
+* the final front is invariant to insertion order (duplicates collapse to
+  the first-seen payload);
+* every dominated offer is rejected and every rejected offer is dominated.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any
+
+OBJECTIVES = ("latency_s", "energy_pj", "area_mm2")
+
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    latency_s: float
+    energy_pj: float
+    area_mm2: float
+    payload: Any = None          # e.g. the HwConfig tuple that scored this
+
+    @property
+    def key(self) -> tuple[float, float, float]:
+        return (self.latency_s, self.energy_pj, self.area_mm2)
+
+    def dominates(self, other: "ParetoPoint") -> bool:
+        """<= in every objective and < in at least one."""
+        a, b = self.key, other.key
+        return all(x <= y for x, y in zip(a, b)) and a != b
+
+
+@dataclass
+class ParetoFront:
+    points: list[ParetoPoint] = field(default_factory=list)
+    offered: int = 0
+    rejected: int = 0
+
+    def offer(self, point: ParetoPoint) -> bool:
+        """Insert if non-dominated; evict points the newcomer dominates.
+
+        Returns True iff the point joined the front.  An exact duplicate of
+        a frontier point is rejected (first seen wins), keeping the front a
+        set regardless of arrival order.
+        """
+        self.offered += 1
+        for p in self.points:
+            if p.dominates(point) or p.key == point.key:
+                self.rejected += 1
+                return False
+        self.points = [p for p in self.points if not point.dominates(p)]
+        self.points.append(point)
+        return True
+
+    def offer_all(self, points) -> int:
+        return sum(self.offer(p) for p in points)
+
+    def front(self) -> list[ParetoPoint]:
+        """Frontier sorted by latency (ties by energy then area)."""
+        return sorted(self.points, key=lambda p: p.key)
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def dominated(self, point: ParetoPoint) -> bool:
+        return any(p.dominates(point) for p in self.points)
+
+    # -- persistence (campaign checkpoints) ---------------------------------
+    def to_jsonable(self) -> list[dict]:
+        return [{"latency_s": p.latency_s, "energy_pj": p.energy_pj,
+                 "area_mm2": p.area_mm2, "payload": p.payload}
+                for p in self.front()]
+
+    @classmethod
+    def from_jsonable(cls, rows: list[dict]) -> "ParetoFront":
+        fr = cls()
+        for r in rows:
+            payload = r.get("payload")
+            fr.offer(ParetoPoint(r["latency_s"], r["energy_pj"],
+                                 r["area_mm2"],
+                                 tuple(payload) if isinstance(payload, list)
+                                 else payload))
+        return fr
+
+    def save(self, path: str | Path) -> None:
+        Path(path).write_text(json.dumps(self.to_jsonable(), indent=1))
+
+    @classmethod
+    def load(cls, path: str | Path) -> "ParetoFront":
+        return cls.from_jsonable(json.loads(Path(path).read_text()))

@@ -1,0 +1,112 @@
+"""Pallas reductions for the batched DSE engine (engine/batch_cost).
+
+Two row-wise reductions sit on the engine's hot path:
+
+* ``tile_select`` — the inner tiling-search reduction: for every
+  (config, part-layer) row holding ``T`` candidate tilings, fuse the
+  double-buffering bottleneck ``total = max(compute_cycles, dram_cycles)``
+  with a masked first-argmin over candidates.
+* ``max_rows`` — the max-link-load reduction: row-wise masked max, used to
+  score batches of candidate NoC schedules (one row per schedule, one column
+  per directed mesh link).
+
+Both kernels tile rows across the grid and keep the full reduction axis in
+one VMEM block; off-TPU they run in ``interpret=True`` mode (this container's
+validation path), matching the pure-jnp semantics bit-for-bit — which the
+engine relies on for its 1e-6 parity contract with the scalar cost model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tile_select_kernel(c_ref, d_ref, v_ref, tot_ref, idx_ref):
+    total = jnp.maximum(c_ref[...], d_ref[...])
+    total = jnp.where(v_ref[...], total, jnp.inf)
+    tot_ref[...] = jnp.min(total, axis=-1)
+    # first occurrence of the min, matching np.argmin in the scalar model
+    idx_ref[...] = jnp.argmin(total, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def _tile_select(compute_cycles, dram_cycles, valid, *, block_r: int,
+                 interpret: bool):
+    r, t = compute_cycles.shape
+    grid = (pl.cdiv(r, block_r),)
+    in_spec = pl.BlockSpec((block_r, t), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_r,), lambda i: (i,))
+    return pl.pallas_call(
+        _tile_select_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((r,), compute_cycles.dtype),
+                   jax.ShapeDtypeStruct((r,), jnp.int32)],
+        interpret=interpret,
+    )(compute_cycles, dram_cycles, valid)
+
+
+def tile_select(compute_cycles, dram_cycles, valid, *, block_r: int = 8,
+                interpret: bool | None = None):
+    """``[R, T] -> ([R] total, [R] idx)`` fused max + masked first-argmin.
+
+    Rows with no valid candidate return ``inf`` / index 0 — the caller
+    (engine/batch_cost) guarantees at least the fallback tiling is valid.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    r, t = compute_cycles.shape
+    block_r = max(1, min(block_r, r))
+    pad = (-r) % block_r
+    if pad:
+        compute_cycles = jnp.pad(compute_cycles, ((0, pad), (0, 0)))
+        dram_cycles = jnp.pad(dram_cycles, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+    tot, idx = _tile_select(compute_cycles, dram_cycles, valid,
+                            block_r=block_r, interpret=interpret)
+    return tot[:r], idx[:r]
+
+
+def _max_rows_kernel(x_ref, v_ref, o_ref):
+    x = jnp.where(v_ref[...], x_ref[...], -jnp.inf)
+    o_ref[...] = jnp.max(x, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def _max_rows(x, valid, *, block_r: int, interpret: bool):
+    r, t = x.shape
+    grid = (pl.cdiv(r, block_r),)
+    in_spec = pl.BlockSpec((block_r, t), lambda i: (i, 0))
+    return pl.pallas_call(
+        _max_rows_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), x.dtype),
+        interpret=interpret,
+    )(x, valid)
+
+
+def max_rows(x, valid=None, *, block_r: int = 8,
+             interpret: bool | None = None):
+    """Row-wise masked max — the Eq. 4 max-link-load reduction, batched."""
+    interpret = _default_interpret() if interpret is None else interpret
+    x = jnp.asarray(x)
+    if valid is None:
+        valid = jnp.ones(x.shape, dtype=bool)
+    r, t = x.shape
+    block_r = max(1, min(block_r, r))
+    pad = (-r) % block_r
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+    out = _max_rows(x, valid, block_r=block_r, interpret=interpret)
+    return out[:r]

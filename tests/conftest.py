@@ -4,8 +4,14 @@ import os
 # applied ONLY by repro.launch.dryrun (which must be a fresh process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+# hypothesis is optional: property tests skip with a clear reason when it is
+# absent so `pytest -x -q` still runs on a bare interpreter.
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
 
-settings.register_profile("ci", max_examples=25, deadline=None,
-                          derandomize=True)
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None,
+                              derandomize=True)
+    settings.load_profile("ci")

@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+``from hypothesis_compat import given, settings, strategies as st`` behaves
+exactly like importing from ``hypothesis`` when it is installed.  On a bare
+interpreter the stand-ins below turn every ``@given`` test into a skip with a
+clear reason while leaving plain tests in the same module runnable.
+"""
+
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Anything:
+        """Absorbs any attribute/call chain (st.composite, st.integers, ...)."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    strategies = _Anything()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed; property test skipped")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def assume(condition):
+        return True

@@ -4,7 +4,7 @@ import itertools
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.layout import enumerate_layouts
 from repro.core.mapper import RegionTable, INF

@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from hypothesis_compat import given, strategies as st
 
 from repro.core.costmodel import part_layer_cost
 from repro.core.hardware import PAPER_4X4, PAPER_BEST, HwConfig

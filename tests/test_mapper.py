@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from hypothesis_compat import given, strategies as st
 
 from repro.core.hardware import PAPER_4X4, PAPER_16X16
 from repro.core.ir import DnnGraph, Layer, conv, matmul

@@ -3,7 +3,7 @@
 import itertools
 
 import pytest
-from hypothesis import given, strategies as st
+from hypothesis_compat import given, strategies as st
 
 from repro.core.noc import MeshNoc
 from repro.core.scheduler import (ScheduleResult, solve_ilp_ls, solve_shp,
