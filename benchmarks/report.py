@@ -167,6 +167,22 @@ def paper_section() -> str:
                   f"{r['n_layers']} part-layers) | "
                   f"{r['batched_configs_per_s']:.1f} | "
                   f"{r['speedup']:.1f}x |", ""]
+    mapper = [r for r in rows if r.get("table") == "mapper"]
+    if mapper:
+        r = mapper[-1]
+        lines += ["### Mapper — batched vs scalar candidate costing", "",
+                  f"(LM x WR) candidate points per second over "
+                  f"{r['n_sweeps']} DL-alternation sweeps of "
+                  f"{r['n_layers']} layers on a "
+                  f"{r['region'][0]}x{r['region'][1]} region "
+                  f"(contract: >=10x).", "",
+                  "| path | candidates/sec | speedup |", "|---|---|---|",
+                  f"| scalar per-candidate loop | "
+                  f"{r['scalar_cands_per_s']:.0f} | 1.0x |",
+                  f"| batched backend | {r['batched_cands_per_s']:.0f} | "
+                  f"{r['speedup']:.1f}x |", "",
+                  f"End-to-end `PimMapper.map` (googlenet): "
+                  f"{r['map_speedup']:.2f}x faster batched.", ""]
     fig11 = [r for r in rows if r.get("table") == "fig11"]
     if fig11:
         lines += ["### Fig. 11 — throughput vs DDAM-lite "

@@ -19,7 +19,7 @@ ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
 from benchmarks import (engine_throughput, fig9_dse, fig10_mapper, fig11_ddam,
-                        fig12_scheduler)
+                        fig12_scheduler, mapper_throughput)
 
 
 def main() -> None:
@@ -74,6 +74,23 @@ def main() -> None:
                  f"thr_gain={r['throughput_gain']:+.1%} "
                  f"lat_ratio={r['latency_ratio']:.1f}x")
         print(f"# fig11 took {time.time() - t0:.1f}s", flush=True)
+
+    if "mapper" not in skip:
+        t0 = time.time()
+        # --fast (CI smoke): tiny workload, throughput assertion relaxed —
+        # the full run enforces the >=10x candidate-costing contract
+        rows = (mapper_throughput.run(n_layers=8, n_sweeps=2,
+                                      assert_10x=False, map_scale=8)
+                if args.fast else mapper_throughput.run())
+        all_rows += rows
+        r = rows[0]
+        emit("mapper_scalar", 1e6 / r["scalar_cands_per_s"],
+             f"cands_per_s={r['scalar_cands_per_s']:.1f}")
+        emit("mapper_batched", 1e6 / r["batched_cands_per_s"],
+             f"cands_per_s={r['batched_cands_per_s']:.1f} "
+             f"speedup={r['speedup']:.1f}x "
+             f"map_speedup={r['map_speedup']:.2f}x")
+        print(f"# mapper took {time.time() - t0:.1f}s", flush=True)
 
     if "engine" not in skip:
         t0 = time.time()

@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 
 from .hardware import DEFAULT_CONSTRAINTS, HwConfig, PimConstraints
 from .ir import DnnGraph
-from .mapper import PimMapper, evaluate_mapping
+from .mapper import PimMapper, clear_mapper_caches, evaluate_mapping
 
 
 @dataclass
@@ -85,16 +85,29 @@ class WorkloadEvaluator:
     An optional :class:`repro.engine.cache.EvalCache` adds content-addressed
     memoization shared across strategies / processes / checkpoint resumes on
     top of the per-instance tuple cache.
+
+    ``mapper_backend`` selects the PIM-Mapper costing path (``"batched"`` —
+    the vectorized engine — or ``"scalar"``); it folds into
+    ``mapper_kwargs`` so it also keys the content-addressed cache.
+    ``clear_caches_between_configs=True`` drops the mapper-level memos
+    (candidate tables, node costs, Data-Scheduler solves — all keyed by
+    HwConfig) after each newly evaluated configuration, keeping long
+    multi-config campaigns at a flat memory footprint.
     """
 
     def __init__(self, workloads: list[DnnGraph], *, alpha: float = 1.0,
                  beta: float = 1.0, gamma: float = 1.0,
-                 mapper_kwargs: dict | None = None, cache=None):
+                 mapper_kwargs: dict | None = None, cache=None,
+                 mapper_backend: str | None = None,
+                 clear_caches_between_configs: bool = False):
         self.workloads = workloads
         self.alpha = alpha
         self.beta = beta
         self.gamma = gamma
-        self.mapper_kwargs = mapper_kwargs or {}
+        self.mapper_kwargs = dict(mapper_kwargs or {})
+        if mapper_backend is not None:
+            self.mapper_kwargs["backend"] = mapper_backend
+        self.clear_caches_between_configs = clear_caches_between_configs
         self._cache: dict[tuple, tuple[float, dict, dict]] = {}
         self.cache = cache
         self._wl_digest: str | None = None
@@ -129,17 +142,23 @@ class WorkloadEvaluator:
         lats: dict[str, float] = {}
         ens: dict[str, float] = {}
         cost = 0.0
-        for g in self.workloads:
-            try:
-                rep = evaluate_mapping(mapper.map(g))
-            except RuntimeError:   # capacity-infeasible mapping
-                cost = math.inf
-                break
-            lats[g.name] = rep.latency_s
-            ens[g.name] = rep.energy_pj
-            energy_j = rep.energy_pj * 1e-12
-            cost += (energy_j ** self.alpha) * (rep.latency_s ** self.beta) \
-                * self.gamma
+        try:
+            for g in self.workloads:
+                try:
+                    rep = evaluate_mapping(mapper.map(g))
+                except RuntimeError:   # capacity-infeasible mapping
+                    cost = math.inf
+                    break
+                lats[g.name] = rep.latency_s
+                ens[g.name] = rep.energy_pj
+                energy_j = rep.energy_pj * 1e-12
+                cost += (energy_j ** self.alpha) \
+                    * (rep.latency_s ** self.beta) * self.gamma
+        finally:
+            if self.clear_caches_between_configs:
+                # the memo entries are keyed by this cfg: nothing carries
+                # over to the next configuration, so drop them
+                clear_mapper_caches()
         out = (cost, lats, ens)
         self._cache[key] = out
         if ckey is not None:

@@ -24,7 +24,7 @@ HEAVY_KINDS = ("conv", "matmul", "dwconv")
 AUX_KINDS = ("add", "concat", "pool", "norm", "act", "input", "softmax")
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=True)
 class Layer:
     """One DNN layer in the paper's conv representation.
 
@@ -44,6 +44,16 @@ class Layer:
     WK: int = 1
     stride: int = 1
     pad: int = 0
+
+    def __hash__(self) -> int:
+        # layers key every mapper/cost-model memo, so the 11-field tuple
+        # hash is hot — compute it once per instance
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.name, self.kind, self.B, self.C, self.H, self.W,
+                      self.K, self.HK, self.WK, self.stride, self.pad))
+            object.__setattr__(self, "_hash", h)
+        return h
 
     # -- derived quantities ------------------------------------------------
     @property

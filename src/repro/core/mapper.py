@@ -15,6 +15,8 @@ is re-costed with the Data-Scheduler's optimized Hamilton cycles
 from __future__ import annotations
 
 import math
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import lru_cache
 
@@ -23,12 +25,15 @@ from .hardware import HwConfig
 from .ir import DnnGraph, Layer, Segment
 from .layout import DataLayout, enumerate_layouts
 from .noc import MeshNoc
-from .partition import (LM, comm_estimate, enumerate_lms, group_coords,
-                        loop_strides, part_layer, wr_candidates, LOOPS)
+from .partition import (LM, comm_estimate, comm_estimate_batch, enumerate_lms,
+                        group_coords, loop_strides, part_layer, wr_candidates,
+                        LOOPS)
 from .regions import SM, Region, gen_sm_candidates
 from .scheduler import solve_ilp_ls, SOLVERS
 
 INF = float("inf")
+
+BACKENDS = ("batched", "scalar")
 
 
 @dataclass
@@ -75,17 +80,26 @@ class EvalReport:
 
 
 # -- candidate generation ------------------------------------------------------
+#
+# The same (layer shape, region shape, layouts) keys recur constantly across
+# deep nets, SM candidates, and DL iterations, so candidate tables are
+# memoized — but *bounded*: a long multi-config campaign cycles through many
+# HwConfigs and an unbounded cache would grow with every one of them.
+# ``clear_mapper_caches`` drops everything between hardware configs.
+
+_CACHE_CANDIDATES = 2048      # candidate tables (one per layer/region/DL key)
+_CACHE_NODE_LAT = 65536       # per-(part-layer, DL) node latencies (floats)
+_CACHE_SCHEDULES = 4096       # Data-Scheduler solves (see _sharing_latency)
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=_CACHE_CANDIDATES)
 def _layer_candidates(hw: HwConfig, layer: Layer, h_shape: int, w_shape: int,
                       dl_in: DataLayout, dl_out: DataLayout,
                       n_wr: int, lm_cap: int
                       ) -> tuple[tuple[int, float, float, LM], ...]:
-    """Per-WR best LM for a layer on an ``h x w`` region.
+    """Per-WR best LM for a layer on an ``h x w`` region (scalar backend).
 
-    Returns ``(wr, perf_s, size_bytes, lm)`` tuples sorted by size desc —
-    heavily cached: identical layer shapes recur across deep nets.
+    Returns ``(wr, perf_s, size_bytes, lm)`` tuples sorted by size desc.
     """
     lms = enumerate_lms(layer, h_shape, w_shape, cap=lm_cap)
     best: dict[int, tuple[float, float, LM]] = {}
@@ -104,14 +118,188 @@ def _layer_candidates(hw: HwConfig, layer: Layer, h_shape: int, w_shape: int,
     return tuple(out)
 
 
+class _BoundedCache:
+    """Tiny bounded memo dict with FIFO eviction.
+
+    Reads are plain (GIL-atomic) dict lookups so the hot path takes no lock;
+    writes lock only for the insert-and-trim.  FIFO (not strict LRU) is fine
+    here: entries are hw-config-scoped and campaigns clear between configs —
+    the bound only guards against pathological single-config growth.
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, key, default=None):
+        return self._d.get(key, default)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._d[key] = value
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+
+
+_BATCH_CANDS = _BoundedCache(_CACHE_CANDIDATES)
+_NODE_LAT = _BoundedCache(_CACHE_NODE_LAT)
+_CAND_STRUCT = _BoundedCache(_CACHE_CANDIDATES)
+
+
+def clear_mapper_caches() -> None:
+    """Drop every mapper-level memo (candidates, node costs, schedules).
+
+    Entries are keyed by :class:`HwConfig`, so nothing carries over between
+    hardware configurations anyway — campaigns call this between configs to
+    keep long multi-config runs at a flat memory footprint.
+    """
+    _layer_candidates.cache_clear()
+    _BATCH_CANDS.clear()
+    _NODE_LAT.clear()
+    _CAND_STRUCT.clear()
+    _sharing_latency.cache_clear()
+    part_layer_cost.cache_clear()
+
+
+def _batched_node_latencies(hw: HwConfig,
+                            specs: list[tuple[Layer, DataLayout, DataLayout]]
+                            ) -> np.ndarray:
+    """Node latency for every ``(part-layer, dl_in, dl_out)`` spec, memoized.
+
+    Misses are costed in ONE chunked :func:`engine.batch_cost.batch_part_cost`
+    call — this is the mapper's whole-segment candidate costing hot path.
+    """
+    keys = [(hw,) + s for s in specs]
+    # single cache read per key: a concurrent clear_mapper_caches() (another
+    # campaign thread finishing its config) must never be able to swap a
+    # value source mid-call — fresh results are kept locally
+    vals = [_NODE_LAT.get(key) for key in keys]
+    missing: dict[tuple, int] = {}
+    for key, v in zip(keys, vals):
+        if v is None and key not in missing:
+            missing[key] = len(missing)
+    if missing:
+        from ..engine.batch_cost import batch_part_cost
+        lat = batch_part_cost([hw], [k[1:] for k in missing],
+                              spec_chunk=1024).latency_s[0]
+        fresh = {key: float(lat[j]) for key, j in missing.items()}
+        for key, v in fresh.items():
+            _NODE_LAT.put(key, v)
+        vals = [fresh[key] if v is None else v
+                for key, v in zip(keys, vals)]
+    return np.array(vals)
+
+
+@dataclass
+class _CandStruct:
+    """The DL-independent half of a candidate sweep for (layer, region).
+
+    Built once per (hw, layer, region-shape) and reused across every DL
+    iteration and segment that revisits the same shapes — only the node
+    latencies (which depend on the data layouts) are re-gathered per key.
+    Part-layers are deduped (different P_orders and collapsed ceil-divisions
+    share one node cost); ``pair_pl`` maps each (LM x WR) pair to its row in
+    ``uniq_pls``.
+    """
+
+    uniq_pls: list[Layer]               # deduped part_layer rows
+    pair_pl: np.ndarray                 # (LM x WR) pair -> uniq_pls index
+    pair_lm_of: list[LM]                # (LM x WR) pair -> LM
+    comm_lat: np.ndarray                # vectorized comm_estimate per pair
+    stored: np.ndarray                  # weight bytes/node per pair
+    by_wr: list[tuple[int, np.ndarray]]  # WR -> pair indices, first-seen order
+
+
+def _cand_struct(hw: HwConfig, layer: Layer, h_shape: int, w_shape: int,
+                 n_wr: int, lm_cap: int) -> _CandStruct:
+    key = (hw, layer, h_shape, w_shape, n_wr, lm_cap)
+    got = _CAND_STRUCT.get(key)
+    if got is not None:
+        return got
+    lms = enumerate_lms(layer, h_shape, w_shape, cap=lm_cap)
+    uniq_pls: list[Layer] = []
+    pl_index: dict[Layer, int] = {}
+    pair_lms: list[LM] = []
+    pair_wrs: list[int] = []
+    pair_pl: list[int] = []
+    for lm in lms:
+        pl = part_layer(layer, lm)
+        pi = pl_index.get(pl)
+        if pi is None:
+            pi = pl_index[pl] = len(uniq_pls)
+            uniq_pls.append(pl)
+        for wr in wr_candidates(layer, lm, n_wr):
+            pair_lms.append(lm)
+            pair_wrs.append(wr)
+            pair_pl.append(pi)
+    comm_lat, _, stored = comm_estimate_batch(layer, hw, pair_lms, pair_wrs)
+    by_wr: dict[int, list[int]] = {}
+    for p, wr in enumerate(pair_wrs):       # first-seen WR order, like the
+        by_wr.setdefault(wr, []).append(p)  # scalar best-dict insertion
+    struct = _CandStruct(
+        uniq_pls=uniq_pls, pair_pl=np.array(pair_pl, dtype=np.intp),
+        pair_lm_of=pair_lms, comm_lat=comm_lat, stored=stored,
+        by_wr=[(wr, np.array(idxs, dtype=np.intp))
+               for wr, idxs in by_wr.items()])
+    _CAND_STRUCT.put(key, struct)
+    return struct
+
+
+def _layer_candidates_batched(struct: _CandStruct, node_lat: np.ndarray
+                              ) -> tuple[tuple[int, float, float, LM], ...]:
+    """Assemble one candidate table from pre-batched node latencies.
+
+    ``node_lat[i]`` is the node cost of ``struct.uniq_pls[i]``; the (LM x WR)
+    communication axis comes pre-scored from the vectorized
+    :func:`partition.comm_estimate_batch` and is reduced per WR with the
+    same first-strict-< winner rule as the scalar loop (first-argmin).
+    """
+    perf = node_lat[struct.pair_pl] + struct.comm_lat
+    out = []
+    for wr, idxs in struct.by_wr:
+        p = idxs[int(np.argmin(perf[idxs]))]
+        out.append((wr, float(perf[p]), float(struct.stored[p]),
+                    struct.pair_lm_of[p]))
+    out.sort(key=lambda t: -t[2])
+    return tuple(out)
+
+
 # -- Algorithm 2: DP over capacity --------------------------------------------
 
 
 import numpy as np
 
+_ON_TPU: bool | None = None
+
+
+def _on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        try:
+            import jax
+            _ON_TPU = jax.default_backend() == "tpu"
+        except Exception:  # pragma: no cover - jax always present here
+            _ON_TPU = False
+    return _ON_TPU
+
 
 class RegionTable:
     """Knapsack result for one region: monotone perf-vs-capacity + backtrack.
+
+    The per-layer DP step is array-form over the full candidate axis: every
+    ``(candidate, cap)`` cell is scored at once (``perf[cap - size] + perf_c``
+    where feasible) and the min + first-argmin over candidates — the exact
+    first-strict-< winner of the old per-candidate Python loop — runs either
+    in NumPy or in the Pallas ``kernels.dse_eval.argmin_rows`` reduction
+    (``reduce="pallas"``, the on-TPU default alongside ``tile_select``).
 
     Backtracking is array-based (O(layers x units) int16), replayed in
     reverse: at budget ``cap`` layer ``l`` chose candidate ``choice[l, eff]``
@@ -119,29 +307,45 @@ class RegionTable:
     from; the remaining budget is ``eff - size(choice)``.
     """
 
-    def __init__(self, layer_cands, units: int, unit_bytes: float):
+    def __init__(self, layer_cands, units: int, unit_bytes: float,
+                 *, reduce: str = "auto"):
+        if reduce == "auto":
+            reduce = "pallas" if _on_tpu() else "numpy"
+        if reduce not in ("numpy", "pallas"):
+            raise ValueError(f"unknown RegionTable reduce {reduce!r}")
         self.layer_cands = layer_cands
         self.units = units
         perf = np.zeros(units + 1)
         self.choice = np.full((len(layer_cands), units + 1), -1, np.int16)
         self.eff = np.zeros((len(layer_cands), units + 1), np.int32)
         self.sizes = []
+        caps = np.arange(units + 1)
         for li, (lname, cands) in enumerate(layer_cands):
             sizes = np.minimum(units + 1,
                                np.ceil(np.array([c[2] for c in cands])
                                        / unit_bytes)).astype(np.int64)
             self.sizes.append(sizes)
             perfs = np.array([c[1] for c in cands])
-            nperf = np.full(units + 1, INF)
-            for ci in range(len(cands)):
-                s = int(sizes[ci])
-                if s > units:
-                    continue
-                cand = perf[:units + 1 - s] + perfs[ci]
-                seg = nperf[s:]
-                better = cand < seg
-                nperf[s:] = np.where(better, cand, seg)
-                self.choice[li, s:][better] = ci
+            if len(cands) == 0:  # layer with no legal LM: stays infeasible
+                nperf = np.full(units + 1, INF)
+            else:
+                # [C, units+1]: candidate ci at cap spends sizes[ci], leaving
+                # the prefix budget cap - sizes[ci]; infeasible cells get INF
+                left = caps[None, :] - sizes[:, None]
+                feas = left >= 0
+                scores = np.where(
+                    feas, perf[np.clip(left, 0, units)] + perfs[:, None], INF)
+                if reduce == "pallas":
+                    from jax.experimental import enable_x64
+                    from ..kernels import dse_eval
+                    with enable_x64():
+                        mn, idx = dse_eval.argmin_rows(scores.T)
+                    nperf = np.asarray(mn)
+                    ci = np.asarray(idx)
+                else:
+                    nperf = scores.min(axis=0)
+                    ci = scores.argmin(axis=0)
+                self.choice[li] = np.where(np.isfinite(nperf), ci, -1)
             # monotone fill, tracking effective cap
             eff = np.arange(units + 1, dtype=np.int32)
             run = np.minimum.accumulate(nperf)
@@ -173,10 +377,24 @@ class RegionTable:
 
 
 class PimMapper:
+    """Sec. VI mapper.
+
+    ``backend="batched"`` (default) costs every (LM x WR x layer x region)
+    candidate of a network through the vectorized engine
+    (``engine.batch_cost.batch_part_cost`` + ``partition.comm_estimate_batch``)
+    in one chunked call per mapping pass; ``backend="scalar"`` keeps the
+    original one-candidate-at-a-time reference path.  Both produce identical
+    mappings (the parity tests pin choices/SM exactly and latencies to 1e-6).
+    """
+
     def __init__(self, hw: HwConfig, *, max_optim_iter: int = 3,
                  cap_units: int = 1024, lm_cap: int = 200, n_wr: int = 5,
                  sm_max_regions: int | None = None,
-                 dl_max_group: int = 32):
+                 dl_max_group: int = 32, backend: str = "batched",
+                 dp_reduce: str = "auto"):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown mapper backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
         self.hw = hw
         self.max_optim_iter = max_optim_iter
         self.cap_units = cap_units
@@ -184,6 +402,66 @@ class PimMapper:
         self.n_wr = n_wr
         self.sm_max_regions = sm_max_regions
         self.dl_max_group = dl_max_group
+        self.backend = backend
+        self.dp_reduce = dp_reduce
+
+    # ---- candidate costing (scalar or batched) -------------------------------
+    def _cand_key(self, layer: Layer, region_h: int, region_w: int,
+                  din: DataLayout, dout: DataLayout) -> tuple:
+        return (self.hw, layer, region_h, region_w, din, dout,
+                self.n_wr, self.lm_cap)
+
+    def _candidates(self, layer: Layer, region_h: int, region_w: int,
+                    din: DataLayout, dout: DataLayout):
+        key = self._cand_key(layer, region_h, region_w, din, dout)
+        if self.backend == "scalar":
+            return _layer_candidates(*key)
+        got = _BATCH_CANDS.get(key)
+        if got is None:  # cache miss (evicted or cleared): fill just this
+            got = self._prefetch_candidates([key])[key]
+        return got
+
+    def _prefetch_candidates(self, keys: list[tuple]) -> dict[tuple, tuple]:
+        """Cost every missing candidate table in one batched engine call.
+
+        Returns a table per requested key.  Callers consume the returned
+        dict rather than re-reading ``_BATCH_CANDS`` — a concurrent
+        ``clear_mapper_caches()`` (another campaign thread finishing its
+        config) may empty or evict the shared cache at any point, and must
+        only ever cost re-derivation, never correctness.
+        """
+        out: dict[tuple, tuple] = {}
+        missing = []
+        for key in keys:
+            if key in out:
+                continue
+            got = _BATCH_CANDS.get(key)
+            if got is None:
+                out[key] = ()  # placeholder: dedupes repeated missing keys
+                missing.append(key)
+            else:
+                out[key] = got
+        if not missing:
+            return out
+        # every (key, lm) pair contributes one part-layer spec; identical
+        # part-layers (different P_order, collapsed ceil-divisions, repeated
+        # layer shapes) dedupe inside _batched_node_latencies' memo
+        work = []
+        for key in missing:
+            _, layer, h, w, din, dout, n_wr, lm_cap = key
+            struct = _cand_struct(self.hw, layer, h, w, n_wr, lm_cap)
+            work.append((key, struct,
+                         [(pl, din, dout) for pl in struct.uniq_pls]))
+        flat = [s for _, _, specs in work for s in specs]
+        node_lat = _batched_node_latencies(self.hw, flat)
+        at = 0
+        for key, struct, specs in work:
+            table = _layer_candidates_batched(
+                struct, node_lat[at:at + len(specs)])
+            out[key] = table
+            _BATCH_CANDS.put(key, table)
+            at += len(specs)
+        return out
 
     # ---- DL bookkeeping ------------------------------------------------------
     def _default_dl(self, channels: int) -> DataLayout:
@@ -217,12 +495,29 @@ class PimMapper:
         hw = self.hw
         units = self.cap_units
         unit_bytes = hw.node_dram_capacity / units
+        seg_sms = [gen_sm_candidates(graph, seg, hw.na_row, hw.na_col,
+                                     self.sm_max_regions) for seg in segments]
+        cand_tables: dict[tuple, tuple] = {}
+        if self.backend == "batched":
+            # every (LM x WR x layer x region-shape) candidate of the whole
+            # network is costed up front in one chunked engine call; the
+            # costing loop below reads the returned dict, so cache eviction
+            # or a concurrent clear can never force per-key dispatches
+            keys = []
+            for seg, sms in zip(segments, seg_sms):
+                for sm in sms:
+                    for ri, region in enumerate(sm.regions):
+                        for bi in sm.branches_of(ri):
+                            for lname in seg.branches[bi].heavy_layers(graph):
+                                din, dout = dls[lname]
+                                keys.append(self._cand_key(
+                                    graph.layer(lname), region.h_shape,
+                                    region.w_shape, din, dout))
+            cand_tables = self._prefetch_candidates(keys)
         # Per segment: list of (sm, seg_perf, reg_tabs) where seg_perf[cap] is
         # max over its regions' knapsack tables at per-node budget cap.
         seg_tables = []
-        for seg in segments:
-            sms = gen_sm_candidates(graph, seg, hw.na_row, hw.na_col,
-                                    self.sm_max_regions)
+        for seg, sms in zip(segments, seg_sms):
             per_sm = []
             for sm in sms:
                 reg_tabs = []
@@ -233,13 +528,18 @@ class PimMapper:
                         for lname in seg.branches[bi].heavy_layers(graph):
                             layer = graph.layer(lname)
                             din, dout = dls[lname]
-                            cands = _layer_candidates(
-                                hw, layer, region.h_shape, region.w_shape,
-                                din, dout, self.n_wr, self.lm_cap)
+                            key = self._cand_key(layer, region.h_shape,
+                                                 region.w_shape, din, dout)
+                            cands = cand_tables.get(key)
+                            if cands is None:
+                                cands = self._candidates(
+                                    layer, region.h_shape, region.w_shape,
+                                    din, dout)
                             layer_cands.append((lname, cands))
                     if not layer_cands:
                         continue
-                    tab = RegionTable(layer_cands, units, unit_bytes)
+                    tab = RegionTable(layer_cands, units, unit_bytes,
+                                      reduce=self.dp_reduce)
                     seg_perf = np.maximum(seg_perf, tab.perf)
                     reg_tabs.append((region, tab))
                 if np.isinf(seg_perf[units]) and reg_tabs:
@@ -323,8 +623,41 @@ class PimMapper:
                        est_latency_s=float(tab[units]))
 
     # ---- DL alternated pass (Sec. VI-C) ---------------------------------------
+    def _din_universe(self) -> list[DataLayout]:
+        """Every DLi a layer can inherit: any predecessor's swept DLo or a
+        default layout — BHWC plus power-of-two channel groups (the cost
+        model clamps groups beyond the fmap's channel count)."""
+        outs = [DataLayout("BHWC")]
+        g = 1
+        while g <= max(self.dl_max_group, 16):
+            outs.append(DataLayout("BCHW", g))
+            g *= 2
+        return outs
+
+    def _dl_sweep_table(self, graph: DnnGraph, mapping: Mapping
+                        ) -> dict[tuple, float]:
+        """Latency of every (layer, DLi, DLo) sweep point, batched.
+
+        One chunked engine call covers the full layout sweep of every heavy
+        chosen layer — the sequential DLo(pred)=DLi(succ) propagation then
+        just reads the table instead of costing per candidate.
+        """
+        entries: list[tuple] = []
+        specs: list[tuple] = []
+        for name, ch in mapping.choices.items():
+            layer = graph.layer(name)
+            pl = part_layer(layer, ch.lm)
+            for din in self._din_universe():
+                for dout in enumerate_layouts(layer.K, self.dl_max_group):
+                    entries.append((name, din, dout))
+                    specs.append((pl, din, dout))
+        lat = _batched_node_latencies(self.hw, specs)
+        return {e: float(l) for e, l in zip(entries, lat)}
+
     def _optimize_dl(self, graph: DnnGraph, mapping: Mapping, dls):
         hw = self.hw
+        table = (self._dl_sweep_table(graph, mapping)
+                 if self.backend == "batched" else None)
         new: dict[str, tuple[DataLayout, DataLayout]] = {}
         out_dl: dict[str, DataLayout] = {}
         for name in graph.topo_order():
@@ -341,7 +674,12 @@ class PimMapper:
                 pl = part_layer(layer, ch.lm)
                 best, best_lat = None, INF
                 for cand in enumerate_layouts(layer.K, self.dl_max_group):
-                    lat = part_layer_cost(hw, pl, din, cand).latency_s
+                    if table is not None:
+                        lat = table.get((name, din, cand))
+                        if lat is None:  # DLi outside the swept universe
+                            lat = part_layer_cost(hw, pl, din, cand).latency_s
+                    else:
+                        lat = part_layer_cost(hw, pl, din, cand).latency_s
                     if lat < best_lat:
                         best, best_lat = cand, lat
                 out_dl[name] = best
@@ -389,7 +727,7 @@ def _enumerate_indices(lm: LM, loops: tuple[str, ...]):
     return outs
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=_CACHE_SCHEDULES)
 def _sharing_latency(hw: HwConfig, lm: LM, region_shape: tuple[int, int],
                      wr: int, w_bytes: float, i_bytes: float, p_bytes: float,
                      solver: str, seed: int) -> tuple[float, float]:

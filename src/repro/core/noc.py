@@ -10,6 +10,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from functools import lru_cache
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class MeshNoc:
@@ -65,7 +67,24 @@ class MeshNoc:
         (sr, sc), (dr, dc) = self.coord(src), self.coord(dst)
         return abs(sr - dr) + abs(sc - dc)
 
+    @lru_cache(maxsize=64)
+    def route_incidence(self, nodes: tuple[int, ...]
+                        ) -> dict[tuple[int, int], np.ndarray]:
+        """Per-pair XY-route link indices for every ordered pair of ``nodes``.
+
+        The precomputed (sparse — XY routes touch ~sqrt(n_links) links, so a
+        dense [pairs, links] matrix would be ~100x larger) incidence the
+        Data-Scheduler's batched 2-opt uses to score candidate moves as load
+        delta-updates instead of rebuilding all transfers.
+        """
+        return {(a, b): np.asarray(self.route(a, b), dtype=np.intp)
+                for a in nodes for b in nodes if a != b}
+
     # -- load accounting -----------------------------------------------------
+    def link_loads_np(self, transfers) -> np.ndarray:
+        """``link_loads`` as a float64 array (batched-scheduler base state)."""
+        return np.asarray(self.link_loads(transfers))
+
     def link_loads(self, transfers: list[tuple[int, int, float]]) -> list[float]:
         """Bytes per directed link for ``(src, dst, nbytes)`` transfers."""
         loads = [0.0] * self.n_links()

@@ -25,6 +25,9 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, replace
 from functools import lru_cache
+from typing import Sequence
+
+import numpy as np
 
 from .hardware import HwConfig
 from .ir import Layer
@@ -43,11 +46,19 @@ DEFAULT_ORDERS = (
 )
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=True)
 class LM:
     ph: tuple[int, int, int, int, int]
     pw: tuple[int, int, int, int, int]
     p_order: tuple[str, ...] = ("B", "P", "Q", "K", "C")
+
+    def __hash__(self) -> int:
+        # LMs key the sharing/candidate memos — cache the tuple hash
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.ph, self.pw, self.p_order))
+            object.__setattr__(self, "_hash", h)
+        return h
 
     def parts(self, loop: str) -> int:
         i = LOOPS.index(loop)
@@ -93,6 +104,7 @@ def factor_splits(n: int, k: int) -> tuple[tuple[int, ...], ...]:
     return tuple(outs)
 
 
+@lru_cache(maxsize=65536)
 def part_layer(layer: Layer, lm: LM) -> Layer:
     """Ceil-divided part-layer processed by one node (halo materialized)."""
     Bp = math.ceil(layer.B / lm.parts("B"))
@@ -105,9 +117,10 @@ def part_layer(layer: Layer, lm: LM) -> Layer:
     return replace(layer, B=Bp, C=Cp, H=Hp, W=Wp, K=Kp, pad=0)
 
 
+@lru_cache(maxsize=512)
 def enumerate_lms(layer: Layer, h_shape: int, w_shape: int,
                   orders: tuple[tuple[str, ...], ...] = DEFAULT_ORDERS,
-                  cap: int = 400) -> list[LM]:
+                  cap: int = 400) -> tuple[LM, ...]:
     """All legal LMs for mapping ``layer`` onto an ``h x w`` region."""
     lens = {"B": layer.B, "P": layer.P, "Q": layer.Q,
             "K": layer.K, "C": layer.C}
@@ -136,7 +149,7 @@ def enumerate_lms(layer: Layer, h_shape: int, w_shape: int,
             return r
         outs.sort(key=ragged)
         outs = outs[:cap]
-    return outs
+    return tuple(outs)
 
 
 # -- node placement ----------------------------------------------------------
@@ -269,9 +282,109 @@ def comm_estimate(layer: Layer, lm: LM, wr: int, hw: HwConfig) -> CommEstimate:
     return CommEstimate(lat, energy, stored)
 
 
-def wr_candidates(layer: Layer, lm: LM, n_cands: int = 5) -> list[int]:
-    """WR values from full replication down to 1 (Sec. VI-A)."""
-    n = lm.weight_share
+@lru_cache(maxsize=4096)
+def _ring_prefix_hops(lm: LM, loops: tuple[str, ...]) -> tuple[float, ...]:
+    """``ring_avg_hops(group_coords(lm, loops)[:k])`` for every prefix k.
+
+    O(n) total instead of O(n) per prefix: consecutive-hop partial sums plus
+    the wrap-around edge, dividing the integer hop total exactly as
+    :func:`ring_avg_hops` does (bitwise-identical means).
+    """
+    coords = group_coords(lm, loops)
+    out = [0.0, 0.0]  # k = 0, 1: single/no node, no ring
+    seg = 0
+    for k in range(2, len(coords) + 1):
+        a, b = coords[k - 2], coords[k - 1]
+        seg += abs(a[0] - b[0]) + abs(a[1] - b[1])
+        wrap = (abs(coords[k - 1][0] - coords[0][0])
+                + abs(coords[k - 1][1] - coords[0][1]))
+        out.append((seg + wrap) / k)
+    return tuple(out)
+
+
+def _ring_cost_vec(n, total_bytes, avg_hops, hw: HwConfig):
+    """Vectorized :func:`_ring_cost` (same op order, so bitwise-identical)."""
+    live = (n > 1) & (total_bytes > 0)
+    n_safe = np.where(live, n, 2)
+    chunk = total_bytes / n_safe
+    hop = np.maximum(1.0, avg_hops)
+    lat = (n_safe - 1) * chunk * hop / hw.link_bw_bytes
+    energy = ((n_safe - 1) * total_bytes * 8 * hop
+              * hw.cons.noc_energy_pj_per_bit_hop)
+    zero = np.zeros_like(lat)
+    return np.where(live, lat, zero), np.where(live, energy, zero)
+
+
+@lru_cache(maxsize=65536)
+def _comm_lm_row(layer: Layer, lm: LM, dbytes: int, psbytes: int) -> tuple:
+    """Per-(layer, LM) sharing structure: group sizes, byte counts, hops."""
+    pl = part_layer(layer, lm)
+    share_loops = tuple(l for l in ("B", "P", "Q") if lm.parts(l) > 1)
+    return (
+        lm.weight_share, lm.input_share, lm.psum_share,
+        lm.parts("K"), lm.parts("C"),
+        pl.weight_count * dbytes, pl.ifmap_count * dbytes,
+        pl.ofmap_count * psbytes,
+        _ring_prefix_hops(lm, share_loops),
+        ring_avg_hops(group_coords(lm, ("K",))) if lm.input_share > 1
+        else 0.0,
+        ring_avg_hops(group_coords(lm, ("C",))) if lm.psum_share > 1
+        else 0.0,
+    )
+
+
+def comm_estimate_batch(layer: Layer, hw: HwConfig, lms: Sequence[LM],
+                        wrs: Sequence[int]
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized :func:`comm_estimate` over parallel ``(lm, wr)`` arrays.
+
+    Per-LM structure (sharing-group sizes, ring hop distances) is computed
+    once per distinct LM through the cached coordinate helpers; the ring
+    latency/energy arithmetic then runs as float64 numpy over the whole
+    candidate axis with the same operation order as the scalar reference,
+    so results are bitwise-identical — the mapper's batched backend relies
+    on that for its parity guarantee.  Returns ``(latency_s, energy_pj,
+    weight_bytes_per_node)``.
+    """
+    m = len(lms)
+    z = np.zeros(m)
+    if m == 0 or not layer.is_heavy:
+        return z, z.copy(), z.copy()
+    dbytes = hw.cons.data_bits // 8
+    psbytes = hw.cons.psum_bits // 8
+
+    uniq: dict[LM, int] = {}
+    rows: list[tuple] = []
+    for lm in lms:
+        if lm in uniq:
+            continue
+        uniq[lm] = len(rows)
+        rows.append(_comm_lm_row(layer, lm, dbytes, psbytes))
+    li = np.array([uniq[lm] for lm in lms])
+    n_ws, n_is, n_ps, parts_k, parts_c, w_kc, i_bytes, p_bytes = (
+        np.array([r[f] for r in rows], dtype=np.int64)[li] for f in range(8))
+
+    wr = np.maximum(1, np.minimum(np.asarray(wrs, dtype=np.int64), n_ws))
+    group = np.ceil(n_ws / wr).astype(np.int64)
+    stored = w_kc / group
+
+    # weight sharing: ring over the first `group` share-loop coords
+    hops_w = np.array([rows[r][8][g] for r, g in zip(li, group)])
+    l1, e1 = _ring_cost_vec(np.where(group > 1, group, 1), w_kc, hops_w, hw)
+    e1 = e1 * (parts_k * parts_c * wr)
+    # input sharing across K
+    hops_i = np.array([rows[r][9] for r in li])
+    l2, e2 = _ring_cost_vec(n_is, i_bytes, hops_i, hw)
+    e2 = e2 * (n_ws * parts_c)
+    # psum reduction across C (~2 ring passes)
+    hops_p = np.array([rows[r][10] for r in li])
+    l3, e3 = _ring_cost_vec(n_ps, 2 * p_bytes, hops_p, hw)
+    e3 = e3 * (n_ws * parts_k)
+    return l1 + l2 + l3, e1 + e2 + e3, stored
+
+
+@lru_cache(maxsize=1024)
+def _wr_from_ws(n: int, n_cands: int) -> tuple[int, ...]:
     outs = []
     v = n
     while v >= 1 and len(outs) < n_cands:
@@ -281,4 +394,9 @@ def wr_candidates(layer: Layer, lm: LM, n_cands: int = 5) -> list[int]:
         v = max(1, v // 2)
     if 1 not in outs:
         outs.append(1)
-    return outs
+    return tuple(outs)
+
+
+def wr_candidates(layer: Layer, lm: LM, n_cands: int = 5) -> list[int]:
+    """WR values from full replication down to 1 (Sec. VI-A)."""
+    return list(_wr_from_ws(lm.weight_share, n_cands))

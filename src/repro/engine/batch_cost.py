@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import Sequence
 
 import jax
@@ -60,8 +60,13 @@ class PartSpec:
 # ---------------------------------------------------------------------------
 
 
+@lru_cache(maxsize=4096)
 def _candidate_grid(layer: Layer):
-    """The exact candidate tiling grid of ``part_layer_cost`` (same order)."""
+    """The exact candidate tiling grid of ``part_layer_cost`` (same order).
+
+    Cached (layers repeat massively across mapper candidate sweeps); callers
+    treat the returned array as read-only.
+    """
     tks = np.array(_tile_candidates(layer.K), dtype=np.int64)
     tcs = np.array(_tile_candidates(layer.C), dtype=np.int64)
     tps = np.array(_tile_candidates(layer.P), dtype=np.int64)
@@ -81,43 +86,68 @@ def _dl_fields(dl: DataLayout, channels: int) -> tuple[bool, int, int]:
     return False, g, g
 
 
-def _prep_specs(specs: Sequence[PartSpec]):
-    """Pack L part-layer specs into padded numpy arrays."""
-    grids = [_candidate_grid(s.layer) for s in specs]
-    t_max = max(g.shape[1] for g in grids)
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+_INT_KEYS = ("B", "C", "H", "W", "K", "HK", "WK", "stride", "P", "Q",
+             "in_g", "in_align", "out_g", "out_align")
+_FLAG_KEYS = ("heavy", "in_bhwc", "out_bhwc")
+_FLOAT_KEYS = ("macs", "w_vals", "i_vals", "o_vals")
+
+
+@lru_cache(maxsize=65536)
+def _spec_static(layer: Layer):
+    """The DL-independent row of one part-layer (mapper sweeps repeat them)."""
+    g = _candidate_grid(layer)
+    tb, tk, tc, tp, tq = g
+    th = (tp - 1) * layer.stride + layer.HK
+    tw = (tq - 1) * layer.stride + layer.WK
+    ints = tuple(getattr(layer, k) for k in _INT_KEYS[:10])
+    floats = (float(layer.macs), float(layer.weight_count),
+              float(layer.B * layer.C * layer.H * layer.W),
+              float(layer.B * layer.K * layer.P * layer.Q))
+    return g, int(np.argmin(tb * tc * th * tw)), ints, layer.is_heavy, floats
+
+
+def _prep_specs(specs: Sequence[PartSpec], *, t_pad: int | None = None):
+    """Pack L part-layer specs into padded numpy arrays.
+
+    ``t_pad`` fixes the candidate axis to a caller-chosen bucket width
+    (padding is masked invalid) so spec-chunked callers compile one XLA
+    program per ``(L, T-bucket)`` pair instead of one per distinct
+    tiling-grid size.
+    """
+    statics = [_spec_static(s.layer) for s in specs]
+    t_max = max(st[0].shape[1] for st in statics)
+    if t_pad is not None:
+        assert t_pad >= t_max, "t_pad below the largest candidate grid"
+        t_max = t_pad
     L = len(specs)
     tiles = np.ones((5, L, t_max), dtype=np.int64)
     valid = np.zeros((L, t_max), dtype=bool)
-    fallback = np.zeros(L, dtype=np.int64)
-    ints = {k: np.zeros(L, dtype=np.int64) for k in
-            ("B", "C", "H", "W", "K", "HK", "WK", "stride", "P", "Q",
-             "in_g", "in_align", "out_g", "out_align")}
-    flags = {k: np.zeros(L, dtype=bool) for k in
-             ("heavy", "in_bhwc", "out_bhwc")}
-    floats = {k: np.zeros(L, dtype=np.float64) for k in
-              ("macs", "w_vals", "i_vals", "o_vals")}
-    for i, s in enumerate(specs):
-        l = s.layer
-        g = grids[i]
+    int_rows, flag_rows, float_rows, fallback = [], [], [], []
+    for i, (s, (g, fb, ints, heavy, floats)) in enumerate(zip(specs, statics)):
         t = g.shape[1]
         tiles[:, i, :t] = g
         valid[i, :t] = True
-        tb, tk, tc, tp, tq = g
-        th = (tp - 1) * l.stride + l.HK
-        tw = (tq - 1) * l.stride + l.WK
-        fallback[i] = int(np.argmin(tb * tc * th * tw))
-        for k in ("B", "C", "H", "W", "K", "HK", "WK", "stride", "P", "Q"):
-            ints[k][i] = getattr(l, k)
-        flags["heavy"][i] = l.is_heavy
-        floats["macs"][i] = float(l.macs)
-        floats["w_vals"][i] = float(l.weight_count)
-        floats["i_vals"][i] = float(l.B * l.C * l.H * l.W)
-        floats["o_vals"][i] = float(l.B * l.K * l.P * l.Q)
-        bh, gi, al = _dl_fields(s.dl_in, l.C)
-        flags["in_bhwc"][i], ints["in_g"][i], ints["in_align"][i] = bh, gi, al
-        bh, go, al = _dl_fields(s.dl_out, l.K)
-        flags["out_bhwc"][i], ints["out_g"][i], ints["out_align"][i] = bh, go, al
-    return {"tiles": tiles, "valid": valid, "fallback": fallback,
+        fallback.append(fb)
+        in_bhwc, gi, ali = _dl_fields(s.dl_in, s.layer.C)
+        out_bhwc, go, alo = _dl_fields(s.dl_out, s.layer.K)
+        int_rows.append(ints + (gi, ali, go, alo))
+        flag_rows.append((heavy, in_bhwc, out_bhwc))
+        float_rows.append(floats)
+    int_arr = np.array(int_rows, dtype=np.int64)
+    flag_arr = np.array(flag_rows, dtype=bool)
+    float_arr = np.array(float_rows, dtype=np.float64)
+    ints = {k: np.ascontiguousarray(int_arr[:, j])
+            for j, k in enumerate(_INT_KEYS)}
+    flags = {k: np.ascontiguousarray(flag_arr[:, j])
+             for j, k in enumerate(_FLAG_KEYS)}
+    floats = {k: np.ascontiguousarray(float_arr[:, j])
+              for j, k in enumerate(_FLOAT_KEYS)}
+    return {"tiles": tiles, "valid": valid,
+            "fallback": np.array(fallback, dtype=np.int64),
             **ints, **flags, **floats}
 
 
@@ -428,7 +458,7 @@ class BatchCostResult:
 
 def batch_part_cost(configs: Sequence[HwConfig],
                     specs: Sequence[PartSpec | tuple],
-                    *, chunk: int = 32,
+                    *, chunk: int = 32, spec_chunk: int | None = None,
                     interpret: bool | None = None) -> BatchCostResult:
     """Score ``[len(configs), len(specs)]`` part-layer costs in one pipeline.
 
@@ -436,11 +466,61 @@ def batch_part_cost(configs: Sequence[HwConfig],
     candidate axis is materialized per block, so memory scales with
     ``chunk * L * T``).  Configs are padded to a full final chunk so XLA
     compiles exactly one program per (L, T, chunk) shape.
+
+    ``spec_chunk`` additionally blocks the *spec* axis — the mapper's
+    candidate sweeps batch thousands of part-layers against one config, so
+    memory must scale with ``spec_chunk * T`` instead of ``L * T``.  Blocks
+    are padded to a full ``spec_chunk`` (repeating the last spec) and the
+    candidate axis is bucketed to a power of two, bounding XLA compiles to
+    one program per (spec_chunk, T-bucket) pair.
     """
     specs = [s if isinstance(s, PartSpec) else PartSpec(*s) for s in specs]
     if not configs or not specs:
         raise ValueError("need at least one config and one spec")
-    lay_np = _prep_specs(specs)
+    fields = ("latency_s", "energy_pj", "compute_s", "dram_s",
+              "dram_bytes", "e_mac_pj", "e_sram_pj", "e_dram_pj",
+              "tiling", "use_bpq_outer")
+    t_pad = None
+    if spec_chunk is not None:
+        # group by candidate-axis bucket first: a mixed batch otherwise pads
+        # every small tiling grid to the largest one in the batch.  The
+        # bucket key is per-spec (floor 128: padding tiny grids up is cheaper
+        # than another dispatch round-trip), so a spec always lands in the
+        # same (spec_chunk, T) program whatever batch it arrives in.
+        buckets = {}
+        for i, s in enumerate(specs):
+            buckets.setdefault(
+                _next_pow2(max(128, _candidate_grid(s.layer).shape[1])),
+                []).append(i)
+        t_pad = max(buckets)
+        if len(buckets) > 1:
+            merged: dict[str, np.ndarray] = {}
+            for tb in sorted(buckets):
+                idxs = buckets[tb]
+                sub = batch_part_cost(configs, [specs[i] for i in idxs],
+                                      chunk=chunk, spec_chunk=spec_chunk,
+                                      interpret=interpret)
+                for f in fields:
+                    v = getattr(sub, f)
+                    if f not in merged:
+                        merged[f] = np.zeros((v.shape[0], len(specs))
+                                             + v.shape[2:], v.dtype)
+                    merged[f][:, idxs] = v
+            return BatchCostResult(configs=list(configs), specs=specs,
+                                   **merged)
+    if spec_chunk is not None and len(specs) > spec_chunk:
+        blocks = []
+        for s in range(0, len(specs), spec_chunk):
+            block = specs[s:s + spec_chunk]
+            n_real = len(block)
+            block = block + [block[-1]] * (spec_chunk - n_real)
+            res = batch_part_cost(configs, block, chunk=chunk,
+                                  spec_chunk=spec_chunk, interpret=interpret)
+            blocks.append((res, n_real))
+        merged = {f: np.concatenate([getattr(r, f)[:, :n] for r, n in blocks],
+                                    axis=1) for f in fields}
+        return BatchCostResult(configs=list(configs), specs=specs, **merged)
+    lay_np = _prep_specs(specs, t_pad=t_pad)
     cfg_np, cons = _prep_configs(configs)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

@@ -72,6 +72,7 @@ class Campaign:
                  n_sample: int = 512,
                  cons: PimConstraints = DEFAULT_CONSTRAINTS,
                  evaluator_kwargs: dict | None = None,
+                 mapper_backend: str | None = None,
                  checkpoint: str | Path | None = None,
                  max_workers: int | None = None,
                  cache: EvalCache | None = None,
@@ -83,7 +84,9 @@ class Campaign:
         self.seed = seed
         self.n_sample = n_sample
         self.cons = cons
-        self.evaluator_kwargs = evaluator_kwargs or {}
+        self.evaluator_kwargs = dict(evaluator_kwargs or {})
+        if mapper_backend is not None:
+            self.evaluator_kwargs["mapper_backend"] = mapper_backend
         self.checkpoint = Path(checkpoint) if checkpoint else None
         self.max_workers = max_workers or min(4, max(1, len(self.strategies)))
         self.cache = cache if cache is not None else EvalCache()
@@ -182,8 +185,13 @@ class Campaign:
 
     def run(self) -> CampaignResult:
         saved = self._load_checkpoint()
+        # campaigns walk many hardware configs: drop the hw-keyed mapper
+        # memos after each one so memory stays flat over long runs (a clear
+        # only costs re-derivation if another strategy is mid-evaluation)
+        kwargs = dict(self.evaluator_kwargs)
+        kwargs.setdefault("clear_caches_between_configs", True)
         evaluator = WorkloadEvaluator(self.workloads, cache=self.cache,
-                                      **self.evaluator_kwargs)
+                                      **kwargs)
         results: dict[str, DseResult] = {}
         resumed: list[str] = []
         timings: dict[str, float] = {}

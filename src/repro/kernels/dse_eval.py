@@ -75,6 +75,52 @@ def tile_select(compute_cycles, dram_cycles, valid, *, block_r: int = 8,
     return tot[:r], idx[:r]
 
 
+def _argmin_rows_kernel(x_ref, v_ref, min_ref, idx_ref):
+    x = jnp.where(v_ref[...], x_ref[...], jnp.inf)
+    min_ref[...] = jnp.min(x, axis=-1)
+    # first occurrence of the min, matching the scalar DP's strict-< update
+    idx_ref[...] = jnp.argmin(x, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def _argmin_rows(x, valid, *, block_r: int, interpret: bool):
+    r, t = x.shape
+    grid = (pl.cdiv(r, block_r),)
+    in_spec = pl.BlockSpec((block_r, t), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_r,), lambda i: (i,))
+    return pl.pallas_call(
+        _argmin_rows_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((r,), x.dtype),
+                   jax.ShapeDtypeStruct((r,), jnp.int32)],
+        interpret=interpret,
+    )(x, valid)
+
+
+def argmin_rows(x, valid=None, *, block_r: int = 128,
+                interpret: bool | None = None):
+    """``[R, T] -> ([R] min, [R] idx)`` row-wise masked min + first-argmin.
+
+    The Algorithm-2 knapsack inner reduction: one row per capacity cell, one
+    column per layer candidate.  Rows with no valid (finite) candidate return
+    ``inf`` / index 0; the caller maps those back to "no choice".
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    x = jnp.asarray(x)
+    if valid is None:
+        valid = jnp.ones(x.shape, dtype=bool)
+    r, t = x.shape
+    block_r = max(1, min(block_r, r))
+    pad = (-r) % block_r
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+    mn, idx = _argmin_rows(x, valid, block_r=block_r, interpret=interpret)
+    return mn[:r], idx[:r]
+
+
 def _max_rows_kernel(x_ref, v_ref, o_ref):
     x = jnp.where(v_ref[...], x_ref[...], -jnp.inf)
     o_ref[...] = jnp.max(x, axis=-1)

@@ -70,7 +70,7 @@ def _lower_one(cfg, shape, mesh, *, fsdp: bool, tcfg, microbatches: int,
                tp: bool = True):
     """Build + lower the cell's step function under the given mesh."""
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with shd.set_mesh(mesh):
         lowered = _build_lowered(cfg, shape, mesh, fsdp=fsdp, tcfg=tcfg,
                                  microbatches=microbatches, tp=tp)
     t_lower = time.time() - t0

@@ -17,17 +17,18 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.distributed.shardings import make_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int | None = None):
     """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    from repro.distributed.shardings import make_mesh
     n = len(jax.devices())
     m = model_axis or 1
-    return jax.make_mesh((n // m, m), ("data", "model"))
+    return make_mesh((n // m, m), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -13,8 +13,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 def one_device_mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return shd.make_mesh((1, 1), ("data", "model"))
 
 
 def test_param_specs_match_structure():
@@ -50,7 +49,7 @@ def test_constrain_is_noop_outside_mesh():
 
 def test_constrain_inside_mesh():
     mesh = one_device_mesh()
-    with jax.sharding.set_mesh(mesh):
+    with shd.set_mesh(mesh):
         x = jnp.ones((4, 8))
         y = shd.constrain(x, ("data",), "model")
         assert y.shape == x.shape
@@ -58,7 +57,7 @@ def test_constrain_inside_mesh():
 
 def test_attn_constraints_shapes_preserved():
     mesh = one_device_mesh()
-    with jax.sharding.set_mesh(mesh):
+    with shd.set_mesh(mesh):
         q = jnp.ones((2, 16, 14, 64))
         k = jnp.ones((2, 16, 2, 64))
         v = jnp.ones((2, 16, 2, 64))
