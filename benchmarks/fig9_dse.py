@@ -32,11 +32,15 @@ def _nets(tiny: bool = False):
 
 
 def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
-        strategies=STRATEGIES, checkpoint=None) -> list[dict]:
+        strategies=STRATEGIES, checkpoint=None,
+        evaluate_all_legal: bool = False) -> list[dict]:
+    # evaluate_all_legal=True maps EVERY legal proposal per iteration in one
+    # multi-config pass (more observations per DKL refit); the default keeps
+    # the paper's first-legal-only walk for Fig. 9 parity
     campaign = Campaign(
         _nets(tiny), strategies, iterations=iterations, seed=seed,
         n_sample=512, evaluator_kwargs=dict(mapper_kwargs=dict(MAPPER_KWARGS)),
-        checkpoint=checkpoint)
+        checkpoint=checkpoint, evaluate_all_legal=evaluate_all_legal)
     out = campaign.run()
     rows = []
     for name in strategies:

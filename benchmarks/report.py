@@ -183,6 +183,24 @@ def paper_section() -> str:
                   f"{r['speedup']:.1f}x |", "",
                   f"End-to-end `PimMapper.map` (googlenet): "
                   f"{r['map_speedup']:.2f}x faster batched.", ""]
+    multi = [r for r in rows if r.get("table") == "mapper_multi"]
+    if multi:
+        r = multi[-1]
+        lines += ["### Mapper — multi-config batched mapping "
+                  "(`PimMapper.map_many`)", "",
+                  f"End-to-end maps/sec over a batch of {r['batch']} "
+                  f"proposal configs (googlenet, one optimization pass); "
+                  f"contract: >=3x vs the scalar sequential reference at "
+                  f"batch >= 8.", "",
+                  "| path | maps/sec | speedup |", "|---|---|---|",
+                  f"| scalar sequential per-config `map()` | "
+                  f"{r['batch'] / r['scalar_seq_s']:.2f} | 1.0x |",
+                  f"| batched sequential per-config `map()` | "
+                  f"{r['maps_per_s_seq']:.2f} | "
+                  f"{r['scalar_seq_s'] / r['seq_s']:.2f}x |",
+                  f"| `map_many` (one multi-config batch) | "
+                  f"{r['maps_per_s_batched']:.2f} | "
+                  f"{r['speedup']:.2f}x |", ""]
     fig11 = [r for r in rows if r.get("table") == "fig11"]
     if fig11:
         lines += ["### Fig. 11 — throughput vs DDAM-lite "

@@ -4,7 +4,11 @@ Iterates: PIM-Tuner samples + filters + ranks hardware configs -> the
 area "simulator" validates -> PIM-Mapper + Data-Scheduler produce mapping
 schemes and EDP costs -> the tuner's DKL/filter models are refit.
 
-    PYTHONPATH=src python examples/dse_nicepim.py [--iters 8]
+    PYTHONPATH=src python examples/dse_nicepim.py [--iters 8] [--all-legal]
+
+``--all-legal`` maps EVERY legal proposal per iteration in one multi-config
+batch (``WorkloadEvaluator.evaluate_batch`` / ``PimMapper.map_many``) instead
+of the paper's first-legal-only walk — more observations per DKL refit.
 """
 
 import argparse
@@ -21,6 +25,9 @@ from repro.core.workloads import bert_base, googlenet
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--all-legal", action="store_true",
+                    help="map every legal proposal per iteration "
+                         "(multi-config batched mapping)")
     args = ap.parse_args()
 
     workloads = [googlenet(1, scale=4),
@@ -28,7 +35,8 @@ def main() -> None:
     evaluator = WorkloadEvaluator(
         workloads, mapper_kwargs=dict(max_optim_iter=1, lm_cap=60, n_wr=3))
     tuner = PimTuner(n_sample=512)
-    res = run_dse(tuner, evaluator, iterations=args.iters, verbose=True)
+    res = run_dse(tuner, evaluator, iterations=args.iters, verbose=True,
+                  evaluate_all_legal=args.all_legal)
     best = res.best()
     print("\nbest architecture found:")
     print(f"  node array : {best.cfg.na_row}x{best.cfg.na_col} "

@@ -90,9 +90,11 @@ class WorkloadEvaluator:
     the vectorized engine — or ``"scalar"``); it folds into
     ``mapper_kwargs`` so it also keys the content-addressed cache.
     ``clear_caches_between_configs=True`` drops the mapper-level memos
-    (candidate tables, node costs, Data-Scheduler solves — all keyed by
-    HwConfig) after each newly evaluated configuration, keeping long
-    multi-config campaigns at a flat memory footprint.
+    (candidate tables, node costs, Data-Scheduler solves — mostly hw-keyed,
+    plus the hw-independent shape memos) after each newly evaluated
+    configuration, keeping long multi-config campaigns at a flat memory
+    footprint; :meth:`evaluate_batch` clears once per batch instead so the
+    shape memos amortize across the whole batch.
     """
 
     def __init__(self, workloads: list[DnnGraph], *, alpha: float = 1.0,
@@ -114,6 +116,10 @@ class WorkloadEvaluator:
         self.evaluations = 0   # mapper runs actually performed
 
     def _content_key(self, cfg: HwConfig) -> str:
+        # hw_digest covers EVERY PimConstraints field alongside the variable
+        # tuple (audited: the cons feed the cost model, capacity, and NoC
+        # energies), so a config evaluated under different substrate
+        # constants can never alias a cached result
         from ..engine.cache import _sha, hw_digest, workloads_digest
         if self._wl_digest is None:
             # the result depends on the cost-function exponents and every
@@ -126,7 +132,10 @@ class WorkloadEvaluator:
         return hw_digest(cfg) + ":" + self._wl_digest
 
     def __call__(self, cfg: HwConfig) -> tuple[float, dict, dict]:
-        key = cfg.as_tuple()
+        # the constraints are part of the point's identity: two configs with
+        # the same variable tuple but different substrate constants (e.g. a
+        # different cap_bank_bytes) must never alias one cache entry
+        key = (cfg.as_tuple(), cfg.cons)
         if key in self._cache:
             return self._cache[key]
         ckey = None
@@ -147,7 +156,10 @@ class WorkloadEvaluator:
                 try:
                     rep = evaluate_mapping(mapper.map(g))
                 except RuntimeError:   # capacity-infeasible mapping
-                    cost = math.inf
+                    # earlier workloads' numbers must not leak into the
+                    # caches alongside the inf cost: an infeasible config
+                    # has no meaningful per-workload latency/energy entries
+                    cost, lats, ens = math.inf, {}, {}
                     break
                 lats[g.name] = rep.latency_s
                 ens[g.name] = rep.energy_pj
@@ -165,12 +177,82 @@ class WorkloadEvaluator:
             self.cache.put(ckey, out)
         return out
 
+    def evaluate_batch(self, cfgs: list[HwConfig]
+                       ) -> list[tuple[float, dict, dict]]:
+        """Evaluate several configs, batch-mapping each workload across them.
+
+        Every workload is mapped under all still-feasible configs in one
+        :meth:`PimMapper.map_many` pass — the engine's ``[N configs]`` batch
+        axis — instead of one candidate-costing sweep per config.  Results
+        are identical to per-config ``__call__`` (pinned by the parity tests)
+        and feed the same two caches; duplicate configs in the batch are
+        evaluated once.  With ``clear_caches_between_configs`` the mapper
+        memos are dropped once after the whole batch (clearing inside it
+        would defeat the cross-config batching).
+        """
+        out: list = [None] * len(cfgs)
+        todo: dict[tuple, list[int]] = {}    # cfg tuple -> batch positions
+        cfg_of: dict[tuple, HwConfig] = {}
+        for i, cfg in enumerate(cfgs):
+            key = (cfg.as_tuple(), cfg.cons)
+            if key in self._cache:
+                out[i] = self._cache[key]
+                continue
+            if key not in todo and self.cache is not None:
+                hit = self.cache.get(self._content_key(cfg))
+                if hit is not None:
+                    res = (hit[0], dict(hit[1]), dict(hit[2]))
+                    self._cache[key] = res
+                    out[i] = res
+                    continue
+            todo.setdefault(key, []).append(i)
+            cfg_of.setdefault(key, cfg)
+        if not todo:
+            return out
+        self.evaluations += len(todo)
+        mapper = PimMapper(next(iter(cfg_of.values())), **self.mapper_kwargs)
+        costs = {k: 0.0 for k in todo}
+        lats: dict[tuple, dict] = {k: {} for k in todo}
+        ens: dict[tuple, dict] = {k: {} for k in todo}
+        live = list(todo)
+        try:
+            for g in self.workloads:
+                if not live:
+                    break
+                mappings = mapper.map_many(
+                    g, [cfg_of[k] for k in live], on_infeasible="none")
+                still = []
+                for k, m in zip(live, mappings):
+                    if m is None:      # capacity-infeasible: same containment
+                        costs[k] = math.inf   # as __call__ — nothing leaks
+                        lats[k], ens[k] = {}, {}
+                        continue
+                    rep = evaluate_mapping(m)
+                    lats[k][g.name] = rep.latency_s
+                    ens[k][g.name] = rep.energy_pj
+                    energy_j = rep.energy_pj * 1e-12
+                    costs[k] += (energy_j ** self.alpha) \
+                        * (rep.latency_s ** self.beta) * self.gamma
+                    still.append(k)
+                live = still
+        finally:
+            if self.clear_caches_between_configs:
+                clear_mapper_caches()
+        for k, positions in todo.items():
+            res = (costs[k], lats[k], ens[k])
+            self._cache[k] = res
+            if self.cache is not None:
+                self.cache.put(self._content_key(cfg_of[k]), res)
+            for i in positions:
+                out[i] = res
+        return out
+
 
 def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
             propose_k: int = 8,
             cons: PimConstraints = DEFAULT_CONSTRAINTS,
             verbose: bool = False, pareto=None, start_iteration: int = 0,
-            on_iteration=None) -> DseResult:
+            on_iteration=None, evaluate_all_legal: bool = False) -> DseResult:
     """One strategy's DSE loop (Fig. 7).
 
     The whole proposal batch is area-checked in one vectorized call
@@ -179,6 +261,15 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
     latency/energy/area :class:`ParetoPoint` per legal finite observation;
     ``on_iteration(it, new_obs)`` fires after every iteration (campaign
     checkpointing); ``start_iteration`` supports checkpoint resume.
+
+    ``evaluate_all_legal=False`` (default) keeps the paper's Fig. 7-4 walk:
+    candidates are taken in proposal order until the first legal one, which
+    alone is mapped.  ``evaluate_all_legal=True`` maps EVERY legal proposal
+    of the batch through ``evaluator.evaluate_batch`` (one multi-config
+    candidate-costing pass) — each iteration then feeds ``propose_k``
+    observations to ``strategy.observe`` and the Pareto front instead of at
+    most one mapped point, widening the suggestion model's dataset per
+    refit at far less than ``propose_k`` times the mapping cost.
     """
     from ..engine.batch_cost import batch_area_mm2
     obs: list[Observation] = []
@@ -186,43 +277,60 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
         t0 = time.time()
         it_obs: list[Observation] = []
         props = strategy.propose(propose_k)
-        chosen = None
         areas = batch_area_mm2(props)
-        # walk the batch in proposal order until a legal architecture
-        # appears (Fig. 7-4); illegal prefixes still train the filter model
-        for cfg, area in zip(props, areas):
-            area = float(area)
-            legal = area <= cons.area_budget_mm2
-            if legal:
-                chosen = (cfg, area)
-                break
-            strategy.observe(cfg, area, None)
-            it_obs.append(Observation(it, cfg, area, False))
-        if chosen is None:
-            obs.extend(it_obs)
-            if on_iteration is not None:
-                on_iteration(it, it_obs)
-            continue
-        cfg, area = chosen
-        cost, lats, ens = evaluator(cfg)
-        if math.isinf(cost):
-            strategy.observe(cfg, area, None)
-            it_obs.append(Observation(it, cfg, area, True))
+        evaluated: list[tuple[HwConfig, float, tuple]] = []
+        if evaluate_all_legal:
+            # every legal proposal is mapped, batched across configs
+            legal_pairs = []
+            for cfg, area in zip(props, areas):
+                area = float(area)
+                if area <= cons.area_budget_mm2:
+                    legal_pairs.append((cfg, area))
+                else:
+                    strategy.observe(cfg, area, None)
+                    it_obs.append(Observation(it, cfg, area, False))
+            if legal_pairs:
+                results = evaluator.evaluate_batch(
+                    [cfg for cfg, _ in legal_pairs])
+                evaluated = [(cfg, area, res) for (cfg, area), res
+                             in zip(legal_pairs, results)]
         else:
-            strategy.observe(cfg, area, cost)
-            it_obs.append(Observation(it, cfg, area, True, cost, lats, ens))
-            if pareto is not None:
-                from ..engine.pareto import ParetoPoint
-                pareto.offer(ParetoPoint(sum(lats.values()),
-                                         sum(ens.values()), area,
-                                         payload=list(cfg.as_tuple())))
-        strategy.fit()
+            # walk the batch in proposal order until a legal architecture
+            # appears (Fig. 7-4); illegal prefixes still train the filter
+            chosen = None
+            for cfg, area in zip(props, areas):
+                area = float(area)
+                if area <= cons.area_budget_mm2:
+                    chosen = (cfg, area)
+                    break
+                strategy.observe(cfg, area, None)
+                it_obs.append(Observation(it, cfg, area, False))
+            if chosen is not None:
+                cfg, area = chosen
+                evaluated = [(cfg, area, evaluator(cfg))]
+        for cfg, area, (cost, lats, ens) in evaluated:
+            if math.isinf(cost):
+                strategy.observe(cfg, area, None)
+                it_obs.append(Observation(it, cfg, area, True))
+            else:
+                strategy.observe(cfg, area, cost)
+                it_obs.append(Observation(it, cfg, area, True, cost, lats,
+                                          ens))
+                if pareto is not None:
+                    from ..engine.pareto import ParetoPoint
+                    pareto.offer(ParetoPoint(sum(lats.values()),
+                                             sum(ens.values()), area,
+                                             payload=list(cfg.as_tuple())))
+        if evaluated:
+            strategy.fit()
         obs.extend(it_obs)
         if on_iteration is not None:
             on_iteration(it, it_obs)
-        if verbose:
+        if verbose and evaluated:
+            cfg, area, (cost, _, _) = evaluated[0]
             print(f"[dse:{getattr(strategy, 'name', 'nicepim')}] it={it} "
-                  f"cfg={cfg.as_tuple()} area={area:.1f} "
+                  f"mapped={len(evaluated)} cfg={cfg.as_tuple()} "
+                  f"area={area:.1f} "
                   f"cost={cost if not math.isinf(cost) else 'inf'} "
                   f"({time.time() - t0:.1f}s)")
     return DseResult(obs)

@@ -10,6 +10,11 @@ The DP's ``Perf`` values use fast analytic ring estimates for the
 data-sharing traffic (``partition.comm_estimate``); the final chosen mapping
 is re-costed with the Data-Scheduler's optimized Hamilton cycles
 (:func:`evaluate_mapping`), mirroring the paper's mapper→scheduler split.
+
+:meth:`PimMapper.map_many` maps one DNN under a whole batch of hardware
+configs in lockstep, costing every phase's candidate sweep in one
+multi-config engine call (``engine.batch_part_cost_paired``) — the DSE
+loop's ``evaluate_all_legal`` path maps entire proposal batches through it.
 """
 
 from __future__ import annotations
@@ -19,15 +24,17 @@ import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import lru_cache
+from typing import Sequence
 
 from .costmodel import part_layer_cost
 from .hardware import HwConfig
 from .ir import DnnGraph, Layer, Segment
 from .layout import DataLayout, enumerate_layouts
 from .noc import MeshNoc
-from .partition import (LM, comm_estimate, comm_estimate_batch, enumerate_lms,
-                        group_coords, loop_strides, part_layer, wr_candidates,
-                        LOOPS)
+from .partition import (LM, comm_batch_geometry, comm_estimate,
+                        comm_estimate_batch, comm_eval_geometry,
+                        enumerate_lms, group_coords, loop_strides, part_layer,
+                        wr_candidates, LOOPS)
 from .regions import SM, Region, gen_sm_candidates
 from .scheduler import solve_ilp_ls, SOLVERS
 
@@ -144,6 +151,19 @@ class _BoundedCache:
             while len(self._d) > self.maxsize:
                 self._d.popitem(last=False)
 
+    def put_many(self, items) -> None:
+        """Insert ``(key, value)`` pairs under ONE lock acquisition.
+
+        The multi-config fill writes tens of thousands of node latencies per
+        batch; per-entry locking would dominate the fill itself.
+        """
+        with self._lock:
+            d = self._d
+            for key, value in items:
+                d[key] = value
+            while len(d) > self.maxsize:
+                d.popitem(last=False)
+
     def clear(self) -> None:
         with self._lock:
             self._d.clear()
@@ -152,19 +172,26 @@ class _BoundedCache:
 _BATCH_CANDS = _BoundedCache(_CACHE_CANDIDATES)
 _NODE_LAT = _BoundedCache(_CACHE_NODE_LAT)
 _CAND_STRUCT = _BoundedCache(_CACHE_CANDIDATES)
+_CAND_BASE = _BoundedCache(_CACHE_CANDIDATES)
+_COMM_GEOM = _BoundedCache(_CACHE_CANDIDATES)
 
 
 def clear_mapper_caches() -> None:
     """Drop every mapper-level memo (candidates, node costs, schedules).
 
-    Entries are keyed by :class:`HwConfig`, so nothing carries over between
-    hardware configurations anyway — campaigns call this between configs to
-    keep long multi-config runs at a flat memory footprint.
+    Campaigns call this between configs to keep long multi-config runs at a
+    flat memory footprint.  Most entries are keyed by :class:`HwConfig` and
+    carry nothing across configurations anyway; the hw-independent shape
+    memos (``_CAND_BASE``, ``_COMM_GEOM``) ARE reusable across configs but
+    are dropped too, keeping the memory guarantee simple — ``map_many``
+    amortizes them across a whole batch before the next clear.
     """
     _layer_candidates.cache_clear()
     _BATCH_CANDS.clear()
     _NODE_LAT.clear()
     _CAND_STRUCT.clear()
+    _CAND_BASE.clear()
+    _COMM_GEOM.clear()
     _sharing_latency.cache_clear()
     part_layer_cost.cache_clear()
 
@@ -191,10 +218,109 @@ def _batched_node_latencies(hw: HwConfig,
         lat = batch_part_cost([hw], [k[1:] for k in missing],
                               spec_chunk=1024).latency_s[0]
         fresh = {key: float(lat[j]) for key, j in missing.items()}
-        for key, v in fresh.items():
-            _NODE_LAT.put(key, v)
+        _NODE_LAT.put_many(fresh.items())
         vals = [fresh[key] if v is None else v
                 for key, v in zip(keys, vals)]
+    return np.array(vals)
+
+
+def _fill_node_latencies_multi(requests) -> dict:
+    """Warm ``_NODE_LAT`` for several configs' spec lists in one engine call.
+
+    ``requests`` is ``[(hw, [spec, ...]), ...]`` with ``spec = (part-layer,
+    dl_in, dl_out)``.  Missing cells are costed through ONE multi-config
+    ``batch_part_cost_paired`` call per shared :class:`PimConstraints` group
+    — each (config, spec) pair rides the engine's spec axis with its config
+    fields broadcast alongside, so compute scales with the number of missing
+    pairs (configs' candidate sets are mostly disjoint; a full ``[N configs]
+    x [union specs]`` grid would waste ~N x the work) while the dispatch
+    count drops from one per config to one per batch.
+
+    Returns the freshly costed ``{(hw,) + spec: latency}`` dict.  Callers
+    consume it directly (falling back to :func:`_batched_node_latencies` for
+    anything not in it): the fills are larger than any single cache bound
+    should have to accommodate, so round-tripping a huge batch through the
+    FIFO-bounded ``_NODE_LAT`` could evict its own warm entries before they
+    are read.  The memo write-back is advisory warming for later sweeps, and
+    a concurrent ``clear_mapper_caches`` between fill and read only costs a
+    single-config re-derivation.
+    """
+    missing: dict[HwConfig, dict[tuple, None]] = {}
+    for hw, specs in requests:
+        d = missing.setdefault(hw, {})
+        for s in specs:
+            if (hw,) + s not in _NODE_LAT:
+                d[s] = None
+    missing = {hw: d for hw, d in missing.items() if d}
+    fresh: dict[tuple, float] = {}
+    if not missing:
+        return fresh
+    from ..engine.batch_cost import batch_part_cost_paired
+    groups: dict[object, list[HwConfig]] = {}
+    for hw in missing:  # one engine batch must share one PimConstraints
+        groups.setdefault(hw.cons, []).append(hw)
+    for hws in groups.values():
+        pairs = [(hw, s) for hw in hws for s in missing[hw]]
+        lat = batch_part_cost_paired([hw for hw, _ in pairs],
+                                     [s for _, s in pairs]).latency_s[0]
+        for (hw, s), v in zip(pairs, lat):
+            fresh[(hw,) + s] = float(v)
+    _NODE_LAT.put_many(fresh.items())
+    return fresh
+
+
+def _prefetch_candidates_multi(key_lists) -> dict[tuple, tuple]:
+    """Cost every missing candidate table of several key sets in one call.
+
+    ``key_lists`` holds one ``_cand_key`` list per hardware config (the hw is
+    the first key element); the node latencies of every missing table are
+    costed through one multi-config :func:`_fill_node_latencies_multi` pass.
+    Returns a table per requested key, like
+    :meth:`PimMapper._prefetch_candidates` (which delegates here) — callers
+    consume the returned dict rather than re-reading ``_BATCH_CANDS``, so a
+    concurrent ``clear_mapper_caches()`` can only ever cost re-derivation,
+    never correctness.
+    """
+    out: dict[tuple, tuple] = {}
+    work = []
+    for keys in key_lists:
+        for key in keys:
+            if key in out:
+                continue
+            got = _BATCH_CANDS.get(key)
+            if got is None:
+                out[key] = ()  # placeholder: dedupes repeated missing keys
+                hw, layer, h, w, din, dout, n_wr, lm_cap = key
+                struct = _cand_struct(hw, layer, h, w, n_wr, lm_cap)
+                work.append((hw, key, struct,
+                             [(pl, din, dout) for pl in struct.uniq_pls]))
+            else:
+                out[key] = got
+    if not work:
+        return out
+    fresh = _fill_node_latencies_multi([(hw, specs)
+                                        for hw, _, _, specs in work])
+    for hw, key, struct, specs in work:
+        node_lat = _node_lat_from(fresh, hw, specs)
+        table = _layer_candidates_batched(struct, node_lat)
+        out[key] = table
+        _BATCH_CANDS.put(key, table)
+    return out
+
+
+def _node_lat_from(fresh: dict, hw: HwConfig, specs) -> np.ndarray:
+    """Node latencies from a fill's returned dict, memo-backed.
+
+    Prefers the freshly costed values (immune to FIFO self-eviction on huge
+    fills), falls back per key to the memo, and re-derives through
+    :func:`_batched_node_latencies` only if a concurrent clear dropped both.
+    """
+    vals = [fresh.get((hw,) + s) for s in specs]
+    if any(v is None for v in vals):
+        vals = [_NODE_LAT.get((hw,) + s) if v is None else v
+                for v, s in zip(vals, specs)]
+    if any(v is None for v in vals):
+        return _batched_node_latencies(hw, specs)
     return np.array(vals)
 
 
@@ -218,10 +344,28 @@ class _CandStruct:
     by_wr: list[tuple[int, np.ndarray]]  # WR -> pair indices, first-seen order
 
 
-def _cand_struct(hw: HwConfig, layer: Layer, h_shape: int, w_shape: int,
-                 n_wr: int, lm_cap: int) -> _CandStruct:
-    key = (hw, layer, h_shape, w_shape, n_wr, lm_cap)
-    got = _CAND_STRUCT.get(key)
+@dataclass
+class _CandBase:
+    """The hardware-independent half of :class:`_CandStruct`.
+
+    LM enumeration, part-layer dedup, and the (LM x WR) pair structure
+    depend only on (layer, region shape, mapper knobs) — never on the
+    :class:`HwConfig` — so one base serves every config that visits the
+    shape.  Cached separately from the per-hw comm arrays: a multi-config
+    batch builds each base once instead of once per config.
+    """
+
+    uniq_pls: list[Layer]
+    pair_pl: np.ndarray
+    pair_lm_of: list[LM]
+    pair_wrs: list[int]
+    by_wr: list[tuple[int, np.ndarray]]
+
+
+def _cand_base(layer: Layer, h_shape: int, w_shape: int,
+               n_wr: int, lm_cap: int) -> _CandBase:
+    key = (layer, h_shape, w_shape, n_wr, lm_cap)
+    got = _CAND_BASE.get(key)
     if got is not None:
         return got
     lms = enumerate_lms(layer, h_shape, w_shape, cap=lm_cap)
@@ -240,15 +384,46 @@ def _cand_struct(hw: HwConfig, layer: Layer, h_shape: int, w_shape: int,
             pair_lms.append(lm)
             pair_wrs.append(wr)
             pair_pl.append(pi)
-    comm_lat, _, stored = comm_estimate_batch(layer, hw, pair_lms, pair_wrs)
     by_wr: dict[int, list[int]] = {}
     for p, wr in enumerate(pair_wrs):       # first-seen WR order, like the
         by_wr.setdefault(wr, []).append(p)  # scalar best-dict insertion
-    struct = _CandStruct(
+    base = _CandBase(
         uniq_pls=uniq_pls, pair_pl=np.array(pair_pl, dtype=np.intp),
-        pair_lm_of=pair_lms, comm_lat=comm_lat, stored=stored,
+        pair_lm_of=pair_lms, pair_wrs=pair_wrs,
         by_wr=[(wr, np.array(idxs, dtype=np.intp))
                for wr, idxs in by_wr.items()])
+    _CAND_BASE.put(key, base)
+    return base
+
+
+def _cand_struct(hw: HwConfig, layer: Layer, h_shape: int, w_shape: int,
+                 n_wr: int, lm_cap: int) -> _CandStruct:
+    key = (hw, layer, h_shape, w_shape, n_wr, lm_cap)
+    got = _CAND_STRUCT.get(key)
+    if got is not None:
+        return got
+    base = _cand_base(layer, h_shape, w_shape, n_wr, lm_cap)
+    m = len(base.pair_lm_of)
+    dbytes = hw.cons.data_bits // 8
+    psbytes = hw.cons.psum_bits // 8
+    if m == 0 or not layer.is_heavy:
+        z = np.zeros(m)
+        comm_lat, stored = z, z.copy()
+    else:
+        # the ring/sharing geometry is hw-independent: compute it once per
+        # (shape, data-width) key and re-apply only the per-hw scalars —
+        # multi-config batches revisit the same shapes under many configs
+        gkey = (layer, h_shape, w_shape, n_wr, lm_cap, dbytes, psbytes)
+        geom = _COMM_GEOM.get(gkey)
+        if geom is None:
+            geom = comm_batch_geometry(layer, base.pair_lm_of, base.pair_wrs,
+                                       dbytes, psbytes)
+            _COMM_GEOM.put(gkey, geom)
+        comm_lat, _, stored = comm_eval_geometry(geom, hw)
+    struct = _CandStruct(
+        uniq_pls=base.uniq_pls, pair_pl=base.pair_pl,
+        pair_lm_of=base.pair_lm_of, comm_lat=comm_lat, stored=stored,
+        by_wr=base.by_wr)
     _CAND_STRUCT.put(key, struct)
     return struct
 
@@ -291,6 +466,49 @@ def _on_tpu() -> bool:
     return _ON_TPU
 
 
+def _resolve_reduce(reduce: str) -> str:
+    if reduce == "auto":
+        return "pallas" if _on_tpu() else "numpy"
+    if reduce not in ("numpy", "pallas"):
+        raise ValueError(f"unknown DP reduce {reduce!r}; "
+                         f"expected 'auto', 'numpy' or 'pallas'")
+    return reduce
+
+
+def minplus_convolve(tab: np.ndarray, best: np.ndarray, *,
+                     reduce: str = "auto") -> tuple[np.ndarray, np.ndarray]:
+    """Min-plus convolution ``out[c] = min_i(tab[i] + best[c - i])`` + argmin.
+
+    Array form of the segment-combination step of Algorithm 2: every
+    ``(cap, prefix-budget)`` split of the shared per-node DRAM budget is
+    scored at once and reduced with a min + *first*-argmin over the prefix
+    budget ``i`` — the exact first-strict-< winner of the old sequential
+    i-ascending update loop.  ``reduce`` picks vectorized NumPy or the Pallas
+    ``kernels.dse_eval.minplus_rows`` kernel (``interpret=True`` off-TPU).
+
+    Returns ``(out, arg)`` with ``arg[c] = -1`` where no feasible split
+    exists (``out[c]`` stays ``inf``), matching the old loop's untouched
+    ``arg_i`` cells.
+    """
+    u = len(tab) - 1
+    ext = np.concatenate([np.full(u, INF), best])
+    # rows[c, i] = best[c - i] for i <= c, inf otherwise (Toeplitz of best)
+    rows = np.lib.stride_tricks.sliding_window_view(ext, u + 1)[:, ::-1]
+    if _resolve_reduce(reduce) == "pallas":
+        from jax.experimental import enable_x64
+        from ..kernels import dse_eval
+        with enable_x64():
+            mn, idx = dse_eval.minplus_rows(tab, np.ascontiguousarray(rows))
+        mn = np.asarray(mn)
+        idx = np.asarray(idx)
+    else:
+        scores = tab[None, :] + rows
+        idx = scores.argmin(axis=1)
+        mn = scores[np.arange(scores.shape[0]), idx]  # one reduction pass
+    arg = np.where(np.isfinite(mn), idx, -1).astype(np.int32)
+    return mn, arg
+
+
 class RegionTable:
     """Knapsack result for one region: monotone perf-vs-capacity + backtrack.
 
@@ -309,10 +527,7 @@ class RegionTable:
 
     def __init__(self, layer_cands, units: int, unit_bytes: float,
                  *, reduce: str = "auto"):
-        if reduce == "auto":
-            reduce = "pallas" if _on_tpu() else "numpy"
-        if reduce not in ("numpy", "pallas"):
-            raise ValueError(f"unknown RegionTable reduce {reduce!r}")
+        reduce = _resolve_reduce(reduce)
         self.layer_cands = layer_cands
         self.units = units
         perf = np.zeros(units + 1)
@@ -365,6 +580,11 @@ class RegionTable:
             eff = int(self.eff[li, cap])
             ci = int(self.choice[li, eff])
             if ci < 0:  # infeasible cell: fall back to fastest candidate
+                if not cands:
+                    # a layer with zero legal candidates has nothing to fall
+                    # back on — leave it unpicked so infeasibility stays
+                    # contained to this layer instead of raising here
+                    continue
                 ci = min(range(len(cands)), key=lambda i: cands[i][1])
                 picks[lname] = ci
                 continue
@@ -430,38 +650,7 @@ class PimMapper:
         config) may empty or evict the shared cache at any point, and must
         only ever cost re-derivation, never correctness.
         """
-        out: dict[tuple, tuple] = {}
-        missing = []
-        for key in keys:
-            if key in out:
-                continue
-            got = _BATCH_CANDS.get(key)
-            if got is None:
-                out[key] = ()  # placeholder: dedupes repeated missing keys
-                missing.append(key)
-            else:
-                out[key] = got
-        if not missing:
-            return out
-        # every (key, lm) pair contributes one part-layer spec; identical
-        # part-layers (different P_order, collapsed ceil-divisions, repeated
-        # layer shapes) dedupe inside _batched_node_latencies' memo
-        work = []
-        for key in missing:
-            _, layer, h, w, din, dout, n_wr, lm_cap = key
-            struct = _cand_struct(self.hw, layer, h, w, n_wr, lm_cap)
-            work.append((key, struct,
-                         [(pl, din, dout) for pl in struct.uniq_pls]))
-        flat = [s for _, _, specs in work for s in specs]
-        node_lat = _batched_node_latencies(self.hw, flat)
-        at = 0
-        for key, struct, specs in work:
-            table = _layer_candidates_batched(
-                struct, node_lat[at:at + len(specs)])
-            out[key] = table
-            _BATCH_CANDS.put(key, table)
-            at += len(specs)
-        return out
+        return _prefetch_candidates_multi([keys])
 
     # ---- DL bookkeeping ------------------------------------------------------
     def _default_dl(self, channels: int) -> DataLayout:
@@ -490,30 +679,121 @@ class PimMapper:
                 ch.dl_in, ch.dl_out = dls[name]
         return mapping
 
+    def _with_hw(self, hw: HwConfig) -> "PimMapper":
+        if hw == self.hw:
+            return self
+        return PimMapper(hw, max_optim_iter=self.max_optim_iter,
+                         cap_units=self.cap_units, lm_cap=self.lm_cap,
+                         n_wr=self.n_wr, sm_max_regions=self.sm_max_regions,
+                         dl_max_group=self.dl_max_group, backend=self.backend,
+                         dp_reduce=self.dp_reduce)
+
+    def map_many(self, graph: DnnGraph, cfgs: Sequence[HwConfig],
+                 *, on_infeasible: str = "raise") -> list[Mapping | None]:
+        """Map ``graph`` under several hardware configs, batched across them.
+
+        Every config's Algorithm-1 iteration runs in lockstep so each phase's
+        candidate sweep — the (SM x LM x WR x layer x region) costing and the
+        DL layout sweep — is costed in ONE multi-config
+        ``engine.batch_part_cost`` call (the engine's ``[N configs]`` axis)
+        instead of one engine round-trip per config.  Batching only pre-warms
+        the shared memos; the per-config DP/backtracking path is the exact
+        :meth:`map` code, so results are identical to per-config ``map()``
+        calls (pinned by the parity tests).
+
+        ``on_infeasible`` controls configs with no capacity-feasible mapping:
+        ``"raise"`` propagates the :class:`RuntimeError` like :meth:`map`
+        (the default); ``"none"`` leaves ``None`` in that config's slot and
+        continues the rest of the batch.
+        """
+        if on_infeasible not in ("raise", "none"):
+            raise ValueError(f"unknown on_infeasible {on_infeasible!r}; "
+                             f"expected 'raise' or 'none'")
+        subs = [self._with_hw(cfg) for cfg in cfgs]
+        if self.backend == "scalar":  # reference path: plain per-config loop
+            out: list[Mapping | None] = []
+            for sub in subs:
+                try:
+                    out.append(sub.map(graph))
+                except RuntimeError:
+                    if on_infeasible == "raise":
+                        raise
+                    out.append(None)
+            return out
+        segments = graph.segments()
+        dls = [sub._init_dls(graph) for sub in subs]
+        mappings: list[Mapping | None] = [None] * len(subs)
+        alive = list(range(len(subs)))
+        seg_sms = {i: subs[i]._seg_sms(graph, segments)
+                   for i in range(len(subs))}
+        for _ in range(self.max_optim_iter):
+            # the returned tables are handed straight to each sub's solve —
+            # a batch whose key union exceeds the _BATCH_CANDS bound must
+            # not self-evict into per-config engine fills
+            tables = _prefetch_candidates_multi(
+                [subs[i]._solve_keys(graph, segments, seg_sms[i], dls[i])
+                 for i in alive])
+            for i in list(alive):
+                try:
+                    mappings[i] = subs[i]._solve_sm_lm_wr(
+                        graph, segments, dls[i], seg_sms=seg_sms[i],
+                        cand_tables=tables)
+                except RuntimeError:
+                    if on_infeasible == "raise":
+                        raise
+                    mappings[i] = None
+                    alive.remove(i)
+            sweeps = {i: subs[i]._dl_sweep_specs(graph, mappings[i])
+                      for i in alive}
+            fresh = _fill_node_latencies_multi(
+                [(subs[i].hw, sweeps[i][1]) for i in alive])
+            for i in alive:
+                entries, specs = sweeps[i]
+                lat = _node_lat_from(fresh, subs[i].hw, specs)
+                table = {e: float(l) for e, l in zip(entries, lat)}
+                dls[i] = subs[i]._optimize_dl(graph, mappings[i], dls[i],
+                                              table=table)
+                for name, ch in mappings[i].choices.items():
+                    ch.dl_in, ch.dl_out = dls[i][name]
+        return mappings
+
+    def _seg_sms(self, graph: DnnGraph, segments: list[Segment]):
+        return [gen_sm_candidates(graph, seg, self.hw.na_row, self.hw.na_col,
+                                  self.sm_max_regions) for seg in segments]
+
+    def _solve_keys(self, graph: DnnGraph, segments: list[Segment],
+                    seg_sms, dls) -> list[tuple]:
+        """Every candidate-table key one ``_solve_sm_lm_wr`` pass touches."""
+        keys = []
+        for seg, sms in zip(segments, seg_sms):
+            for sm in sms:
+                for ri, region in enumerate(sm.regions):
+                    for bi in sm.branches_of(ri):
+                        for lname in seg.branches[bi].heavy_layers(graph):
+                            din, dout = dls[lname]
+                            keys.append(self._cand_key(
+                                graph.layer(lname), region.h_shape,
+                                region.w_shape, din, dout))
+        return keys
+
     def _solve_sm_lm_wr(self, graph: DnnGraph, segments: list[Segment],
-                        dls) -> Mapping:
+                        dls, seg_sms=None, cand_tables=None) -> Mapping:
         hw = self.hw
         units = self.cap_units
         unit_bytes = hw.node_dram_capacity / units
-        seg_sms = [gen_sm_candidates(graph, seg, hw.na_row, hw.na_col,
-                                     self.sm_max_regions) for seg in segments]
-        cand_tables: dict[tuple, tuple] = {}
-        if self.backend == "batched":
-            # every (LM x WR x layer x region-shape) candidate of the whole
-            # network is costed up front in one chunked engine call; the
-            # costing loop below reads the returned dict, so cache eviction
-            # or a concurrent clear can never force per-key dispatches
-            keys = []
-            for seg, sms in zip(segments, seg_sms):
-                for sm in sms:
-                    for ri, region in enumerate(sm.regions):
-                        for bi in sm.branches_of(ri):
-                            for lname in seg.branches[bi].heavy_layers(graph):
-                                din, dout = dls[lname]
-                                keys.append(self._cand_key(
-                                    graph.layer(lname), region.h_shape,
-                                    region.w_shape, din, dout))
-            cand_tables = self._prefetch_candidates(keys)
+        if seg_sms is None:
+            seg_sms = self._seg_sms(graph, segments)
+        if cand_tables is None:
+            cand_tables = {}
+            if self.backend == "batched":
+                # every (LM x WR x layer x region-shape) candidate of the
+                # whole network is costed up front in one chunked engine
+                # call; the costing loop below reads the returned dict, so
+                # cache eviction or a concurrent clear can never force
+                # per-key dispatches (map_many passes its own multi-config
+                # prefetch result in for the same reason)
+                cand_tables = self._prefetch_candidates(
+                    self._solve_keys(graph, segments, seg_sms, dls))
         # Per segment: list of (sm, seg_perf, reg_tabs) where seg_perf[cap] is
         # max over its regions' knapsack tables at per-node budget cap.
         seg_tables = []
@@ -565,23 +845,16 @@ class PimMapper:
                 better = seg_perf < best
                 best = np.where(better, seg_perf, best)
                 best_sm[better] = smi
-            ntab = np.full(units + 1, INF)
-            arg_i = np.full(units + 1, -1, np.int32)  # prefix budget used
-            for i in range(units + 1):
-                if not np.isfinite(tab[i]):
-                    continue
-                cand = tab[i] + best[:units + 1 - i]
-                seg = ntab[i:]
-                better = cand < seg
-                ntab[i:] = np.where(better, cand, seg)
-                arg_i[i:][better] = i
+            # arg_i[c] = prefix budget used; min-plus convolution, kernelized
+            ntab, arg_i = minplus_convolve(tab, best, reduce=self.dp_reduce)
             seg_choice.append((best_sm, arg_i, None))
-            tab = ntab
-            # monotone fill (keep arg of the borrowed cell)
-            for cap in range(1, units + 1):
-                if tab[cap - 1] < tab[cap]:
-                    tab[cap] = tab[cap - 1]
-                    arg_i[cap] = arg_i[cap - 1]
+            # monotone fill (keep arg of the borrowed cell): a cell is
+            # borrowed iff a strictly smaller value exists at a lower cap,
+            # and takes the arg of the last non-borrowed cell below it
+            tab = np.minimum.accumulate(ntab)
+            src = np.maximum.accumulate(
+                np.where(ntab <= tab, np.arange(units + 1), 0))
+            arg_i[:] = arg_i[src]
 
         if not np.isfinite(tab[units]):
             raise RuntimeError("no feasible mapping under DRAM capacity")
@@ -614,6 +887,8 @@ class PimMapper:
             for region, rtab in reg_tabs:
                 pick = rtab.backtrack(cap_seg)
                 for lname, cands in rtab.layer_cands:
+                    if not cands:  # zero-candidate layer: nothing to choose
+                        continue
                     ci = pick.get(lname, 0)
                     wr, p, size, lm = cands[ci]
                     din, dout = dls[lname]
@@ -634,14 +909,9 @@ class PimMapper:
             g *= 2
         return outs
 
-    def _dl_sweep_table(self, graph: DnnGraph, mapping: Mapping
-                        ) -> dict[tuple, float]:
-        """Latency of every (layer, DLi, DLo) sweep point, batched.
-
-        One chunked engine call covers the full layout sweep of every heavy
-        chosen layer — the sequential DLo(pred)=DLi(succ) propagation then
-        just reads the table instead of costing per candidate.
-        """
+    def _dl_sweep_specs(self, graph: DnnGraph, mapping: Mapping
+                        ) -> tuple[list[tuple], list[tuple]]:
+        """(entries, part-layer specs) of the full per-layer layout sweep."""
         entries: list[tuple] = []
         specs: list[tuple] = []
         for name, ch in mapping.choices.items():
@@ -651,13 +921,26 @@ class PimMapper:
                 for dout in enumerate_layouts(layer.K, self.dl_max_group):
                     entries.append((name, din, dout))
                     specs.append((pl, din, dout))
+        return entries, specs
+
+    def _dl_sweep_table(self, graph: DnnGraph, mapping: Mapping
+                        ) -> dict[tuple, float]:
+        """Latency of every (layer, DLi, DLo) sweep point, batched.
+
+        One chunked engine call covers the full layout sweep of every heavy
+        chosen layer — the sequential DLo(pred)=DLi(succ) propagation then
+        just reads the table instead of costing per candidate.
+        """
+        entries, specs = self._dl_sweep_specs(graph, mapping)
         lat = _batched_node_latencies(self.hw, specs)
         return {e: float(l) for e, l in zip(entries, lat)}
 
-    def _optimize_dl(self, graph: DnnGraph, mapping: Mapping, dls):
+    def _optimize_dl(self, graph: DnnGraph, mapping: Mapping, dls,
+                     table: dict | None = None):
         hw = self.hw
-        table = (self._dl_sweep_table(graph, mapping)
-                 if self.backend == "batched" else None)
+        if table is None:
+            table = (self._dl_sweep_table(graph, mapping)
+                     if self.backend == "batched" else None)
         new: dict[str, tuple[DataLayout, DataLayout]] = {}
         out_dl: dict[str, DataLayout] = {}
         for name in graph.topo_order():

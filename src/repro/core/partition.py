@@ -117,7 +117,7 @@ def part_layer(layer: Layer, lm: LM) -> Layer:
     return replace(layer, B=Bp, C=Cp, H=Hp, W=Wp, K=Kp, pad=0)
 
 
-@lru_cache(maxsize=512)
+@lru_cache(maxsize=4096)   # a multi-config batch sweeps many (layer, shape)
 def enumerate_lms(layer: Layer, h_shape: int, w_shape: int,
                   orders: tuple[tuple[str, ...], ...] = DEFAULT_ORDERS,
                   cap: int = 400) -> tuple[LM, ...]:
@@ -333,6 +333,53 @@ def _comm_lm_row(layer: Layer, lm: LM, dbytes: int, psbytes: int) -> tuple:
     )
 
 
+def comm_batch_geometry(layer: Layer, lms: Sequence[LM], wrs: Sequence[int],
+                        dbytes: int, psbytes: int) -> tuple:
+    """The hardware-independent arrays of :func:`comm_estimate_batch`.
+
+    Sharing-group sizes, per-node byte counts, and ring hop distances depend
+    only on (layer, lms, wrs) and the data widths — never on the rest of the
+    :class:`HwConfig` — so multi-config mapper sweeps cache one geometry per
+    candidate base and re-apply the per-hw scalars via
+    :func:`comm_eval_geometry`.
+    """
+    uniq: dict[LM, int] = {}
+    rows: list[tuple] = []
+    for lm in lms:
+        if lm in uniq:
+            continue
+        uniq[lm] = len(rows)
+        rows.append(_comm_lm_row(layer, lm, dbytes, psbytes))
+    li = np.array([uniq[lm] for lm in lms])
+    n_ws, n_is, n_ps, parts_k, parts_c, w_kc, i_bytes, p_bytes = (
+        np.array([r[f] for r in rows], dtype=np.int64)[li] for f in range(8))
+    wr = np.maximum(1, np.minimum(np.asarray(wrs, dtype=np.int64), n_ws))
+    group = np.ceil(n_ws / wr).astype(np.int64)
+    stored = w_kc / group
+    hops_w = np.array([rows[r][8][g] for r, g in zip(li, group)])
+    hops_i = np.array([rows[r][9] for r in li])
+    hops_p = np.array([rows[r][10] for r in li])
+    return (n_ws, n_is, n_ps, parts_k, parts_c, w_kc, i_bytes, p_bytes,
+            wr, group, stored, hops_w, hops_i, hops_p)
+
+
+def comm_eval_geometry(geom: tuple, hw: HwConfig
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Apply the per-hw scalars to a :func:`comm_batch_geometry` result."""
+    (n_ws, n_is, n_ps, parts_k, parts_c, w_kc, i_bytes, p_bytes,
+     wr, group, stored, hops_w, hops_i, hops_p) = geom
+    # weight sharing: ring over the first `group` share-loop coords
+    l1, e1 = _ring_cost_vec(np.where(group > 1, group, 1), w_kc, hops_w, hw)
+    e1 = e1 * (parts_k * parts_c * wr)
+    # input sharing across K
+    l2, e2 = _ring_cost_vec(n_is, i_bytes, hops_i, hw)
+    e2 = e2 * (n_ws * parts_c)
+    # psum reduction across C (~2 ring passes)
+    l3, e3 = _ring_cost_vec(n_ps, 2 * p_bytes, hops_p, hw)
+    e3 = e3 * (n_ws * parts_k)
+    return l1 + l2 + l3, e1 + e2 + e3, stored
+
+
 def comm_estimate_batch(layer: Layer, hw: HwConfig, lms: Sequence[LM],
                         wrs: Sequence[int]
                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -352,35 +399,8 @@ def comm_estimate_batch(layer: Layer, hw: HwConfig, lms: Sequence[LM],
         return z, z.copy(), z.copy()
     dbytes = hw.cons.data_bits // 8
     psbytes = hw.cons.psum_bits // 8
-
-    uniq: dict[LM, int] = {}
-    rows: list[tuple] = []
-    for lm in lms:
-        if lm in uniq:
-            continue
-        uniq[lm] = len(rows)
-        rows.append(_comm_lm_row(layer, lm, dbytes, psbytes))
-    li = np.array([uniq[lm] for lm in lms])
-    n_ws, n_is, n_ps, parts_k, parts_c, w_kc, i_bytes, p_bytes = (
-        np.array([r[f] for r in rows], dtype=np.int64)[li] for f in range(8))
-
-    wr = np.maximum(1, np.minimum(np.asarray(wrs, dtype=np.int64), n_ws))
-    group = np.ceil(n_ws / wr).astype(np.int64)
-    stored = w_kc / group
-
-    # weight sharing: ring over the first `group` share-loop coords
-    hops_w = np.array([rows[r][8][g] for r, g in zip(li, group)])
-    l1, e1 = _ring_cost_vec(np.where(group > 1, group, 1), w_kc, hops_w, hw)
-    e1 = e1 * (parts_k * parts_c * wr)
-    # input sharing across K
-    hops_i = np.array([rows[r][9] for r in li])
-    l2, e2 = _ring_cost_vec(n_is, i_bytes, hops_i, hw)
-    e2 = e2 * (n_ws * parts_c)
-    # psum reduction across C (~2 ring passes)
-    hops_p = np.array([rows[r][10] for r in li])
-    l3, e3 = _ring_cost_vec(n_ps, 2 * p_bytes, hops_p, hw)
-    e3 = e3 * (n_ws * parts_k)
-    return l1 + l2 + l3, e1 + e2 + e3, stored
+    geom = comm_batch_geometry(layer, lms, wrs, dbytes, psbytes)
+    return comm_eval_geometry(geom, hw)
 
 
 @lru_cache(maxsize=1024)

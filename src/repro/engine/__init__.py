@@ -15,12 +15,12 @@ pipeline:
 
 from .batch_cost import (BatchCostResult, PartSpec, batch_area_mm2,
                          batch_max_link_load, batch_part_cost)
-from .cache import EvalCache, graph_digest, hw_digest
+from .cache import EvalCache, cons_digest, graph_digest, hw_digest
 from .pareto import ParetoFront, ParetoPoint
 from .campaign import Campaign, CampaignResult
 
 __all__ = [
     "BatchCostResult", "PartSpec", "batch_area_mm2", "batch_max_link_load",
-    "batch_part_cost", "EvalCache", "graph_digest", "hw_digest",
-    "ParetoFront", "ParetoPoint", "Campaign", "CampaignResult",
+    "batch_part_cost", "EvalCache", "cons_digest", "graph_digest",
+    "hw_digest", "ParetoFront", "ParetoPoint", "Campaign", "CampaignResult",
 ]

@@ -153,16 +153,26 @@ def _prep_specs(specs: Sequence[PartSpec], *, t_pad: int | None = None):
 
 def _prep_configs(configs: Sequence[HwConfig]):
     cons = configs[0].cons
-    if any(c.cons != cons for c in configs[1:]):
-        raise ValueError("all configs in a batch must share PimConstraints")
-    n = len(configs)
+    # dedupe first: paired pair-lists repeat each config once per spec, so
+    # the per-config field extraction must not scale with the pair count
+    uniq: dict[HwConfig, int] = {}
+    idx = np.empty(len(configs), dtype=np.intp)
+    for i, c in enumerate(configs):
+        j = uniq.get(c)
+        if j is None:
+            if c.cons != cons:
+                raise ValueError(
+                    "all configs in a batch must share PimConstraints")
+            j = uniq[c] = len(uniq)
+        idx[i] = j
+    n = len(uniq)
     out = {k: np.zeros(n, dtype=np.int64) for k in
            ("pea_row", "pea_col", "ibuf_kib", "wbuf_kib", "obuf_kib",
             "burst_words", "row_words", "width_bits")}
     sram = {k: np.zeros(n, dtype=np.float64) for k in
             ("sram_i", "sram_w", "sram_o")}
     dbytes = cons.data_bits // 8
-    for i, c in enumerate(configs):
+    for c, i in uniq.items():
         out["pea_row"][i] = c.pea_row
         out["pea_col"][i] = c.pea_col
         out["ibuf_kib"][i] = c.ibuf_kib
@@ -176,7 +186,8 @@ def _prep_configs(configs: Sequence[HwConfig]):
         sram["sram_i"][i] = _sram_pj_per_bit(c.ibuf_kib)
         sram["sram_w"][i] = _sram_pj_per_bit(c.wbuf_kib)
         sram["sram_o"][i] = _sram_pj_per_bit(c.obuf_kib)
-    return {**out, **sram}, cons
+    gathered = {k: v[idx] for k, v in {**out, **sram}.items()}
+    return gathered, cons
 
 
 # ---------------------------------------------------------------------------
@@ -251,18 +262,29 @@ def _access_cost(fmap, tb, tc, th, tw, is_bhwc, group, align,
 
 
 @partial(jax.jit, static_argnames=("data_bits", "psum_bits", "dram_row_miss",
-                                   "interpret"))
+                                   "interpret", "paired"))
 def _batch_cost(cfg, lay, *, data_bits: int, psum_bits: int,
-                dram_row_miss: int, interpret: bool):
+                dram_row_miss: int, interpret: bool, paired: bool = False):
     """Score every (config, part-layer, candidate-tiling) point.
 
     ``cfg`` arrays are [N], ``lay`` per-layer arrays [L] and tile arrays
     [5, L, T].  Returns per-(config, layer) selections, all [N, L].
+
+    ``paired=True`` aligns the config axis WITH the layer axis (``cfg``
+    arrays are [L], one config per part-layer): the result is the [1, L]
+    diagonal of the grid, costing exactly the requested pairs instead of the
+    full cross product — the multi-config mapper sweep, where every config
+    brings its own mostly-disjoint spec set.
     """
     f64 = jnp.float64
 
-    def c3(name):  # config axis -> [N, 1, 1]
-        return cfg[name][:, None, None]
+    def c3(name):  # config axis -> [N, 1, 1]; paired: [1, L, 1]
+        v = cfg[name]
+        return v[None, :, None] if paired else v[:, None, None]
+
+    def c2(name):  # config axis -> [N, 1]; paired: [1, L]
+        v = cfg[name]
+        return v[None, :] if paired else v[:, None]
 
     def l3(name):  # layer axis -> [1, L, 1]
         return lay[name][None, :, None]
@@ -380,17 +402,17 @@ def _batch_cost(cfg, lay, *, data_bits: int, psum_bits: int,
     # ---- energies at the chosen tiling -------------------------------------
     macs = lay["macs"][None, :]
     e_mac = macs * MAC_ENERGY_PJ
-    pea_row2 = cfg["pea_row"][:, None]
-    pea_col2 = cfg["pea_col"][:, None]
+    pea_row2 = c2("pea_row")
+    pea_col2 = c2("pea_col")
     ibuf_reads = macs / jnp.maximum(1, jnp.minimum(tk_, pea_col2)).astype(f64)
     wbuf_reads = macs / jnp.maximum(1, tb_ * tp_ * tq_).astype(f64)
     obuf_acc = 2.0 * macs / jnp.maximum(
         1, jnp.minimum(tc_, pea_row2)).astype(f64)
-    e_sram = (ibuf_reads * data_bits * cfg["sram_i"][:, None]
-              + wbuf_reads * data_bits * cfg["sram_w"][:, None]
-              + obuf_acc * psum_bits * cfg["sram_o"][:, None])
+    e_sram = (ibuf_reads * data_bits * c2("sram_i")
+              + wbuf_reads * data_bits * c2("sram_w")
+              + obuf_acc * psum_bits * c2("sram_o"))
 
-    width_bits = cfg["width_bits"][:, None].astype(f64)
+    width_bits = c2("width_bits").astype(f64)
     moved_bits = bursts_best * width_bits
     useful_bits = values_best * data_bits
     heavy = lay["heavy"][None, :]
@@ -421,6 +443,14 @@ def _batch_cost(cfg, lay, *, data_bits: int, psum_bits: int,
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
+
+
+# array fields of BatchCostResult, in merge order — shared by the grid
+# (batch_part_cost) and paired (batch_part_cost_paired) block/bucket
+# merge scaffolding so the two paths cannot drift apart
+_RESULT_FIELDS = ("latency_s", "energy_pj", "compute_s", "dram_s",
+                  "dram_bytes", "e_mac_pj", "e_sram_pj", "e_dram_pj",
+                  "tiling", "use_bpq_outer")
 
 
 @dataclass
@@ -477,9 +507,7 @@ def batch_part_cost(configs: Sequence[HwConfig],
     specs = [s if isinstance(s, PartSpec) else PartSpec(*s) for s in specs]
     if not configs or not specs:
         raise ValueError("need at least one config and one spec")
-    fields = ("latency_s", "energy_pj", "compute_s", "dram_s",
-              "dram_bytes", "e_mac_pj", "e_sram_pj", "e_dram_pj",
-              "tiling", "use_bpq_outer")
+    fields = _RESULT_FIELDS
     t_pad = None
     if spec_chunk is not None:
         # group by candidate-axis bucket first: a mixed batch otherwise pads
@@ -544,7 +572,11 @@ def batch_part_cost(configs: Sequence[HwConfig],
             for k, v in res.items():
                 outs.setdefault(k, []).append(np.asarray(v))
     res = {k: np.concatenate(v, axis=0)[:n] for k, v in outs.items()}
+    return _finalize_result(res, configs, specs, cons)
 
+
+def _finalize_result(res: dict, configs, specs, cons) -> BatchCostResult:
+    """Host-side energies/units for raw ``_batch_cost`` outputs ([N, L])."""
     freq = cons.freq_hz
     dbytes = cons.data_bits // 8
     e_dram = (np.maximum(res["moved_bits"], res["useful_bits"])
@@ -554,19 +586,103 @@ def batch_part_cost(configs: Sequence[HwConfig],
     e_dram = np.where(heavy, e_dram, 0.0)
     tiling = np.stack([res["tb"], res["tk"], res["tc"], res["tp"], res["tq"]],
                       axis=-1)
+    e_mac = np.broadcast_to(res["e_mac"], res["total_cycles"].shape)
     return BatchCostResult(
         configs=list(configs), specs=specs,
         latency_s=res["total_cycles"] / freq,
-        energy_pj=res["e_mac"] + res["e_sram"] + e_dram,
+        energy_pj=e_mac + res["e_sram"] + e_dram,
         compute_s=res["compute_cycles"] / freq,
         dram_s=res["dram_cycles"] / freq,
         dram_bytes=res["dram_values"] * dbytes,
-        e_mac_pj=res["e_mac"],
+        e_mac_pj=e_mac,
         e_sram_pj=res["e_sram"],
         e_dram_pj=e_dram,
         tiling=tiling,
         use_bpq_outer=res["use_bo"].astype(bool),
     )
+
+
+def batch_part_cost_paired(configs: Sequence[HwConfig],
+                           specs: Sequence[PartSpec | tuple],
+                           *, spec_chunk: int = 1024,
+                           interpret: bool | None = None) -> BatchCostResult:
+    """Score aligned ``(config, part-layer)`` PAIRS: cell ``j`` costs
+    ``specs[j]`` on ``configs[j]``.
+
+    The multi-config mapper sweep batches many configs whose candidate spec
+    sets are mostly disjoint (region shapes follow each config's node-array
+    geometry); the ``[N, L]`` grid of :func:`batch_part_cost` would compute —
+    and pay for — the full cross product.  Here the config fields ride the
+    spec axis instead ([L] arrays broadcast per pair), so compute scales with
+    the number of requested pairs, exactly like the per-config calls it
+    replaces, while keeping one fused engine dispatch.
+
+    Pair blocks are chunked to ``spec_chunk`` and padded to power-of-two
+    lengths (floor 128, repeating the last pair), and the candidate axis is
+    bucketed like the spec-chunked grid path, so XLA compiles one program per
+    (pair-bucket, T-bucket) shape instead of one per distinct pair count.
+    Result arrays are ``[1, L]`` (``res.latency_s[0][j]`` etc.); every config
+    must share one :class:`PimConstraints`.  Values match the corresponding
+    ``batch_part_cost([cfg], [spec])`` cells exactly — the operations are the
+    same elementwise float64 pipeline.
+    """
+    specs = [s if isinstance(s, PartSpec) else PartSpec(*s) for s in specs]
+    configs = list(configs)
+    if len(configs) != len(specs):
+        raise ValueError("paired costing needs len(configs) == len(specs)")
+    if not specs:
+        raise ValueError("need at least one (config, spec) pair")
+    # same per-spec T-bucket key as batch_part_cost's spec-chunked path: a
+    # pair always lands in the same (pair-bucket, T) program whatever batch
+    # it arrives in
+    buckets: dict[int, list[int]] = {}
+    for i, s in enumerate(specs):
+        buckets.setdefault(
+            _next_pow2(max(128, _candidate_grid(s.layer).shape[1])),
+            []).append(i)
+    if len(buckets) > 1:
+        merged: dict[str, np.ndarray] = {}
+        for tb in sorted(buckets):
+            idxs = buckets[tb]
+            sub = batch_part_cost_paired([configs[i] for i in idxs],
+                                         [specs[i] for i in idxs],
+                                         spec_chunk=spec_chunk,
+                                         interpret=interpret)
+            for f in _RESULT_FIELDS:
+                v = getattr(sub, f)
+                if f not in merged:
+                    merged[f] = np.zeros((1, len(specs)) + v.shape[2:],
+                                         v.dtype)
+                merged[f][:, idxs] = v
+        return BatchCostResult(configs=configs, specs=specs, **merged)
+    t_pad = max(buckets)
+    if len(specs) > spec_chunk:
+        blocks = []
+        for s in range(0, len(specs), spec_chunk):
+            blocks.append(batch_part_cost_paired(
+                configs[s:s + spec_chunk], specs[s:s + spec_chunk],
+                spec_chunk=spec_chunk, interpret=interpret))
+        merged = {f: np.concatenate([getattr(b, f) for b in blocks], axis=1)
+                  for f in _RESULT_FIELDS}
+        return BatchCostResult(configs=configs, specs=specs, **merged)
+    n_real = len(specs)
+    n_pad = min(spec_chunk, _next_pow2(max(128, n_real)))
+    if n_pad > n_real:  # pow2 pair-bucket: bounded XLA program count
+        configs = configs + [configs[-1]] * (n_pad - n_real)
+        specs = specs + [specs[-1]] * (n_pad - n_real)
+    lay_np = _prep_specs(specs, t_pad=t_pad)
+    cfg_np, cons = _prep_configs(configs)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    with enable_x64():
+        lay = {k: jnp.asarray(v) for k, v in lay_np.items()}
+        cfg = {k: jnp.asarray(v) for k, v in cfg_np.items()}
+        res = _batch_cost(cfg, lay, data_bits=cons.data_bits,
+                          psum_bits=cons.psum_bits,
+                          dram_row_miss=cons.dram_row_miss_cycles,
+                          interpret=interpret, paired=True)
+    res = {k: np.asarray(v)[:, :n_real] for k, v in res.items()}
+    return _finalize_result(res, configs[:n_real], specs[:n_real], cons)
 
 
 def batch_area_mm2(configs: Sequence[HwConfig]) -> np.ndarray:

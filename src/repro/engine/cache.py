@@ -14,17 +14,24 @@ campaign orchestrator's concurrent strategy runners.
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
+import math
 import threading
 from pathlib import Path
 from typing import Any, Iterable
 
-from ..core.hardware import HwConfig
+from ..core.hardware import HwConfig, PimConstraints
 from ..core.ir import DnnGraph
 
 _LAYER_FIELDS = ("name", "kind", "B", "C", "H", "W", "K", "HK", "WK",
                  "stride", "pad")
+
+# every PimConstraints field keys evaluation results: the substrate constants
+# feed the cost model (freq, DRAM/NoC energies, row geometry), the mapper
+# (capacity via cap_bank_bytes / ba_*), and legality (area_budget_mm2)
+_CONS_FIELDS = tuple(f.name for f in dataclasses.fields(PimConstraints))
 
 
 def _sha(obj: Any) -> str:
@@ -32,19 +39,23 @@ def _sha(obj: Any) -> str:
     return hashlib.sha256(payload.encode()).hexdigest()[:32]
 
 
+def _cons_dict(cons: PimConstraints) -> dict:
+    return {k: getattr(cons, k) for k in _CONS_FIELDS}
+
+
+def cons_digest(cons: PimConstraints) -> str:
+    """Digest of the substrate constants alone.
+
+    Campaign checkpoints fold this into their fingerprint: observations whose
+    legality/cost was judged under one :class:`PimConstraints` (say a
+    different ``area_budget_mm2``) must never be replayed under another.
+    """
+    return _sha(_cons_dict(cons))
+
+
 def hw_digest(cfg: HwConfig) -> str:
     """Digest of the full hardware point: variables + substrate constants."""
-    cons = cfg.cons
-    return _sha({
-        "var": cfg.as_tuple(),
-        "cons": {k: getattr(cons, k) for k in (
-            "tech_nm", "ba_row", "ba_col", "width_bank_bits",
-            "cap_bank_bytes", "area_budget_mm2", "freq_hz", "data_bits",
-            "psum_bits", "dram_energy_pj_per_bit", "dram_row_bytes",
-            "dram_row_act_energy_pj", "dram_row_miss_cycles",
-            "noc_energy_pj_per_bit_hop", "router_latency_cycles",
-            "mac_area_um2", "sram_area_mm2_per_mib", "node_fixed_area_mm2")},
-    })
+    return _sha({"var": cfg.as_tuple(), "cons": _cons_dict(cfg.cons)})
 
 
 def graph_digest(graph: DnnGraph) -> str:
@@ -99,14 +110,45 @@ class EvalCache:
                 "entries": len(self._data)}
 
     # -- persistence ---------------------------------------------------------
+    #
+    # Infeasible evaluations store ``float('inf')`` costs, which json.dumps
+    # would emit as the non-RFC literal ``Infinity`` (unreadable to strict
+    # parsers).  Persisted values swap +inf for a ``None`` sentinel on save
+    # and back on load; ``allow_nan=False`` keeps any regression (-inf, nan,
+    # or a new inf-carrying field this recursion misses) loud at save time
+    # rather than silently corrupted at load.  Values are the evaluator's
+    # ``(cost, lats, ens)`` tuples, which never contain a legitimate None.
+
+    @staticmethod
+    def _inf_to_none(v: Any) -> Any:
+        if isinstance(v, float) and math.isinf(v) and v > 0:
+            return None
+        if isinstance(v, (list, tuple)):
+            return [EvalCache._inf_to_none(x) for x in v]
+        if isinstance(v, dict):
+            return {k: EvalCache._inf_to_none(x) for k, x in v.items()}
+        return v
+
+    @staticmethod
+    def _none_to_inf(v: Any) -> Any:
+        if v is None:
+            return math.inf
+        if isinstance(v, list):
+            return [EvalCache._none_to_inf(x) for x in v]
+        if isinstance(v, dict):
+            return {k: EvalCache._none_to_inf(x) for k, x in v.items()}
+        return v
+
     def save(self, path: str | Path) -> None:
         with self._lock:
-            Path(path).write_text(json.dumps(self._data))
+            payload = {k: self._inf_to_none(v) for k, v in self._data.items()}
+            Path(path).write_text(json.dumps(payload, allow_nan=False))
 
     @classmethod
     def load(cls, path: str | Path) -> "EvalCache":
         cache = cls()
         p = Path(path)
         if p.exists():
-            cache._data = json.loads(p.read_text())
+            cache._data = {k: cls._none_to_inf(v)
+                           for k, v in json.loads(p.read_text()).items()}
         return cache

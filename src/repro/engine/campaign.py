@@ -31,7 +31,7 @@ from ..core.dse import DseResult, Observation, WorkloadEvaluator, run_dse
 from ..core.hardware import DEFAULT_CONSTRAINTS, HwConfig, PimConstraints
 from ..core.ir import DnnGraph
 from ..core.surrogates import make_strategy
-from .cache import EvalCache, _sha, workloads_digest
+from .cache import EvalCache, _sha, cons_digest, workloads_digest
 from .pareto import ParetoFront, ParetoPoint
 
 
@@ -73,6 +73,7 @@ class Campaign:
                  cons: PimConstraints = DEFAULT_CONSTRAINTS,
                  evaluator_kwargs: dict | None = None,
                  mapper_backend: str | None = None,
+                 evaluate_all_legal: bool = False,
                  checkpoint: str | Path | None = None,
                  max_workers: int | None = None,
                  cache: EvalCache | None = None,
@@ -84,6 +85,7 @@ class Campaign:
         self.seed = seed
         self.n_sample = n_sample
         self.cons = cons
+        self.evaluate_all_legal = evaluate_all_legal
         self.evaluator_kwargs = dict(evaluator_kwargs or {})
         if mapper_backend is not None:
             self.evaluator_kwargs["mapper_backend"] = mapper_backend
@@ -97,11 +99,20 @@ class Campaign:
 
     # -- checkpoint I/O ------------------------------------------------------
     def _fingerprint(self) -> str:
-        """Everything that must match for saved observations to be reusable."""
+        """Everything that must match for saved observations to be reusable.
+
+        The constraints digest matters as much as the workloads: an
+        observation's ``legal`` flag and cost were judged against one
+        :class:`PimConstraints` (area budget, substrate energies, bank
+        geometry) — resuming it under another would silently replay stale
+        legality decisions.
+        """
         return _sha({
             "workloads": workloads_digest(self.workloads),
+            "cons": cons_digest(self.cons),
             "iterations": self.iterations, "seed": self.seed,
             "propose_k": self.propose_k, "n_sample": self.n_sample,
+            "evaluate_all_legal": self.evaluate_all_legal,
             "evaluator_kwargs": repr(sorted(self.evaluator_kwargs.items())),
         })
 
@@ -179,7 +190,8 @@ class Campaign:
         res = run_dse(strat, evaluator, iterations=self.iterations,
                       propose_k=self.propose_k, cons=self.cons,
                       verbose=self.verbose, start_iteration=start,
-                      on_iteration=on_iteration)
+                      on_iteration=on_iteration,
+                      evaluate_all_legal=self.evaluate_all_legal)
         return (name, DseResult(saved + res.observations), resumed,
                 time.thread_time() - t0)
 

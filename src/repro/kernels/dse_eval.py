@@ -9,6 +9,9 @@ Two row-wise reductions sit on the engine's hot path:
 * ``max_rows`` — the max-link-load reduction: row-wise masked max, used to
   score batches of candidate NoC schedules (one row per schedule, one column
   per directed mesh link).
+* ``minplus_rows`` — the Algorithm-2 *segment* min-plus convolution: fuse the
+  ``a[i] + b[r, i]`` broadcast-add with the row-wise min + first-argmin that
+  combines per-segment DP tables under one shared capacity budget.
 
 Both kernels tile rows across the grid and keep the full reduction axis in
 one VMEM block; off-TPU they run in ``interpret=True`` mode (this container's
@@ -118,6 +121,54 @@ def argmin_rows(x, valid=None, *, block_r: int = 128,
         x = jnp.pad(x, ((0, pad), (0, 0)))
         valid = jnp.pad(valid, ((0, pad), (0, 0)))
     mn, idx = _argmin_rows(x, valid, block_r=block_r, interpret=interpret)
+    return mn[:r], idx[:r]
+
+
+def _minplus_rows_kernel(a_ref, b_ref, min_ref, idx_ref):
+    x = a_ref[...][None, :] + b_ref[...]
+    min_ref[...] = jnp.min(x, axis=-1)
+    # first occurrence of the min, matching the sequential segment DP's
+    # strict-< update order (i ascending)
+    idx_ref[...] = jnp.argmin(x, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def _minplus_rows(a, b, *, block_r: int, interpret: bool):
+    r, t = b.shape
+    grid = (pl.cdiv(r, block_r),)
+    return pl.pallas_call(
+        _minplus_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((t,), lambda i: (0,)),
+                  pl.BlockSpec((block_r, t), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_r,), lambda i: (i,)),
+                   pl.BlockSpec((block_r,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((r,), b.dtype),
+                   jax.ShapeDtypeStruct((r,), jnp.int32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def minplus_rows(a, b, *, block_r: int = 128, interpret: bool | None = None):
+    """``([T] a, [R, T] b) -> ([R] min, [R] idx)`` fused min-plus reduction.
+
+    Row ``r`` scores ``a + b[r]`` elementwise and reduces with a masked-free
+    min + first-argmin — the Algorithm-2 *segment* min-plus convolution: ``a``
+    is the running multi-segment DP table, ``b[r]`` the current segment's
+    best-perf column reversed/shifted so that column ``i`` holds the segment's
+    cost at budget ``r - i`` (``inf`` where ``i > r``).  Rows whose min is
+    ``inf`` (no feasible split) return index 0; the caller maps those back to
+    "no choice", exactly like :func:`argmin_rows`.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    r, t = b.shape
+    block_r = max(1, min(block_r, r))
+    pad = (-r) % block_r
+    if pad:
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    mn, idx = _minplus_rows(a, b, block_r=block_r, interpret=interpret)
     return mn[:r], idx[:r]
 
 

@@ -162,6 +162,115 @@ def test_knapsack_pallas_matches_numpy_seeded():
         assert a.backtrack(units) == b.backtrack(units)
 
 
+# ---------------------------------------------------------------------------
+# segment min-plus convolution: array form vs the old sequential loop
+# ---------------------------------------------------------------------------
+
+
+INF = float("inf")
+
+
+def _minplus_ref(tab, best):
+    """The removed O(units^2) per-prefix Python loop, verbatim."""
+    units = len(tab) - 1
+    ntab = np.full(units + 1, INF)
+    arg_i = np.full(units + 1, -1, np.int32)
+    for i in range(units + 1):
+        if not np.isfinite(tab[i]):
+            continue
+        cand = tab[i] + best[:units + 1 - i]
+        seg = ntab[i:]
+        better = cand < seg
+        ntab[i:] = np.where(better, cand, seg)
+        arg_i[i:][better] = i
+    return ntab, arg_i
+
+
+def _monotone_fill_ref(tab, arg_i):
+    """The removed sequential monotone fill, verbatim."""
+    tab = tab.copy()
+    arg_i = arg_i.copy()
+    for cap in range(1, len(tab)):
+        if tab[cap - 1] < tab[cap]:
+            tab[cap] = tab[cap - 1]
+            arg_i[cap] = arg_i[cap - 1]
+    return tab, arg_i
+
+
+def _rand_minplus_case(rng, u):
+    tab = rng.uniform(0.1, 5.0, u + 1)
+    best = rng.uniform(0.1, 5.0, u + 1)
+    tab[rng.random(u + 1) < 0.3] = INF
+    best[rng.random(u + 1) < 0.3] = INF
+    # quantize so ties actually occur and exercise the first-argmin rule
+    tab = np.where(np.isfinite(tab), np.round(tab, 1), tab)
+    best = np.where(np.isfinite(best), np.round(best, 1), best)
+    return tab, best
+
+
+@pytest.mark.parametrize("reduce", ["numpy", "pallas"])
+def test_minplus_convolve_matches_sequential_loop(reduce):
+    rng = np.random.default_rng(5)
+    for _ in range(40 if reduce == "numpy" else 10):
+        u = int(rng.integers(1, 48))
+        tab, best = _rand_minplus_case(rng, u)
+        ref_tab, ref_arg = _minplus_ref(tab, best)
+        got_tab, got_arg = mapper_mod.minplus_convolve(tab, best,
+                                                       reduce=reduce)
+        np.testing.assert_array_equal(ref_tab, got_tab)
+        np.testing.assert_array_equal(ref_arg, got_arg)
+
+
+def test_minplus_monotone_fill_matches_sequential():
+    """The vectorized fill in _solve_sm_lm_wr == the old in-place loop."""
+    rng = np.random.default_rng(7)
+    for _ in range(40):
+        u = int(rng.integers(1, 48))
+        tab, best = _rand_minplus_case(rng, u)
+        ntab, arg_i = mapper_mod.minplus_convolve(tab, best, reduce="numpy")
+        ref_tab, ref_arg = _monotone_fill_ref(ntab, arg_i)
+        run = np.minimum.accumulate(ntab)
+        src = np.maximum.accumulate(
+            np.where(ntab <= run, np.arange(u + 1), 0))
+        np.testing.assert_array_equal(ref_tab, run)
+        np.testing.assert_array_equal(ref_arg, arg_i[src])
+
+
+def test_minplus_rows_kernel_matches_numpy():
+    from jax.experimental import enable_x64
+    from repro.kernels import dse_eval
+    rng = np.random.default_rng(9)
+    a = rng.uniform(0.0, 4.0, 33)
+    a[rng.random(33) < 0.25] = INF
+    b = rng.uniform(0.0, 4.0, (17, 33))
+    b[rng.random((17, 33)) < 0.25] = INF
+    with enable_x64():  # the DP runs the kernel in f64, like the engine
+        mn, idx = dse_eval.minplus_rows(a, b, block_r=4)
+    scores = a[None, :] + b
+    np.testing.assert_array_equal(np.asarray(mn), scores.min(axis=1))
+    np.testing.assert_array_equal(np.asarray(idx), scores.argmin(axis=1))
+
+
+def test_minplus_bad_reduce_rejected():
+    with pytest.raises(ValueError):
+        mapper_mod.minplus_convolve(np.zeros(4), np.zeros(4), reduce="cuda")
+
+
+def test_backtrack_zero_candidate_layer_contained():
+    # regression: a layer with an empty candidate tuple used to raise
+    # ValueError (min() of empty sequence) in backtrack and IndexError in
+    # the caller — now it is simply left unpicked
+    layers = [("ok", ((0, 1.0, 1000.0, None), (1, 2.0, 0.0, None))),
+              ("none", ())]
+    tab = RegionTable(layers, 8, 1000.0)
+    picks = tab.backtrack(8)
+    assert "none" not in picks
+    assert picks["ok"] in (0, 1)
+    # an all-empty table stays contained too
+    tab2 = RegionTable([("none", ())], 8, 1000.0)
+    assert tab2.backtrack(8) == {}
+
+
 def test_knapsack_empty_candidate_list_is_infeasible():
     # a layer with no legal LM contributes an all-INF row (old per-candidate
     # loop semantics), not a crash in the array-form reduction

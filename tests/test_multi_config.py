@@ -1,0 +1,310 @@
+"""Multi-config batched mapping + DSE batch evaluation + campaign hygiene.
+
+Pins the PR's contracts:
+
+* ``PimMapper.map_many`` / ``WorkloadEvaluator.evaluate_batch`` produce
+  results bitwise-identical to per-config ``map()`` / ``__call__``;
+* ``batch_part_cost_paired`` cells match the ``[N, L]`` grid exactly;
+* infeasible configs are contained: ``(inf, {}, {})`` — nothing from earlier
+  workloads leaks into the caches;
+* ``EvalCache`` persists ``inf`` as a JSON-safe sentinel (RFC-strict files);
+* a changed :class:`PimConstraints` invalidates a campaign checkpoint, an
+  unchanged one resumes.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dse import WorkloadEvaluator, run_dse
+from repro.core.hardware import (PAPER_4X4, PAPER_16X16, PAPER_BEST,
+                                 PimConstraints)
+from repro.core.mapper import PimMapper, clear_mapper_caches, evaluate_mapping
+from repro.core.surrogates import make_strategy
+from repro.core.workloads import googlenet
+from repro.engine import Campaign, EvalCache, ParetoFront
+
+MAPPER_KW = dict(max_optim_iter=1, lm_cap=20, n_wr=2)
+CFGS = [PAPER_4X4, PAPER_BEST, PAPER_16X16]
+TINY_CONS = PimConstraints(cap_bank_bytes=2048)   # capacity-infeasible
+
+
+@pytest.fixture(scope="module")
+def tiny_net():
+    return googlenet(1, scale=8)
+
+
+# ---------------------------------------------------------------------------
+# map_many parity
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_mapping(a, b):
+    assert a.sm == b.sm
+    assert set(a.choices) == set(b.choices)
+    for name, ca in a.choices.items():
+        cb = b.choices[name]
+        assert (ca.lm, ca.wr, ca.region) == (cb.lm, cb.wr, cb.region), name
+        assert (ca.dl_in, ca.dl_out) == (cb.dl_in, cb.dl_out), name
+        assert ca.perf_s == cb.perf_s, name          # bitwise
+        assert ca.size_bytes == cb.size_bytes, name
+    assert a.est_latency_s == b.est_latency_s
+
+
+@pytest.mark.parametrize("backend", ["batched", "scalar"])
+def test_map_many_bitwise_matches_per_config_map(tiny_net, backend):
+    kw = dict(MAPPER_KW, backend=backend)
+    clear_mapper_caches()
+    many = PimMapper(CFGS[0], **kw).map_many(tiny_net, CFGS)
+    for cfg, got in zip(CFGS, many):
+        clear_mapper_caches()
+        ref = PimMapper(cfg, **kw).map(tiny_net)
+        _assert_same_mapping(got, ref)
+
+
+def test_map_many_evaluate_mapping_reports_identical(tiny_net):
+    clear_mapper_caches()
+    many = PimMapper(CFGS[0], backend="batched", **MAPPER_KW).map_many(
+        tiny_net, CFGS)
+    for cfg, got in zip(CFGS, many):
+        clear_mapper_caches()
+        ref = PimMapper(cfg, backend="batched", **MAPPER_KW).map(tiny_net)
+        ra = evaluate_mapping(got, seed=1)
+        import repro.core.mapper as mapper_mod
+        mapper_mod._sharing_latency.cache_clear()
+        rb = evaluate_mapping(ref, seed=1)
+        assert ra.latency_s == rb.latency_s
+        assert ra.energy_pj == rb.energy_pj
+
+
+def test_map_many_multi_iteration_parity(tiny_net):
+    kw = dict(MAPPER_KW, backend="batched", max_optim_iter=2)
+    clear_mapper_caches()
+    many = PimMapper(CFGS[0], **kw).map_many(tiny_net, CFGS[:2])
+    for cfg, got in zip(CFGS[:2], many):
+        clear_mapper_caches()
+        _assert_same_mapping(got, PimMapper(cfg, **kw).map(tiny_net))
+
+
+def test_map_many_on_infeasible(tiny_net):
+    bad = PAPER_4X4.replace(cons=TINY_CONS)
+    pm = PimMapper(PAPER_4X4, backend="batched", **MAPPER_KW)
+    with pytest.raises(ValueError):
+        pm.map_many(tiny_net, [PAPER_4X4], on_infeasible="skip")
+    with pytest.raises(RuntimeError):
+        PimMapper(bad, backend="batched", **MAPPER_KW).map_many(
+            tiny_net, [bad])
+    clear_mapper_caches()
+    out = PimMapper(bad, backend="batched", **MAPPER_KW).map_many(
+        tiny_net, [bad, bad], on_infeasible="none")
+    assert out == [None, None]
+
+
+def test_map_many_mixed_feasibility_keeps_live_configs(tiny_net):
+    bad = PAPER_4X4.replace(cons=TINY_CONS)
+    # mixed-cons batches fall back to per-constraints engine groups
+    clear_mapper_caches()
+    got = PimMapper(PAPER_4X4, backend="batched", **MAPPER_KW).map_many(
+        tiny_net, [bad, PAPER_4X4], on_infeasible="none")
+    assert got[0] is None and got[1] is not None
+    clear_mapper_caches()
+    ref = PimMapper(PAPER_4X4, backend="batched", **MAPPER_KW).map(tiny_net)
+    _assert_same_mapping(got[1], ref)
+
+
+# ---------------------------------------------------------------------------
+# paired engine cells == grid cells
+# ---------------------------------------------------------------------------
+
+
+def test_batch_part_cost_paired_matches_grid(tiny_net):
+    from repro.core.layout import DataLayout
+    from repro.engine.batch_cost import (PartSpec, batch_part_cost,
+                                         batch_part_cost_paired)
+    layers = [l for l in tiny_net.layers if l.is_heavy][:9]
+    specs = [PartSpec(l, DataLayout("BCHW", 4), DataLayout("BHWC"))
+             for l in layers]
+    cfgs = [CFGS[i % 3] for i in range(len(specs))]
+    res = batch_part_cost_paired(cfgs, specs, spec_chunk=4)
+    grid = batch_part_cost(CFGS, specs)
+    for j in range(len(specs)):
+        i = j % 3
+        assert res.latency_s[0, j] == grid.latency_s[i, j]
+        assert res.energy_pj[0, j] == grid.energy_pj[i, j]
+        assert (res.tiling[0, j] == grid.tiling[i, j]).all()
+        assert res.use_bpq_outer[0, j] == grid.use_bpq_outer[i, j]
+
+
+def test_batch_part_cost_paired_rejects_mismatched_lengths():
+    from repro.core.layout import DataLayout
+    from repro.engine.batch_cost import PartSpec, batch_part_cost_paired
+    l = googlenet(1, scale=8).layers[2]
+    spec = PartSpec(l, DataLayout("BCHW", 4), DataLayout("BHWC"))
+    with pytest.raises(ValueError):
+        batch_part_cost_paired([PAPER_4X4, PAPER_BEST], [spec])
+
+
+# ---------------------------------------------------------------------------
+# evaluate_batch parity + infeasible containment
+# ---------------------------------------------------------------------------
+
+
+def test_evaluate_batch_matches_call(tiny_net):
+    wl = [tiny_net]
+    cfgs = CFGS + [PAPER_4X4]          # with a duplicate
+    ev = WorkloadEvaluator(wl, mapper_kwargs=MAPPER_KW)
+    clear_mapper_caches()
+    batch = ev.evaluate_batch(cfgs)
+    assert ev.evaluations == 3         # duplicate evaluated once
+    ref = WorkloadEvaluator(wl, mapper_kwargs=MAPPER_KW)
+    for cfg, got in zip(cfgs, batch):
+        clear_mapper_caches()
+        cost, lats, ens = ref(cfg)
+        assert got[0] == cost and got[1] == lats and got[2] == ens
+    # results landed in the per-instance cache: no further mapper runs
+    again = ev.evaluate_batch(cfgs)
+    assert ev.evaluations == 3
+    assert again == batch
+
+
+def test_evaluate_batch_feeds_content_cache(tiny_net):
+    cache = EvalCache()
+    ev = WorkloadEvaluator([tiny_net], mapper_kwargs=MAPPER_KW, cache=cache)
+    clear_mapper_caches()
+    ev.evaluate_batch([PAPER_4X4, PAPER_BEST])
+    ev2 = WorkloadEvaluator([tiny_net], mapper_kwargs=MAPPER_KW, cache=cache)
+    out = ev2.evaluate_batch([PAPER_4X4, PAPER_BEST])
+    assert ev2.evaluations == 0        # both served from the shared cache
+    assert all(o is not None for o in out)
+
+
+def test_infeasible_returns_empty_dicts(tiny_net):
+    bad = PAPER_4X4.replace(cons=TINY_CONS)
+    ev = WorkloadEvaluator([tiny_net], mapper_kwargs=MAPPER_KW)
+    cost, lats, ens = ev(bad)
+    assert math.isinf(cost) and lats == {} and ens == {}
+    ev2 = WorkloadEvaluator([tiny_net], mapper_kwargs=MAPPER_KW)
+    res = ev2.evaluate_batch([bad, PAPER_4X4])
+    assert math.isinf(res[0][0]) and res[0][1] == {} and res[0][2] == {}
+    assert math.isfinite(res[1][0]) and res[1][1] != {}
+
+
+def test_infeasible_later_workload_does_not_leak(tiny_net, monkeypatch):
+    """Regression: a later infeasible workload used to leave the earlier
+    workloads' latencies/energies in the cached (inf, ...) tuple."""
+    g2 = googlenet(1, scale=8)
+    g2.name = "second"
+    calls = []
+    real_map = PimMapper.map
+
+    def fake_map(self, graph):
+        calls.append(graph.name)
+        if graph.name == "second":
+            raise RuntimeError("no feasible mapping under DRAM capacity")
+        return real_map(self, graph)
+
+    monkeypatch.setattr(PimMapper, "map", fake_map)
+    ev = WorkloadEvaluator([tiny_net, g2], mapper_kwargs=MAPPER_KW)
+    cost, lats, ens = ev(PAPER_4X4)
+    assert math.isinf(cost)
+    assert lats == {} and ens == {}    # nothing from tiny_net leaked
+    assert calls == [tiny_net.name, "second"]
+
+
+# ---------------------------------------------------------------------------
+# run_dse evaluate_all_legal
+# ---------------------------------------------------------------------------
+
+
+def test_run_dse_evaluate_all_legal_maps_whole_batch(tiny_net):
+    ev = WorkloadEvaluator([tiny_net], mapper_kwargs=MAPPER_KW)
+    fr = ParetoFront()
+    res = run_dse(make_strategy("random", seed=0, n_sample=64), ev,
+                  iterations=2, propose_k=4, pareto=fr,
+                  evaluate_all_legal=True)
+    costed = [o for o in res.observations if o.cost is not None]
+    legal = [o for o in res.observations if o.legal]
+    # every legal proposal was mapped (no first-legal-only cutoff)
+    assert len(costed) == len(legal) >= 2
+    assert fr.offered == len(costed)
+    # default path still evaluates at most one config per iteration
+    ev2 = WorkloadEvaluator([tiny_net], mapper_kwargs=MAPPER_KW)
+    res2 = run_dse(make_strategy("random", seed=0, n_sample=64), ev2,
+                   iterations=2, propose_k=4)
+    per_iter = {}
+    for o in res2.observations:
+        if o.cost is not None:
+            per_iter[o.iteration] = per_iter.get(o.iteration, 0) + 1
+    assert all(v == 1 for v in per_iter.values())
+
+
+# ---------------------------------------------------------------------------
+# EvalCache: RFC-safe inf persistence
+# ---------------------------------------------------------------------------
+
+
+def test_eval_cache_inf_roundtrip(tmp_path):
+    cache = EvalCache()
+    cache.put("inf-entry", (math.inf, {}, {}))
+    cache.put("finite", (1.5, {"g": 2.0}, {"g": 3.0}))
+    p = tmp_path / "cache.json"
+    cache.save(p)
+    text = p.read_text()
+    assert "Infinity" not in text            # RFC 8259-clean
+    json.loads(text)                         # strict parse succeeds
+    back = EvalCache.load(p)
+    got = back.get("inf-entry")
+    assert math.isinf(got[0]) and got[1] == {} and got[2] == {}
+    assert back.get("finite")[0] == 1.5
+    assert back.get("finite")[1] == {"g": 2.0}
+
+
+# ---------------------------------------------------------------------------
+# campaign checkpoint: constraints fold into the fingerprint
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_checkpoint_rejected_on_constraints_change(tiny_net,
+                                                            tmp_path):
+    ckpt = tmp_path / "cons.json"
+    kw = dict(iterations=1, propose_k=4, seed=1, n_sample=64,
+              evaluator_kwargs=dict(mapper_kwargs=MAPPER_KW),
+              checkpoint=ckpt)
+    Campaign([tiny_net], ("random",), **kw).run()
+    assert ckpt.exists()
+    # unchanged constraints: the checkpoint resumes
+    same = Campaign([tiny_net], ("random",), **kw)
+    assert set(same._load_checkpoint()) == {"random"}
+    out = same.run()
+    assert out.resumed == ["random"]
+    assert out.cache_stats["misses"] == 0
+    # a different area budget: stale legality judgements must not replay
+    other = Campaign([tiny_net], ("random",),
+                     cons=PimConstraints(area_budget_mm2=24.0), **kw)
+    assert other._load_checkpoint() == {}
+
+
+def test_campaign_fingerprint_keys_all_legality_inputs(tiny_net):
+    kw = dict(iterations=1, propose_k=4, seed=1, n_sample=64)
+    a = Campaign([tiny_net], ("random",), **kw)
+    b = Campaign([tiny_net], ("random",), **kw)
+    assert a._fingerprint() == b._fingerprint()
+    c = Campaign([tiny_net], ("random",),
+                 cons=PimConstraints(dram_energy_pj_per_bit=1.5), **kw)
+    d = Campaign([tiny_net], ("random",), evaluate_all_legal=True, **kw)
+    assert len({a._fingerprint(), c._fingerprint(), d._fingerprint()}) == 3
+
+
+def test_campaign_evaluate_all_legal_runs(tiny_net, tmp_path):
+    camp = Campaign([tiny_net], ("random",), iterations=2, propose_k=3,
+                    seed=0, n_sample=64, evaluate_all_legal=True,
+                    evaluator_kwargs=dict(mapper_kwargs=MAPPER_KW),
+                    checkpoint=tmp_path / "all.json")
+    out = camp.run()
+    res = out.results["random"]
+    costed = [o for o in res.observations if o.cost is not None]
+    legal = [o for o in res.observations if o.legal]
+    assert len(costed) == len(legal) >= 2
+    assert out.best().cost > 0

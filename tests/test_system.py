@@ -40,4 +40,6 @@ def test_evaluator_cache(evaluator):
     c1, _, _ = evaluator(PAPER_4X4)
     c2, _, _ = evaluator(PAPER_4X4)
     assert c1 == c2
-    assert PAPER_4X4.as_tuple() in evaluator._cache
+    # the cache key folds the constraints in: same variable tuple under a
+    # different PimConstraints must not alias this entry
+    assert (PAPER_4X4.as_tuple(), PAPER_4X4.cons) in evaluator._cache
