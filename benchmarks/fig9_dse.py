@@ -33,13 +33,19 @@ def _nets(tiny: bool = False):
 
 def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
         strategies=STRATEGIES, checkpoint=None,
-        evaluate_all_legal: bool = False) -> list[dict]:
+        evaluate_all_legal: bool = False,
+        tuner_backend: str | None = None) -> list[dict]:
     # evaluate_all_legal=True maps EVERY legal proposal per iteration in one
     # multi-config pass (more observations per DKL refit); the default keeps
-    # the paper's first-legal-only walk for Fig. 9 parity
+    # the paper's first-legal-only walk for Fig. 9 parity.
+    # tuner_backend="loop" runs the tuner/GP models on the scalar per-step
+    # reference path instead of the jitted scan engine (same-seed curves
+    # match within float drift — tests/test_tuner_engine.py pins this).
     campaign = Campaign(
         _nets(tiny), strategies, iterations=iterations, seed=seed,
         n_sample=512, evaluator_kwargs=dict(mapper_kwargs=dict(MAPPER_KWARGS)),
+        strategy_kwargs=(dict(backend=tuner_backend) if tuner_backend
+                         else None),
         checkpoint=checkpoint, evaluate_all_legal=evaluate_all_legal)
     out = campaign.run()
     rows = []

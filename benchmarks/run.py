@@ -19,7 +19,7 @@ ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
 from benchmarks import (engine_throughput, fig9_dse, fig10_mapper, fig11_ddam,
-                        fig12_scheduler, mapper_throughput)
+                        fig12_scheduler, mapper_throughput, tuner_throughput)
 
 
 def main() -> None:
@@ -106,6 +106,22 @@ def main() -> None:
              f"vs_batched_seq={r['speedup_vs_batched_seq']:.2f}x")
         print(f"# mapper took {time.time() - t0:.1f}s", flush=True)
 
+    if "tuner" not in skip:
+        t0 = time.time()
+        # --fast (CI smoke): the shared SMOKE_KW schedule/threshold — the
+        # full run enforces the >=5x propose+fit contract at >=30 obs
+        rows = (tuner_throughput.run(**tuner_throughput.SMOKE_KW)
+                if args.fast else tuner_throughput.run())
+        all_rows += rows
+        r = rows[0]
+        emit("tuner_loop", 1e6 / r["loop_iters_per_s"],
+             f"iters_per_s={r['loop_iters_per_s']:.2f}")
+        emit("tuner_engine", 1e6 / r["engine_iters_per_s"],
+             f"iters_per_s={r['engine_iters_per_s']:.2f} "
+             f"speedup={r['speedup']:.1f}x "
+             f"programs={sum(r['programs'].values())}")
+        print(f"# tuner took {time.time() - t0:.1f}s", flush=True)
+
     if "engine" not in skip:
         t0 = time.time()
         rows = engine_throughput.run(
@@ -143,9 +159,12 @@ def main() -> None:
     out.parent.mkdir(parents=True, exist_ok=True)
     merged = all_rows
     if out.exists() and skip:
-        # keep rows for skipped figures from the previous run
+        # keep rows for skipped figures from the previous run; prefix match
+        # covers multi-table figures (skipping "mapper" also keeps the
+        # "mapper_multi" rows)
         old = json.loads(out.read_text())
-        kept = [r for r in old if r.get("table") in skip]
+        kept = [r for r in old
+                if any(str(r.get("table", "")).startswith(s) for s in skip)]
         merged = kept + all_rows
     out.write_text(json.dumps(merged, indent=1, default=str))
 

@@ -5,10 +5,13 @@ area "simulator" validates -> PIM-Mapper + Data-Scheduler produce mapping
 schemes and EDP costs -> the tuner's DKL/filter models are refit.
 
     PYTHONPATH=src python examples/dse_nicepim.py [--iters 8] [--all-legal]
+                                                  [--tuner-backend loop]
 
 ``--all-legal`` maps EVERY legal proposal per iteration in one multi-config
 batch (``WorkloadEvaluator.evaluate_batch`` / ``PimMapper.map_many``) instead
 of the paper's first-legal-only walk — more observations per DKL refit.
+``--tuner-backend loop`` swaps the jitted scan tuner engine for the scalar
+per-step reference path (same-seed results match within float drift).
 """
 
 import argparse
@@ -28,13 +31,17 @@ def main() -> None:
     ap.add_argument("--all-legal", action="store_true",
                     help="map every legal proposal per iteration "
                          "(multi-config batched mapping)")
+    ap.add_argument("--tuner-backend", default="scan",
+                    choices=("scan", "loop"),
+                    help="jitted scan tuner engine (default) or the scalar "
+                         "per-step reference loop")
     args = ap.parse_args()
 
     workloads = [googlenet(1, scale=4),
                  bert_base(1, seq=64, n_layers=2, n_heads=4)]
     evaluator = WorkloadEvaluator(
         workloads, mapper_kwargs=dict(max_optim_iter=1, lm_cap=60, n_wr=3))
-    tuner = PimTuner(n_sample=512)
+    tuner = PimTuner(n_sample=512, backend=args.tuner_backend)
     res = run_dse(tuner, evaluator, iterations=args.iters, verbose=True,
                   evaluate_all_legal=args.all_legal)
     best = res.best()

@@ -321,16 +321,18 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
                     pareto.offer(ParetoPoint(sum(lats.values()),
                                              sum(ens.values()), area,
                                              payload=list(cfg.as_tuple())))
-        if evaluated:
-            strategy.fit()
+        fit_info = strategy.fit() if evaluated else None
         obs.extend(it_obs)
         if on_iteration is not None:
             on_iteration(it, it_obs)
         if verbose and evaluated:
             cfg, area, (cost, _, _) = evaluated[0]
+            # PimTuner.fit reports its model losses; other strategies None
+            fit_str = "" if not isinstance(fit_info, dict) else " " + " ".join(
+                f"{k}_loss={v:.3g}" for k, v in fit_info.items())
             print(f"[dse:{getattr(strategy, 'name', 'nicepim')}] it={it} "
                   f"mapped={len(evaluated)} cfg={cfg.as_tuple()} "
                   f"area={area:.1f} "
                   f"cost={cost if not math.isinf(cost) else 'inf'} "
-                  f"({time.time() - t0:.1f}s)")
+                  f"({time.time() - t0:.1f}s){fit_str}")
     return DseResult(obs)

@@ -17,6 +17,8 @@ import dataclasses
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 KIB = 1024
 MIB = 1024 * KIB
 
@@ -197,3 +199,124 @@ def normalize_params(cfg: HwConfig) -> list[float]:
     his = [16, 16, 256, 256, 2048, 2048, 2048]
     return [(math.log2(v) - math.log2(lo)) / (math.log2(hi) - math.log2(lo))
             for v, lo, hi in zip(t, los, his)]
+
+
+_NORM_LOS = np.array([2, 2, 1, 1, 1, 1, 1], dtype=np.float64)
+_NORM_HIS = np.array([16, 16, 256, 256, 2048, 2048, 2048], dtype=np.float64)
+
+
+def normalize_params_batch(values: np.ndarray,
+                           dtype=np.float32) -> np.ndarray:
+    """Vectorized :func:`normalize_params` over an ``[n, 7]`` value matrix.
+
+    Defaults to ``float32`` (the dtype the tuner's models train in); matches
+    the scalar version elementwise (both go through float64 log2 first).
+    """
+    values = np.asarray(values, dtype=np.float64)
+    x = (np.log2(values) - np.log2(_NORM_LOS)) \
+        / (np.log2(_NORM_HIS) - np.log2(_NORM_LOS))
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized design-space sampling (the tuner's candidate draw)
+# ---------------------------------------------------------------------------
+
+
+def space_tables(cons: PimConstraints = DEFAULT_CONSTRAINTS
+                 ) -> tuple[tuple[str, ...], list[np.ndarray]]:
+    """:func:`sample_space` as (keys, value arrays) for index-based draws."""
+    space = sample_space(cons)
+    keys = tuple(space)
+    return keys, [np.asarray(space[k], dtype=np.int64) for k in keys]
+
+
+def legal_shape_mask(values: np.ndarray,
+                     cons: PimConstraints = DEFAULT_CONSTRAINTS) -> np.ndarray:
+    """Vectorized ``HwConfig.legal_shape`` over an ``[n, 7]`` value matrix."""
+    values = np.asarray(values, dtype=np.int64)
+    na_row, na_col = values[:, 0], values[:, 1]
+    pea = values[:, 2:4]
+    bufs = values[:, 4:7]
+    in_range = ((na_row >= 2) & (na_row <= cons.ba_row)
+                & (na_col >= 2) & (na_col <= cons.ba_col)
+                & (pea >= 1).all(axis=1) & (pea <= 256).all(axis=1)
+                & (bufs >= 1).all(axis=1) & (bufs <= 2048).all(axis=1))
+    divides = (cons.ba_row % np.maximum(na_row, 1) == 0) \
+        & (cons.ba_col % np.maximum(na_col, 1) == 0)
+    return in_range & divides
+
+
+def sample_config_values(n: int, rng: np.random.Generator,
+                         cons: PimConstraints = DEFAULT_CONSTRAINTS,
+                         max_draws: int | None = None) -> np.ndarray:
+    """Draw ``n`` shape-legal configs as an ``[n, 7]`` raw-value matrix.
+
+    The whole candidate batch is drawn as index arrays over the Table-II
+    grid (one broadcasted ``rng.integers`` call per deficit chunk) and
+    filtered through the vectorized :func:`legal_shape_mask` — no per-config
+    Python rejection loop.  The draw order consumes the generator stream
+    exactly like the scalar :func:`repro.core.tuner.sample_configs` reference
+    (numpy's broadcasted bounded-integer draw is elementwise-sequential in C
+    order), so a shared seed yields identical samples; the parity tests pin
+    this.  ``max_draws`` caps total *attempts* (legal or not); exceeding it
+    raises instead of looping forever on a degenerate space.
+    """
+    if max_draws is None:
+        max_draws = 64 * n + 1024
+    keys, tables = space_tables(cons)
+    highs = np.array([len(t) for t in tables], dtype=np.int64)
+    if (highs == 0).any():
+        raise RuntimeError(
+            f"empty design space for {cons}: no candidate values for "
+            f"{[k for k, h in zip(keys, highs) if h == 0]}")
+    out: list[np.ndarray] = []
+    got = 0
+    drawn = 0
+    while got < n:
+        m = min(n - got, max(0, max_draws - drawn))
+        if m <= 0:
+            raise RuntimeError(
+                f"sample_config_values: drew {drawn} candidates but only "
+                f"{got}/{n} passed legal_shape (draw cap {max_draws}); the "
+                f"constraint set likely leaves no legal configurations")
+        idx = rng.integers(0, highs, size=(m, len(tables)))
+        drawn += m
+        vals = np.stack([t[idx[:, i]] for i, t in enumerate(tables)], axis=1)
+        legal = legal_shape_mask(vals, cons)
+        if legal.any():
+            out.append(vals[legal])
+            got += int(legal.sum())
+    return np.concatenate(out, axis=0)[:n]
+
+
+def sample_configs_batch(n: int, rng: np.random.Generator,
+                         cons: PimConstraints = DEFAULT_CONSTRAINTS,
+                         max_draws: int | None = None) -> list[HwConfig]:
+    """Batched drop-in for ``tuner.sample_configs`` (same seed, same configs)."""
+    vals = sample_config_values(n, rng, cons, max_draws=max_draws)
+    return [HwConfig(*map(int, row), cons=cons) for row in vals]
+
+
+def configs_from_rows(values: np.ndarray, cons: PimConstraints, order,
+                      k: int, valid: np.ndarray | None = None
+                      ) -> list[HwConfig]:
+    """Materialize the top-k unique configs of a ranked ``[n, 7]`` matrix.
+
+    ``order`` ranks rows best-first; ``valid`` optionally marks rows that may
+    be returned — iteration stops at the first invalid row, so callers that
+    mask candidates in-array (``+inf`` score, sorted last) never surface
+    them.  The single dedup-to-k implementation behind every strategy's
+    propose, so tie-breaking/dedup semantics cannot drift between backends.
+    """
+    seen, out = set(), []
+    for i in order:
+        if valid is not None and not valid[i]:
+            break
+        t = tuple(int(v) for v in values[i])
+        if t not in seen:
+            seen.add(t)
+            out.append(HwConfig.from_tuple(t, cons=cons))
+        if len(out) >= k:
+            break
+    return out

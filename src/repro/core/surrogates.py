@@ -6,18 +6,33 @@ is a from-scratch gradient-boosted-tree regressor standing in for XGBoost
 (unavailable offline); ``GPSurrogate`` is an exact RBF GP on the raw
 normalized parameters (no learned feature extractor — the ablation the paper
 runs against deep kernel learning).
+
+Candidate batches are drawn through the vectorized
+:func:`repro.core.hardware.sample_config_values` (bitwise-identical to the
+scalar ``tuner.sample_configs`` under a shared seed), and ``GPSurrogate``
+scores them through the engine's shared masked-GP primitives
+(:func:`repro.engine.tuner_train.score_candidates_raw`) so the Fig. 9
+ablation and the deep-kernel tuner run one code path; ``backend="numpy"``
+keeps the original float64 reference ranking for the parity tests.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .hardware import (DEFAULT_CONSTRAINTS, HwConfig, PimConstraints,
-                       normalize_params, sample_space)
-from .tuner import sample_configs
+                       configs_from_rows, normalize_params,
+                       normalize_params_batch, sample_config_values,
+                       sample_configs_batch, sample_space)
+
+# interpret-mode Pallas is slower than plain jnp off-TPU (same policy as the
+# tuner and the mapper's knapsack reduce)
+_USE_PALLAS = jax.default_backend() == "tpu"
 
 
 class _Base:
@@ -42,7 +57,7 @@ class RandomSearch(_Base):
     name = "random"
 
     def propose(self, k: int = 8) -> list[HwConfig]:
-        return sample_configs(k, self.rng, self.cons)
+        return sample_configs_batch(k, self.rng, self.cons)
 
 
 class SimulatedAnnealing(_Base):
@@ -86,21 +101,37 @@ class SimulatedAnnealing(_Base):
 
     def propose(self, k: int = 8) -> list[HwConfig]:
         if self.cur is None:
-            return sample_configs(k, self.rng, self.cons)
+            return sample_configs_batch(k, self.rng, self.cons)
         return [self._neighbor(self.cur) for _ in range(k)]
 
 
 class GPSurrogate(_Base):
-    """Exact RBF GP on raw params (median-heuristic lengthscale)."""
+    """Exact RBF GP on raw params (median-heuristic lengthscale).
+
+    ``backend="engine"`` (default) scores candidates through the shared
+    masked-Cholesky / LCB primitives in :mod:`repro.engine.tuner_train`
+    (float64, pow2-padded — one jitted dispatch per candidate batch);
+    ``backend="numpy"`` is the original dense reference, kept for parity.
+    """
 
     name = "gp"
 
+    # the tuner's backend vocabulary maps onto the GP's engine/reference split
+    _BACKEND_ALIASES = {"scan": "engine", "loop": "numpy"}
+
     def __init__(self, cons=DEFAULT_CONSTRAINTS, seed: int = 0,
-                 n_sample: int = 2048, beta: float = 1.0):
+                 n_sample: int = 2048, beta: float = 1.0,
+                 backend: str = "engine"):
         super().__init__(cons, seed, n_sample)
         self.beta = beta
+        self.backend = self._BACKEND_ALIASES.get(backend, backend)
+        if self.backend not in ("engine", "numpy"):
+            raise ValueError(f"GPSurrogate backend must be 'engine' or "
+                             f"'numpy' (or the tuner aliases 'scan'/'loop'), "
+                             f"got {backend!r}")
 
     def _rank(self, xq: np.ndarray) -> np.ndarray:
+        """Float64 numpy reference (the engine path's parity target)."""
         x = np.array(self._x)
         y = np.array(self._y)
         mu, sd = y.mean(), y.std() + 1e-9
@@ -116,21 +147,35 @@ class GPSurrogate(_Base):
                                       np.linalg.inv(k), kq), 1e-9, None)
         return mean - self.beta * np.sqrt(var)
 
+    def _rank_engine(self, xq: np.ndarray) -> np.ndarray:
+        from jax.experimental import enable_x64
+        from ..engine.tuner_train import pow2_bucket, score_candidates_raw
+        x = np.array(self._x, np.float64)
+        y = np.array(self._y, np.float64)
+        n = len(y)
+        p = pow2_bucket(n)
+        xp = np.zeros((p, x.shape[1]))
+        yp = np.zeros((p,))
+        mask = np.zeros((p,), bool)
+        xp[:n], yp[:n], mask[:n] = x, y, True
+        with enable_x64():
+            scores = score_candidates_raw(
+                jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(mask),
+                jnp.asarray(np.asarray(xq, np.float64)),
+                jnp.ones(len(xq), bool), self.beta,
+                use_pallas=_USE_PALLAS)
+        return np.asarray(scores)
+
     def propose(self, k: int = 8) -> list[HwConfig]:
-        cands = sample_configs(self.n_sample, self.rng, self.cons)
+        vals = sample_config_values(self.n_sample, self.rng, self.cons)
         if len(self._y) < 3:
-            return cands[:k]
-        xq = np.array([normalize_params(c) for c in cands])
-        order = np.argsort(self._rank(xq))
-        seen, out = set(), []
-        for i in order:
-            t = cands[i].as_tuple()
-            if t not in seen:
-                seen.add(t)
-                out.append(cands[i])
-            if len(out) >= k:
-                break
-        return out
+            return [HwConfig.from_tuple(map(int, row), cons=self.cons)
+                    for row in vals[:k]]
+        xq = normalize_params_batch(vals, dtype=np.float64)
+        scores = self._rank(xq) if self.backend == "numpy" \
+            else self._rank_engine(xq)
+        return configs_from_rows(vals, self.cons,
+                                 np.argsort(scores, kind="stable"), k)
 
 
 # -- tiny gradient-boosted trees (XGBoost stand-in) ---------------------------
@@ -201,29 +246,31 @@ class GBTSurrogate(_Base):
         return pred
 
     def propose(self, k: int = 8) -> list[HwConfig]:
-        cands = sample_configs(self.n_sample, self.rng, self.cons)
+        vals = sample_config_values(self.n_sample, self.rng, self.cons)
         if not self._trees:
-            return cands[:k]
-        xq = np.array([normalize_params(c) for c in cands])
-        order = np.argsort(self._predict(xq))
-        seen, out = set(), []
-        for i in order:
-            t = cands[i].as_tuple()
-            if t not in seen:
-                seen.add(t)
-                out.append(cands[i])
-            if len(out) >= k:
-                break
-        return out
+            return [HwConfig.from_tuple(map(int, row), cons=self.cons)
+                    for row in vals[:k]]
+        xq = normalize_params_batch(vals, dtype=np.float64)
+        return configs_from_rows(
+            vals, self.cons,
+            np.argsort(self._predict(xq), kind="stable"), k)
 
 
 def make_strategy(name: str, cons=DEFAULT_CONSTRAINTS, seed: int = 0,
-                  n_sample: int = 2048):
-    """Factory covering every Fig. 9 curve (incl. the NicePIM tuner)."""
+                  n_sample: int = 2048, backend: str | None = None):
+    """Factory covering every Fig. 9 curve (incl. the NicePIM tuner).
+
+    ``backend`` threads into the strategies that have an engine/reference
+    split: the NicePIM tuner (``"scan"``/``"loop"``) and the GP ablation
+    (``"engine"``/``"numpy"``); the rest ignore it.
+    """
     from .tuner import PimTuner
     name = name.lower()
     if name in ("nicepim", "dkl"):
-        return PimTuner(cons=cons, seed=seed, n_sample=n_sample)
+        return PimTuner(cons=cons, seed=seed, n_sample=n_sample,
+                        backend=backend or "scan")
+    if name == "gp":
+        return GPSurrogate(cons, seed, n_sample, backend=backend or "engine")
     cls = {"random": RandomSearch, "simanneal": SimulatedAnnealing,
-           "gp": GPSurrogate, "gbt": GBTSurrogate, "xgboost": GBTSurrogate}[name]
+           "gbt": GBTSurrogate, "xgboost": GBTSurrogate}[name]
     return cls(cons, seed, n_sample)

@@ -12,39 +12,55 @@ Both models are pure JAX, trained with the from-scratch Adam in
   hyperparameters (lengthscale, signal, noise) are optimized *jointly* by
   maximizing the exact GP log marginal likelihood.  Ranking uses a lower
   confidence bound on the predicted (standardized log-)cost.
+
+Both models run on one of two backends:
+
+* ``backend="scan"`` (default) — the engine layer
+  (:mod:`repro.engine.tuner_train`): the whole Adam trajectory runs inside
+  one jitted ``lax.scan`` over pow2-bucketed, validity-masked data (no
+  per-step host round-trips, no recompile per growing dataset size), propose
+  scoring is one fused jitted dispatch over the full candidate batch (area
+  mask applied in-array), and candidates are drawn through the vectorized
+  :func:`repro.core.hardware.sample_config_values`.
+* ``backend="loop"`` — the original per-step host-dispatch reference path,
+  kept as the parity baseline for ``tests/test_tuner_engine.py`` and the
+  scalar side of ``benchmarks/tuner_throughput.py``.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..engine.tuner_train import (dkl_features, fit_dkl, fit_filter,
+                                  mlp_forward, mlp_init, pad_dataset,
+                                  rbf_cross, score_candidates)
 from ..training.optim import Adam
 from .hardware import HwConfig, PimConstraints, DEFAULT_CONSTRAINTS, \
-    normalize_params, sample_space
+    configs_from_rows, normalize_params, normalize_params_batch, \
+    sample_config_values, sample_space
+
+# shared model primitives live in the engine layer (one code path for the
+# scan backend, these references, and the Fig. 9 GP ablation)
+_init_mlp = mlp_init
+_mlp_forward = mlp_forward
+_features = dkl_features
+
+# the Pallas LCB kernel is the on-TPU default; off-TPU the pure-jnp scoring
+# path is faster than interpret-mode Pallas (same policy as the mapper's
+# knapsack reduce)
+_USE_PALLAS = jax.default_backend() == "tpu"
 
 
-def _init_mlp(key, sizes: list[int]) -> list[dict]:
-    layers = []
-    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
-        key, k1 = jax.random.split(key)
-        w = jax.random.normal(k1, (a, b), jnp.float32) * math.sqrt(2.0 / a)
-        layers.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
-    return layers
-
-
-def _mlp_forward(layers: list[dict], x: jnp.ndarray) -> jnp.ndarray:
-    h = x
-    for i, l in enumerate(layers):
-        h = h @ l["w"] + l["b"]
-        if i < len(layers) - 1:
-            h = jax.nn.relu(h)
-    return h
+def _check_backend(backend: str) -> str:
+    if backend not in ("scan", "loop"):
+        raise ValueError(f"tuner backend must be 'scan' or 'loop', "
+                         f"got {backend!r}")
+    return backend
 
 
 # ---------------------------------------------------------------------------
@@ -67,14 +83,21 @@ def _filter_step(params, opt_state, x, y):
     return params, opt_state, loss
 
 
+@jax.jit
+def _filter_forward(params, x):
+    return _mlp_forward(params, x)[:, 0]
+
+
 _FILTER_OPT = Adam(lr=3e-3)
 
 
 class FilterModel:
     """Predicts log(area/budget) from hw params (area spans ~4 decades)."""
 
-    def __init__(self, cons: PimConstraints = DEFAULT_CONSTRAINTS, seed: int = 0):
+    def __init__(self, cons: PimConstraints = DEFAULT_CONSTRAINTS,
+                 seed: int = 0, backend: str = "scan"):
         self.cons = cons
+        self.backend = _check_backend(backend)
         self.params = _init_mlp(jax.random.PRNGKey(seed), FILTER_SIZES)
         self.opt_state = _FILTER_OPT.init(self.params)
         self._x: list[list[float]] = []
@@ -88,19 +111,29 @@ class FilterModel:
     def fit(self, steps: int = 200) -> float:
         if len(self._y) < 8:
             return float("nan")
-        x = jnp.asarray(np.array(self._x, np.float32))
-        y = jnp.asarray(np.array(self._y, np.float32))
-        loss = jnp.inf
-        for _ in range(steps):
-            self.params, self.opt_state, loss = _filter_step(
-                self.params, self.opt_state, x, y)
-        return float(loss)
+        x = np.array(self._x, np.float32)
+        y = np.array(self._y, np.float32)
+        if self.backend == "loop":
+            xj, yj = jnp.asarray(x), jnp.asarray(y)
+            loss = jnp.inf
+            for _ in range(steps):
+                self.params, self.opt_state, loss = _filter_step(
+                    self.params, self.opt_state, xj, yj)
+            return float(loss)
+        xp, yp, mask = pad_dataset(x, y)
+        self.params, self.opt_state, losses = fit_filter(
+            self.params, self.opt_state, xp, yp, mask,
+            opt=_FILTER_OPT, steps=steps)
+        return float(losses[-1])
+
+    def predict_area_x(self, x: np.ndarray) -> np.ndarray:
+        """Predicted areas (mm^2) for an ``[n, 7]`` normalized-param matrix."""
+        pred = _filter_forward(self.params, jnp.asarray(x, jnp.float32))
+        return np.exp(np.asarray(pred)) * self.cons.area_budget_mm2
 
     def predict_area(self, cfgs: list[HwConfig]) -> np.ndarray:
-        x = jnp.asarray(np.array([normalize_params(c) for c in cfgs],
-                                 np.float32))
-        pred = _mlp_forward(self.params, x)[:, 0]
-        return np.exp(np.asarray(pred)) * self.cons.area_budget_mm2
+        return self.predict_area_x(
+            np.array([normalize_params(c) for c in cfgs], np.float32))
 
     def trained(self) -> bool:
         return len(self._y) >= 8
@@ -118,20 +151,17 @@ def _dkl_init(seed: int) -> dict:
         "mlp": _init_mlp(jax.random.PRNGKey(seed), DKL_SIZES),
         "log_ls": jnp.zeros(()),       # RBF lengthscale
         "log_sf": jnp.zeros(()),       # signal stddev
-        "log_sn": jnp.asarray(-2.0),   # noise stddev
+        # strong f32 (a weak-typed scalar here would flip type after the
+        # first fit and force one spurious recompile per shape bucket)
+        "log_sn": jnp.asarray(-2.0, jnp.float32),
     }
 
 
-def _features(params, x):
-    z = _mlp_forward(params["mlp"], x)
-    return z / (jnp.linalg.norm(z, axis=-1, keepdims=True) + 1e-6)
-
-
 def _kernel(params, za, zb):
+    # shares the engine's gram-trick RBF so both backends run identical ops
     ls = jnp.exp(params["log_ls"])
     sf2 = jnp.exp(2 * params["log_sf"])
-    d2 = jnp.sum((za[:, None, :] - zb[None, :, :]) ** 2, -1)
-    return sf2 * jnp.exp(-0.5 * d2 / (ls ** 2 + 1e-8))
+    return rbf_cross(za, zb, ls ** 2 + 1e-8, sf2)
 
 
 @jax.jit
@@ -178,18 +208,26 @@ class DklSuggestionModel:
 
     name = "dkl"
 
-    def __init__(self, seed: int = 0, beta: float = 1.0):
+    def __init__(self, seed: int = 0, beta: float = 1.0,
+                 backend: str = "scan"):
         self.params = _dkl_init(seed)
         self.opt_state = _DKL_OPT.init(self.params)
         self.beta = beta
+        self.backend = _check_backend(backend)
         self._x: list[list[float]] = []
         self._y: list[float] = []
         self._mu = 0.0
         self._sigma = 1.0
+        # observations added after the last fit() invalidate the GP state
+        # AND the (_mu, _sigma) standardization; rank() refits when dirty
+        # instead of scoring against stale statistics
+        self._dirty = True
+        self._train: tuple | None = None   # padded (x, y, mask) of last fit
 
     def add(self, cfg: HwConfig, cost: float) -> None:
         self._x.append(normalize_params(cfg))
         self._y.append(math.log(max(cost, 1e-30)))
+        self._dirty = True
 
     def fit(self, steps: int = 300) -> float:
         if len(self._y) < 3:
@@ -197,25 +235,59 @@ class DklSuggestionModel:
         y = np.array(self._y, np.float64)
         self._mu = float(y.mean())
         self._sigma = float(y.std() + 1e-9)
-        x = jnp.asarray(np.array(self._x, np.float32))
-        yn = jnp.asarray(((y - self._mu) / self._sigma).astype(np.float32))
-        loss = jnp.inf
-        for _ in range(steps):
-            self.params, self.opt_state, loss = _dkl_step(
-                self.params, self.opt_state, x, yn)
-        return float(loss)
+        x = np.array(self._x, np.float32)
+        yn = ((y - self._mu) / self._sigma).astype(np.float32)
+        if self.backend == "loop":
+            xj, yj = jnp.asarray(x), jnp.asarray(yn)
+            loss = jnp.inf
+            for _ in range(steps):
+                self.params, self.opt_state, loss = _dkl_step(
+                    self.params, self.opt_state, xj, yj)
+            self._dirty = False
+            return float(loss)
+        xp, yp, mask = pad_dataset(x, yn)
+        self.params, self.opt_state, losses = fit_dkl(
+            self.params, self.opt_state, xp, yp, mask,
+            opt=_DKL_OPT, steps=steps)
+        self._train = (xp, yp, mask)
+        self._dirty = False
+        return float(losses[-1])
+
+    def rank_x(self, xq: np.ndarray,
+               area_ok: np.ndarray | None = None) -> np.ndarray:
+        """Scores for an ``[n, 7]`` normalized-param matrix (lower = better).
+
+        ``area_ok`` is the filter model's in-array mask: candidates with
+        ``area_ok=False`` score ``+inf`` so they sort last.  Stale models
+        (observations added since the last ``fit``) are refit first.
+        """
+        if len(self._y) < 3:
+            scores = np.zeros(len(xq))
+            return scores if area_ok is None \
+                else np.where(area_ok, scores, np.inf)
+        if self._dirty:
+            self.fit()
+        if self.backend == "loop" or self._train is None:
+            xt = jnp.asarray(np.array(self._x, np.float32))
+            yt = jnp.asarray(((np.array(self._y) - self._mu)
+                              / self._sigma).astype(np.float32))
+            mean, var = _dkl_predict(self.params, xt, yt,
+                                     jnp.asarray(xq, jnp.float32))
+            scores = np.asarray(mean - self.beta * jnp.sqrt(var))
+            return scores if area_ok is None \
+                else np.where(area_ok, scores, np.inf)
+        xp, yp, mask = self._train
+        ok = np.ones(len(xq), bool) if area_ok is None else area_ok
+        return np.asarray(score_candidates(
+            self.params, xp, yp, mask, jnp.asarray(xq, jnp.float32),
+            ok, self.beta, use_pallas=_USE_PALLAS))
 
     def rank(self, cfgs: list[HwConfig]) -> np.ndarray:
         """Scores (lower = better); LCB on the predicted cost."""
         if len(self._y) < 3:
             return np.zeros(len(cfgs))
-        xt = jnp.asarray(np.array(self._x, np.float32))
-        yt = jnp.asarray(
-            ((np.array(self._y) - self._mu) / self._sigma).astype(np.float32))
-        xq = jnp.asarray(np.array([normalize_params(c) for c in cfgs],
-                                  np.float32))
-        mean, var = _dkl_predict(self.params, xt, yt, xq)
-        return np.asarray(mean - self.beta * jnp.sqrt(var))
+        return self.rank_x(np.array([normalize_params(c) for c in cfgs],
+                                    np.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -224,13 +296,31 @@ class DklSuggestionModel:
 
 
 def sample_configs(n: int, rng: np.random.Generator,
-                   cons: PimConstraints = DEFAULT_CONSTRAINTS) -> list[HwConfig]:
-    """Uniform raw samples from the Table-II design space (shape-legal only)."""
+                   cons: PimConstraints = DEFAULT_CONSTRAINTS,
+                   max_draws: int | None = None) -> list[HwConfig]:
+    """Uniform raw samples from the Table-II design space (shape-legal only).
+
+    The scalar reference loop: one candidate per iteration, rejected through
+    ``HwConfig.legal_shape``.  It consumes the generator stream exactly like
+    the vectorized :func:`repro.core.hardware.sample_config_values`, so a
+    shared seed yields identical samples (pinned by the parity tests).
+    ``max_draws`` caps total attempts — a degenerate constraint set raises
+    instead of spinning forever.
+    """
+    if max_draws is None:
+        max_draws = 64 * n + 1024
     space = sample_space(cons)
     keys = list(space)
     outs = []
+    draws = 0
     while len(outs) < n:
+        if draws >= max_draws:
+            raise RuntimeError(
+                f"sample_configs: drew {draws} candidates but only "
+                f"{len(outs)}/{n} passed legal_shape (draw cap {max_draws}); "
+                f"the constraint set likely leaves no legal configurations")
         vals = {k: space[k][rng.integers(len(space[k]))] for k in keys}
+        draws += 1
         cfg = HwConfig(cons=cons, **vals)
         if cfg.legal_shape():
             outs.append(cfg)
@@ -247,17 +337,43 @@ class PimTuner:
     seed: int = 0
     n_sample: int = 2048
     beta: float = 1.0
+    backend: str = "scan"
     filter_model: FilterModel = None
     suggestion: DklSuggestionModel = None
 
     def __post_init__(self):
+        _check_backend(self.backend)
         self.rng = np.random.default_rng(self.seed)
         if self.filter_model is None:
-            self.filter_model = FilterModel(self.cons, self.seed)
+            self.filter_model = FilterModel(self.cons, self.seed,
+                                            backend=self.backend)
         if self.suggestion is None:
-            self.suggestion = DklSuggestionModel(self.seed, self.beta)
+            self.suggestion = DklSuggestionModel(self.seed, self.beta,
+                                                 backend=self.backend)
 
     def propose(self, k: int = 8) -> list[HwConfig]:
+        if self.backend == "loop":
+            return self._propose_loop(k)
+        # the whole candidate batch as an [n, 7] value matrix: vectorized
+        # draw, vectorized normalize, in-array area mask, one fused scoring
+        # dispatch — HwConfig objects only materialize for the k winners
+        vals = sample_config_values(self.n_sample, self.rng, self.cons)
+        xq = normalize_params_batch(vals)
+        area_ok = None
+        if self.filter_model.trained():
+            areas = self.filter_model.predict_area_x(xq)
+            mask = areas <= self.cons.area_budget_mm2
+            if mask.any():     # an all-reject filter would starve the search
+                area_ok = mask
+        scores = self.suggestion.rank_x(xq, area_ok=area_ok)
+        # masked candidates score +inf and sort last; the valid mask stops
+        # the dedup walk before it could surface one
+        return configs_from_rows(vals, self.cons,
+                                 np.argsort(scores, kind="stable"), k,
+                                 valid=area_ok)
+
+    def _propose_loop(self, k: int) -> list[HwConfig]:
+        """The original list-based propose (scalar reference path)."""
         cands = sample_configs(self.n_sample, self.rng, self.cons)
         if self.filter_model.trained():
             areas = self.filter_model.predict_area(cands)
@@ -266,8 +382,7 @@ class PimTuner:
             if keep:
                 cands = keep
         scores = self.suggestion.rank(cands)
-        order = np.argsort(scores)
-        # dedup while preserving rank order
+        order = np.argsort(scores, kind="stable")
         seen, out = set(), []
         for i in order:
             t = cands[i].as_tuple()
@@ -284,6 +399,6 @@ class PimTuner:
         if cost is not None:
             self.suggestion.add(cfg, cost)
 
-    def fit(self) -> None:
-        self.filter_model.fit()
-        self.suggestion.fit()
+    def fit(self) -> dict:
+        return {"filter": self.filter_model.fit(),
+                "dkl": self.suggestion.fit()}

@@ -6,6 +6,10 @@ pipeline:
 * :mod:`.batch_cost` — vmapped/jitted reimplementation of the analytic
   tiling/DRAM/compute cost that scores ``[configs, part-layers]`` in one
   call (Pallas inner reduction, 1e-6 parity with ``core.costmodel``).
+* :mod:`.tuner_train` — the PIM-Tuner's training/scoring engine: whole Adam
+  trajectories in one jitted ``lax.scan`` over pow2-bucketed masked data,
+  and fused one-dispatch candidate scoring (DKL features, RBF cross-kernel,
+  GP mean/var, LCB, in-array area mask; Pallas ``lcb_rows`` reduction).
 * :mod:`.pareto` — streaming latency/energy/area Pareto-frontier tracker.
 * :mod:`.cache` — content-addressed memoization of mapper/scheduler results
   keyed by (HwConfig, DnnGraph) digests.
@@ -17,10 +21,15 @@ from .batch_cost import (BatchCostResult, PartSpec, batch_area_mm2,
                          batch_max_link_load, batch_part_cost)
 from .cache import EvalCache, cons_digest, graph_digest, hw_digest
 from .pareto import ParetoFront, ParetoPoint
+from .tuner_train import (compiled_program_count, fit_dkl, fit_filter,
+                          pad_dataset, pow2_bucket, score_candidates,
+                          score_candidates_raw)
 from .campaign import Campaign, CampaignResult
 
 __all__ = [
     "BatchCostResult", "PartSpec", "batch_area_mm2", "batch_max_link_load",
     "batch_part_cost", "EvalCache", "cons_digest", "graph_digest",
     "hw_digest", "ParetoFront", "ParetoPoint", "Campaign", "CampaignResult",
+    "compiled_program_count", "fit_dkl", "fit_filter", "pad_dataset",
+    "pow2_bucket", "score_candidates", "score_candidates_raw",
 ]

@@ -72,6 +72,7 @@ class Campaign:
                  n_sample: int = 512,
                  cons: PimConstraints = DEFAULT_CONSTRAINTS,
                  evaluator_kwargs: dict | None = None,
+                 strategy_kwargs: dict | None = None,
                  mapper_backend: str | None = None,
                  evaluate_all_legal: bool = False,
                  checkpoint: str | Path | None = None,
@@ -87,6 +88,9 @@ class Campaign:
         self.cons = cons
         self.evaluate_all_legal = evaluate_all_legal
         self.evaluator_kwargs = dict(evaluator_kwargs or {})
+        # extra make_strategy kwargs (e.g. backend="loop" for the tuner's
+        # scalar reference path in ablation runs)
+        self.strategy_kwargs = dict(strategy_kwargs or {})
         if mapper_backend is not None:
             self.evaluator_kwargs["mapper_backend"] = mapper_backend
         self.checkpoint = Path(checkpoint) if checkpoint else None
@@ -114,6 +118,7 @@ class Campaign:
             "propose_k": self.propose_k, "n_sample": self.n_sample,
             "evaluate_all_legal": self.evaluate_all_legal,
             "evaluator_kwargs": repr(sorted(self.evaluator_kwargs.items())),
+            "strategy_kwargs": repr(sorted(self.strategy_kwargs.items())),
         })
 
     def _load_checkpoint(self) -> dict[str, list[Observation]]:
@@ -170,7 +175,7 @@ class Campaign:
             self._offer_pareto(saved)
             return name, DseResult(saved), True, time.thread_time() - t0
         strat = make_strategy(name, cons=self.cons, seed=self.seed,
-                              n_sample=self.n_sample)
+                              n_sample=self.n_sample, **self.strategy_kwargs)
         resumed = bool(saved)
         if saved:  # replay history into the fresh model, then continue
             for o in saved:

@@ -12,6 +12,11 @@ Two row-wise reductions sit on the engine's hot path:
 * ``minplus_rows`` — the Algorithm-2 *segment* min-plus convolution: fuse the
   ``a[i] + b[r, i]`` broadcast-add with the row-wise min + first-argmin that
   combines per-segment DP tables under one shared capacity budget.
+* ``lcb_rows`` — the PIM-Tuner's fused propose reduction: for every query
+  feature row, the pairwise squared distance to the (masked) training
+  features, the RBF cross-kernel, the GP posterior mean/variance against a
+  precomputed ``K^-1`` / ``K^-1 y``, and the lower-confidence-bound score,
+  all in one pass.
 
 Both kernels tile rows across the grid and keep the full reduction axis in
 one VMEM block; off-TPU they run in ``interpret=True`` mode (this container's
@@ -170,6 +175,70 @@ def minplus_rows(a, b, *, block_r: int = 128, interpret: bool | None = None):
         b = jnp.pad(b, ((0, pad), (0, 0)))
     mn, idx = _minplus_rows(a, b, block_r=block_r, interpret=interpret)
     return mn[:r], idx[:r]
+
+
+def _lcb_rows_kernel(zq_ref, zt_ref, alpha_ref, kinv_ref, v_ref, par_ref,
+                     out_ref):
+    zq = zq_ref[...]                                          # [bq, D]
+    zt = zt_ref[...]                                          # [N, D]
+    d2 = jnp.sum((zq[:, None, :] - zt[None, :, :]) ** 2, -1)  # [bq, N]
+    ls2, sf2, beta = par_ref[0], par_ref[1], par_ref[2]
+    kq = sf2 * jnp.exp(-0.5 * d2 / ls2)
+    # padded training rows contribute nothing: their cross-kernel column is
+    # zeroed, and the padded block of kinv is the identity by construction
+    kq = jnp.where(v_ref[...][None, :], kq, 0.0)
+    mean = kq @ alpha_ref[...]
+    t = jnp.dot(kq, kinv_ref[...], preferred_element_type=kq.dtype)
+    var = sf2 - jnp.sum(t * kq, axis=-1)
+    out_ref[...] = mean - beta * jnp.sqrt(jnp.clip(var, 1e-9))
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def _lcb_rows(zq, zt, alpha, kinv, valid, params, *, block_q: int,
+              interpret: bool):
+    q, d = zq.shape
+    n = zt.shape[0]
+    grid = (pl.cdiv(q, block_q),)
+    return pl.pallas_call(
+        _lcb_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+                  pl.BlockSpec((n, d), lambda i: (0, 0)),
+                  pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((n, n), lambda i: (0, 0)),
+                  pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), zq.dtype),
+        interpret=interpret,
+    )(zq, zt, alpha, kinv, valid, params)
+
+
+def lcb_rows(zq, zt, alpha, kinv, valid, ls2, sf2, beta, *,
+             block_q: int = 256, interpret: bool | None = None):
+    """``([Q,D] zq, [N,D] zt, [N] alpha, [N,N] kinv, [N] valid) -> [Q] lcb``.
+
+    Fused GP-LCB scoring of a candidate batch: pairwise squared distances,
+    RBF cross-kernel ``kq = sf2 * exp(-d2 / (2 ls2))``, posterior mean
+    ``kq @ alpha`` and variance ``sf2 - kq @ kinv @ kq^T`` (clipped at 1e-9),
+    and the lower confidence bound ``mean - beta * sqrt(var)``.  ``alpha`` and
+    ``kinv`` are the precomputed ``K^-1 y`` / ``K^-1`` of the (masked)
+    training kernel; invalid (padded) training rows are dropped via ``valid``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    zq = jnp.asarray(zq)
+    zt = jnp.asarray(zt)
+    params = jnp.stack([jnp.asarray(ls2, zq.dtype), jnp.asarray(sf2, zq.dtype),
+                        jnp.asarray(beta, zq.dtype)])
+    q = zq.shape[0]
+    block_q = max(1, min(block_q, q))
+    pad = (-q) % block_q
+    if pad:
+        zq = jnp.pad(zq, ((0, pad), (0, 0)))
+    out = _lcb_rows(zq, zt, jnp.asarray(alpha), jnp.asarray(kinv),
+                    jnp.asarray(valid), params, block_q=block_q,
+                    interpret=interpret)
+    return out[:q]
 
 
 def _max_rows_kernel(x_ref, v_ref, o_ref):

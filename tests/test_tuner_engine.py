@@ -1,0 +1,300 @@
+"""Tuner engine contracts (repro/engine/tuner_train.py).
+
+Pins the four parity surfaces of the jitted tuner engine:
+
+* scan-vs-loop fit parity — the whole-trajectory ``lax.scan`` fits follow
+  the per-step host-dispatch reference losses step-for-step (filter MSE and
+  DKL NLML);
+* pow2-padding invariance — the masked NLML and the masked GP predictions
+  equal the unpadded exact values, independent of how much padding the
+  bucket adds;
+* Pallas-vs-numpy LCB kernel parity (``kernels.dse_eval.lcb_rows``);
+* end-to-end ``PimTuner.propose`` determinism: per-backend reproducibility
+  and scan-vs-loop agreement under a shared seed, plus the shared-seed
+  bitwise parity of the vectorized candidate sampling.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.hardware import (legal_shape_mask, normalize_params,
+                                 normalize_params_batch, sample_config_values,
+                                 sample_configs_batch)
+from repro.core.tuner import (DKL_SIZES, DklSuggestionModel, FilterModel,
+                              PimTuner, _DKL_OPT, _FILTER_OPT, _dkl_init,
+                              _dkl_predict, _dkl_step, _filter_step,
+                              _init_mlp, FILTER_SIZES, _nlml, sample_configs)
+from repro.engine.tuner_train import (dkl_predict, fit_dkl, fit_filter,
+                                      masked_mse, masked_nlml, pad_dataset,
+                                      pow2_bucket, score_candidates,
+                                      score_candidates_raw)
+from repro.kernels.dse_eval import lcb_rows
+
+
+def _cost(cfg) -> float:
+    t = cfg.as_tuple()
+    return float(abs(np.log2(t[2] * t[3]) - 10)
+                 + 0.2 * np.log2(t[4] + t[5]))
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(0)
+    cfgs = sample_configs(40, rng)
+    x = np.array([normalize_params(c) for c in cfgs[:18]], np.float32)
+    y = np.array([np.log(_cost(c)) for c in cfgs[:18]])
+    yn = ((y - y.mean()) / (y.std() + 1e-9)).astype(np.float32)
+    xq = np.array([normalize_params(c) for c in cfgs[18:]], np.float32)
+    return cfgs, x, yn, xq
+
+
+# ---------------------------------------------------------------------- sampling
+
+
+def test_sample_configs_batch_shared_seed_parity():
+    a = sample_configs(64, np.random.default_rng(11))
+    b = sample_configs_batch(64, np.random.default_rng(11))
+    assert [c.as_tuple() for c in a] == [c.as_tuple() for c in b]
+    # the value matrix is shape-legal by construction
+    vals = sample_config_values(64, np.random.default_rng(11))
+    assert legal_shape_mask(vals).all()
+    assert [tuple(map(int, r)) for r in vals] == [c.as_tuple() for c in a]
+
+
+def test_normalize_params_batch_matches_scalar():
+    vals = sample_config_values(16, np.random.default_rng(2))
+    batch = normalize_params_batch(vals)
+    cfgs = sample_configs_batch(16, np.random.default_rng(2))
+    scalar = np.array([normalize_params(c) for c in cfgs], np.float32)
+    np.testing.assert_array_equal(batch, scalar)
+
+
+def test_sample_draw_cap_raises():
+    with pytest.raises(RuntimeError, match="draw cap"):
+        sample_configs(4, np.random.default_rng(0), max_draws=0)
+    with pytest.raises(RuntimeError, match="draw cap"):
+        sample_config_values(4, np.random.default_rng(0), max_draws=0)
+
+
+# ------------------------------------------------------------- scan/loop parity
+
+
+def test_filter_scan_matches_loop_trajectory(dataset):
+    _, x, yn, _ = dataset
+    params = _init_mlp(__import__("jax").random.PRNGKey(0), FILTER_SIZES)
+    opt_state = _FILTER_OPT.init(params)
+    p, s = params, opt_state
+    loop_losses = []
+    xj, yj = jnp.asarray(x), jnp.asarray(yn)
+    for _ in range(60):
+        p, s, l = _filter_step(p, s, xj, yj)
+        loop_losses.append(float(l))
+    xp, yp, mask = pad_dataset(x, yn)
+    p2, _, scan_losses = fit_filter(params, opt_state, xp, yp, mask,
+                                    opt=_FILTER_OPT, steps=60)
+    np.testing.assert_allclose(np.asarray(scan_losses), loop_losses,
+                               rtol=1e-3, atol=1e-5)
+    # the trained parameters agree too, not just the loss curve
+    for la, lb in zip(p, p2):
+        np.testing.assert_allclose(np.asarray(la["w"]), np.asarray(lb["w"]),
+                                   atol=2e-4)
+
+
+def test_dkl_scan_matches_loop_trajectory(dataset):
+    _, x, yn, _ = dataset
+    params = _dkl_init(0)
+    opt_state = _DKL_OPT.init(params)
+    p, s = params, opt_state
+    loop_losses = []
+    xj, yj = jnp.asarray(x), jnp.asarray(yn)
+    for _ in range(60):
+        p, s, l = _dkl_step(p, s, xj, yj)
+        loop_losses.append(float(l))
+    xp, yp, mask = pad_dataset(x, yn)
+    _, _, scan_losses = fit_dkl(params, opt_state, xp, yp, mask,
+                                opt=_DKL_OPT, steps=60)
+    np.testing.assert_allclose(np.asarray(scan_losses), loop_losses,
+                               rtol=5e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------- padding invariance
+
+
+def _pad_to(x, y, p):
+    xp = np.zeros((p, x.shape[1]), np.float32)
+    yp = np.zeros((p,), np.float32)
+    mask = np.zeros((p,), bool)
+    n = len(y)
+    xp[:n], yp[:n], mask[:n] = x, y, True
+    return xp, yp, mask
+
+
+def test_masked_losses_match_unpadded_exact(dataset):
+    _, x, yn, _ = dataset
+    params = _dkl_init(0)
+    exact = float(_nlml(params, jnp.asarray(x), jnp.asarray(yn)))
+    for p in (pow2_bucket(len(yn)), 64):
+        xp, yp, mask = _pad_to(x, yn, p)
+        got = float(masked_nlml(params, xp, yp, mask))
+        assert got == pytest.approx(exact, abs=1e-4), f"pad={p}"
+    from repro.core.tuner import _filter_loss
+    mlp = _init_mlp(__import__("jax").random.PRNGKey(0), FILTER_SIZES)
+    exact = float(_filter_loss(mlp, jnp.asarray(x), jnp.asarray(yn)))
+    for p in (pow2_bucket(len(yn)), 64):
+        xp, yp, mask = _pad_to(x, yn, p)
+        assert float(masked_mse(mlp, xp, yp, mask)) \
+            == pytest.approx(exact, rel=1e-5), f"pad={p}"
+
+
+def test_masked_predictions_match_unpadded_exact(dataset):
+    _, x, yn, xq = dataset
+    params = _dkl_init(1)
+    m_ref, v_ref = _dkl_predict(params, jnp.asarray(x), jnp.asarray(yn),
+                                jnp.asarray(xq))
+    for p in (pow2_bucket(len(yn)), 64):
+        xp, yp, mask = _pad_to(x, yn, p)
+        mean, var = dkl_predict(params, xp, yp, mask, jnp.asarray(xq))
+        np.testing.assert_allclose(np.asarray(mean), np.asarray(m_ref),
+                                   atol=1e-4, err_msg=f"pad={p}")
+        np.testing.assert_allclose(np.asarray(var), np.asarray(v_ref),
+                                   atol=5e-3, err_msg=f"pad={p}")
+    # padding amount itself is invisible: 16-pad vs 64-pad agree tightly
+    m16, v16 = dkl_predict(params, *_pad_to(x, yn, 32), jnp.asarray(xq))
+    m64, v64 = dkl_predict(params, *_pad_to(x, yn, 64), jnp.asarray(xq))
+    np.testing.assert_allclose(np.asarray(m16), np.asarray(m64), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(v16), np.asarray(v64), atol=5e-5)
+
+
+# --------------------------------------------------------------- Pallas kernel
+
+
+def test_lcb_rows_matches_numpy():
+    rng = np.random.default_rng(5)
+    q, n, d = 37, 24, 6
+    zq = rng.normal(size=(q, d)).astype(np.float32)
+    zt = rng.normal(size=(n, d)).astype(np.float32)
+    alpha = rng.normal(size=(n,)).astype(np.float32)
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    kinv = (a @ a.T / n + np.eye(n)).astype(np.float32)
+    valid = np.ones(n, bool)
+    valid[-5:] = False
+    ls2, sf2, beta = 0.7, 1.3, 1.0
+
+    d2 = ((zq[:, None, :] - zt[None, :, :]) ** 2).sum(-1)
+    kq = sf2 * np.exp(-0.5 * d2 / ls2) * valid[None, :]
+    mean = kq @ alpha
+    var = sf2 - np.einsum("qi,ij,qj->q", kq, kinv, kq)
+    ref = mean - beta * np.sqrt(np.clip(var, 1e-9, None))
+
+    got = np.asarray(lcb_rows(zq, zt, alpha, kinv, valid, ls2, sf2, beta,
+                              interpret=True, block_q=16))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_score_candidates_pallas_matches_jnp(dataset):
+    _, x, yn, xq = dataset
+    params = _dkl_init(0)
+    xp, yp, mask = pad_dataset(x, yn)
+    ok = np.ones(len(xq), bool)
+    ok[::3] = False
+    a = np.asarray(score_candidates(params, xp, yp, mask, jnp.asarray(xq),
+                                    ok, 1.0, use_pallas=False))
+    b = np.asarray(score_candidates(params, xp, yp, mask, jnp.asarray(xq),
+                                    ok, 1.0, use_pallas=True))
+    assert np.isinf(a[::3]).all() and np.isinf(b[::3]).all()
+    # the jnp path computes distances via the gram trick, the fused kernel
+    # via the in-VMEM broadcast difference: equal up to f32 reassociation
+    np.testing.assert_allclose(a[ok], b[ok], rtol=5e-4, atol=5e-4)
+
+
+# -------------------------------------------------------------- GP ablation
+
+
+def test_gp_surrogate_engine_matches_numpy_reference():
+    from repro.core.surrogates import GPSurrogate
+    rng = np.random.default_rng(4)
+    cfgs = sample_configs_batch(40, rng)
+    gp_a = GPSurrogate(seed=7, n_sample=128, backend="engine")
+    gp_b = GPSurrogate(seed=7, n_sample=128, backend="numpy")
+    for c in cfgs[:25]:
+        gp_a.observe(c, c.area_mm2(), _cost(c))
+        gp_b.observe(c, c.area_mm2(), _cost(c))
+    xq = np.array([normalize_params(c) for c in cfgs[25:]], np.float64)
+    np.testing.assert_allclose(gp_a._rank_engine(xq), gp_b._rank(xq),
+                               rtol=1e-8, atol=1e-8)
+    pa = [c.as_tuple() for c in gp_a.propose(6)]
+    pb = [c.as_tuple() for c in gp_b.propose(6)]
+    assert pa == pb
+
+
+# ----------------------------------------------------------- propose end-to-end
+
+
+def _tuner_with_history(backend: str, fit_steps: int = 30,
+                        seed: int = 3) -> PimTuner:
+    cfgs = sample_configs(30, np.random.default_rng(9))
+    t = PimTuner(seed=seed, n_sample=256, backend=backend)
+    for c in cfgs:
+        t.observe(c, c.area_mm2(), _cost(c))
+    t.filter_model.fit(fit_steps)
+    t.suggestion.fit(fit_steps)
+    return t
+
+
+def test_propose_deterministic_per_backend():
+    for backend in ("scan", "loop"):
+        a = _tuner_with_history(backend).propose(8)
+        b = _tuner_with_history(backend).propose(8)
+        assert [c.as_tuple() for c in a] == [c.as_tuple() for c in b], backend
+
+
+def test_propose_scan_matches_loop_backend():
+    # short fits keep float drift below the ranking's resolution, so the
+    # fused in-array propose must pick the exact same configs as the
+    # original list-based path under a shared seed
+    a = _tuner_with_history("scan").propose(8)
+    b = _tuner_with_history("loop").propose(8)
+    assert [c.as_tuple() for c in a] == [c.as_tuple() for c in b]
+
+
+def test_untrained_propose_matches_across_backends():
+    a = PimTuner(seed=5, n_sample=128, backend="scan").propose(6)
+    b = PimTuner(seed=5, n_sample=128, backend="loop").propose(6)
+    assert [c.as_tuple() for c in a] == [c.as_tuple() for c in b]
+
+
+def test_dkl_rank_refits_when_stale():
+    m = DklSuggestionModel(seed=0)
+    cfgs = sample_configs(12, np.random.default_rng(6))
+    for c in cfgs[:6]:
+        m.add(c, _cost(c))
+    m.fit(30)
+    mu_before = m._mu
+    assert not m._dirty
+    # observations added after fit() invalidate the standardization;
+    # rank() must refit (not score against the stale _mu/_sigma)
+    for c in cfgs[6:]:
+        m.add(c, 1e6 * _cost(c))
+    assert m._dirty
+    xq = np.array([normalize_params(c) for c in cfgs[:4]], np.float32)
+    m.rank_x(xq)
+    assert not m._dirty
+    assert m._mu != mu_before
+
+
+def test_dse_curve_scan_vs_loop_same_seed():
+    """Fig. 9-style same-seed quality curves stay within tolerance."""
+    from repro.core.dse import WorkloadEvaluator, run_dse
+    from repro.core.workloads import googlenet
+    ev = WorkloadEvaluator([googlenet(1, scale=8)],
+                           mapper_kwargs=dict(max_optim_iter=1, lm_cap=40,
+                                              n_wr=3))
+    curves = {}
+    for backend in ("scan", "loop"):
+        strat = PimTuner(seed=0, n_sample=128, backend=backend)
+        res = run_dse(strat, ev, iterations=3)
+        curves[backend] = res.quality_curve()
+    assert len(curves["scan"]) == len(curves["loop"])
+    assert curves["scan"][-1] == pytest.approx(curves["loop"][-1], rel=0.5)
