@@ -4,6 +4,10 @@ Paper setup (Sec. VIII-E): PIM-node arrays of 4x4 / 8x8 / 16x16; sharing
 sets of 16 nodes; on the larger arrays multiple sets interleaved with
 strides 2 (8x8) and 4 (16x16); 8 KiB to share per node; 64-bit NoC flits
 @ 400 MHz.
+
+``--backend scan|loop`` picks the ILP-LS implementation: the jitted engine
+search (default) or the host-Python reference; ``benchmarks/
+scheduler_throughput.py`` pins their relative quality and speed.
 """
 
 from __future__ import annotations
@@ -30,7 +34,7 @@ def interleaved_sets(dim: int, stride: int) -> list[list[int]]:
     return sets
 
 
-def run(seed: int = 0) -> list[dict]:
+def run(seed: int = 0, backend: str = "scan") -> list[dict]:
     rows = []
     for dim, stride in ((4, 1), (8, 2), (16, 4)):
         noc = MeshNoc(dim, dim)
@@ -39,13 +43,14 @@ def run(seed: int = 0) -> list[dict]:
         for name, solver in (("ilp", solve_ilp_ls), ("tsp", solve_tsp),
                              ("shp", solve_shp)):
             t0 = time.time()
-            kw = {"seed": seed, "restarts": 6, "iters": 1200} \
-                if name == "ilp" else {}
+            kw = {"seed": seed, "restarts": 6, "iters": 1200,
+                  "backend": backend} if name == "ilp" else {}
             res = solver(noc, sets, [CHUNK] * len(sets), FLIT_BW, FREQ, EPJ,
                          **kw)
             lat[name] = res.latency_s
             rows.append({
                 "table": "fig12", "array": f"{dim}x{dim}", "method": name,
+                "backend": backend if name == "ilp" else "-",
                 "latency_us": res.latency_s * 1e6,
                 "max_link_bytes": res.max_link_bytes,
                 "solve_s": time.time() - t0,
@@ -56,7 +61,13 @@ def run(seed: int = 0) -> list[dict]:
 
 
 def main() -> None:
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="scan", choices=("scan", "loop"),
+                    help="ILP-LS implementation: jitted engine (default) "
+                         "or the host-Python reference")
+    args = ap.parse_args()
+    for r in run(backend=args.backend):
         print(f"fig12_{r['array']}_{r['method']},"
               f"{r['latency_us']:.2f},"
               f"norm={r['norm_latency']:.3f}")

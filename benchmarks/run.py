@@ -19,7 +19,8 @@ ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
 from benchmarks import (engine_throughput, fig9_dse, fig10_mapper, fig11_ddam,
-                        fig12_scheduler, mapper_throughput, tuner_throughput)
+                        fig12_scheduler, mapper_throughput,
+                        scheduler_throughput, tuner_throughput)
 
 
 def main() -> None:
@@ -47,6 +48,23 @@ def main() -> None:
             emit(f"fig12_{r['array']}_{r['method']}",
                  r["latency_us"], f"norm={r['norm_latency']:.3f}")
         print(f"# fig12 took {time.time() - t0:.1f}s", flush=True)
+
+    if "scheduler" not in skip:
+        t0 = time.time()
+        # --fast (CI smoke): the shared SMOKE_KW schedule/threshold — the
+        # full run enforces the >=5x batched solve-throughput contract
+        rows = (scheduler_throughput.run(**scheduler_throughput.SMOKE_KW)
+                if args.fast else scheduler_throughput.run())
+        all_rows += rows
+        for r in rows:
+            if r["case"].startswith("single"):
+                emit(f"scheduler_{r['case']}", r["scan_s"] * 1e6,
+                     f"speedup={r['speedup']:.1f}x")
+        r = next(x for x in rows if x["case"] == "batched_total")
+        emit("scheduler_batched", 1e6 * r["scan_s"] / r["n_solves"],
+             f"solves_per_s={r['scan_solves_per_s']:.1f} "
+             f"speedup={r['speedup']:.1f}x")
+        print(f"# scheduler took {time.time() - t0:.1f}s", flush=True)
 
     if "fig10" not in skip:
         t0 = time.time()

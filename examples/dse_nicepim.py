@@ -6,12 +6,15 @@ schemes and EDP costs -> the tuner's DKL/filter models are refit.
 
     PYTHONPATH=src python examples/dse_nicepim.py [--iters 8] [--all-legal]
                                                   [--tuner-backend loop]
+                                                  [--scheduler-backend loop]
 
 ``--all-legal`` maps EVERY legal proposal per iteration in one multi-config
 batch (``WorkloadEvaluator.evaluate_batch`` / ``PimMapper.map_many``) instead
 of the paper's first-legal-only walk — more observations per DKL refit.
 ``--tuner-backend loop`` swaps the jitted scan tuner engine for the scalar
 per-step reference path (same-seed results match within float drift).
+``--scheduler-backend loop`` swaps the jitted engine Data-Scheduler for the
+host-Python 2-opt reference (different RNG streams: close, not identical).
 """
 
 import argparse
@@ -35,12 +38,17 @@ def main() -> None:
                     choices=("scan", "loop"),
                     help="jitted scan tuner engine (default) or the scalar "
                          "per-step reference loop")
+    ap.add_argument("--scheduler-backend", default="scan",
+                    choices=("scan", "loop"),
+                    help="jitted engine Data-Scheduler (default) or the "
+                         "host-Python 2-opt reference")
     args = ap.parse_args()
 
     workloads = [googlenet(1, scale=4),
                  bert_base(1, seq=64, n_layers=2, n_heads=4)]
     evaluator = WorkloadEvaluator(
-        workloads, mapper_kwargs=dict(max_optim_iter=1, lm_cap=60, n_wr=3))
+        workloads, mapper_kwargs=dict(max_optim_iter=1, lm_cap=60, n_wr=3),
+        scheduler_backend=args.scheduler_backend)
     tuner = PimTuner(n_sample=512, backend=args.tuner_backend)
     res = run_dse(tuner, evaluator, iterations=args.iters, verbose=True,
                   evaluate_all_legal=args.all_legal)

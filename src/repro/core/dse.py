@@ -89,6 +89,10 @@ class WorkloadEvaluator:
     ``mapper_backend`` selects the PIM-Mapper costing path (``"batched"`` —
     the vectorized engine — or ``"scalar"``); it folds into
     ``mapper_kwargs`` so it also keys the content-addressed cache.
+    ``scheduler_backend`` selects the Data-Scheduler's joint-LS path
+    (``"scan"`` — the jitted engine search, batched per mapping — or
+    ``"loop"``, the host-Python reference); it keys both caches too, since
+    the two searches draw different RNG streams.
     ``clear_caches_between_configs=True`` drops the mapper-level memos
     (candidate tables, node costs, Data-Scheduler solves — mostly hw-keyed,
     plus the hw-independent shape memos) after each newly evaluated
@@ -101,6 +105,7 @@ class WorkloadEvaluator:
                  beta: float = 1.0, gamma: float = 1.0,
                  mapper_kwargs: dict | None = None, cache=None,
                  mapper_backend: str | None = None,
+                 scheduler_backend: str = "scan",
                  clear_caches_between_configs: bool = False):
         self.workloads = workloads
         self.alpha = alpha
@@ -109,6 +114,7 @@ class WorkloadEvaluator:
         self.mapper_kwargs = dict(mapper_kwargs or {})
         if mapper_backend is not None:
             self.mapper_kwargs["backend"] = mapper_backend
+        self.scheduler_backend = scheduler_backend
         self.clear_caches_between_configs = clear_caches_between_configs
         self._cache: dict[tuple, tuple[float, dict, dict]] = {}
         self.cache = cache
@@ -128,6 +134,7 @@ class WorkloadEvaluator:
                 "workloads": workloads_digest(self.workloads),
                 "alpha": self.alpha, "beta": self.beta, "gamma": self.gamma,
                 "mapper_kwargs": repr(sorted(self.mapper_kwargs.items())),
+                "scheduler_backend": self.scheduler_backend,
             })
         return hw_digest(cfg) + ":" + self._wl_digest
 
@@ -154,7 +161,9 @@ class WorkloadEvaluator:
         try:
             for g in self.workloads:
                 try:
-                    rep = evaluate_mapping(mapper.map(g))
+                    rep = evaluate_mapping(
+                        mapper.map(g),
+                        scheduler_backend=self.scheduler_backend)
                 except RuntimeError:   # capacity-infeasible mapping
                     # earlier workloads' numbers must not leak into the
                     # caches alongside the inf cost: an infeasible config
@@ -227,7 +236,8 @@ class WorkloadEvaluator:
                         costs[k] = math.inf   # as __call__ — nothing leaks
                         lats[k], ens[k] = {}, {}
                         continue
-                    rep = evaluate_mapping(m)
+                    rep = evaluate_mapping(
+                        m, scheduler_backend=self.scheduler_backend)
                     lats[k][g.name] = rep.latency_s
                     ens[k][g.name] = rep.energy_pj
                     energy_j = rep.energy_pj * 1e-12

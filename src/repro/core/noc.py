@@ -80,24 +80,63 @@ class MeshNoc:
         return {(a, b): np.asarray(self.route(a, b), dtype=np.intp)
                 for a in nodes for b in nodes if a != b}
 
+    @lru_cache(maxsize=None)
+    def route_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Dense per-pair route arrays ``(route_pad, hops)``.
+
+        ``route_pad[a, b]`` holds the XY-route link indices of ``a -> b``
+        padded with the dummy index ``n_links()`` to the mesh's route-length
+        bound (rows + cols - 2); ``hops[a, b]`` is the true route length.
+        This is the whole-mesh gather form of :meth:`route` that the
+        vectorized load accounting below and the engine scheduler's jitted
+        2-opt (``engine.scheduler_opt``) index into — accumulating into
+        ``n_links() + 1`` bins and dropping the dummy bin replaces the
+        per-transfer Python route walk.
+        """
+        nn = self.n_nodes
+        lmax = max(1, self.rows + self.cols - 2)
+        pad = np.full((nn, nn, lmax), self.n_links(), dtype=np.int32)
+        hops = np.zeros((nn, nn), dtype=np.int32)
+        for a in range(nn):
+            for b in range(nn):
+                if a == b:
+                    continue
+                r = self.route(a, b)
+                pad[a, b, :len(r)] = r
+                hops[a, b] = len(r)
+        pad.setflags(write=False)
+        hops.setflags(write=False)
+        return pad, hops
+
     # -- load accounting -----------------------------------------------------
     def link_loads_np(self, transfers) -> np.ndarray:
-        """``link_loads`` as a float64 array (batched-scheduler base state)."""
-        return np.asarray(self.link_loads(transfers))
+        """Bytes per directed link as a float64 array — the primary path.
+
+        One gather of the cached :meth:`route_table` + one ``np.add.at``
+        replaces the per-transfer Python route loop; padded route slots
+        accumulate into a dummy bin that is dropped.
+        """
+        loads = np.zeros(self.n_links() + 1)
+        if transfers:
+            tr = np.asarray(transfers, dtype=np.float64).reshape(-1, 3)
+            src = tr[:, 0].astype(np.intp)
+            dst = tr[:, 1].astype(np.intp)
+            nbytes = tr[:, 2]
+            keep = (src != dst) & (nbytes > 0)
+            if keep.any():
+                idx = self.route_table()[0][src[keep], dst[keep]]
+                np.add.at(loads, idx.ravel(),
+                          np.broadcast_to(nbytes[keep, None],
+                                          idx.shape).ravel())
+        return loads[:-1]
 
     def link_loads(self, transfers: list[tuple[int, int, float]]) -> list[float]:
         """Bytes per directed link for ``(src, dst, nbytes)`` transfers."""
-        loads = [0.0] * self.n_links()
-        for src, dst, nbytes in transfers:
-            if src == dst or nbytes <= 0:
-                continue
-            for l in self.route(src, dst):
-                loads[l] += nbytes
-        return loads
+        return self.link_loads_np(transfers).tolist()
 
     def max_link_load(self, transfers: list[tuple[int, int, float]]) -> float:
-        loads = self.link_loads(transfers)
-        return max(loads) if loads else 0.0
+        loads = self.link_loads_np(transfers)
+        return float(loads.max()) if loads.size else 0.0
 
     def transfer_latency_s(self, transfers, link_bw_bytes: float,
                            freq_hz: float, router_cycles: int = 2) -> float:
@@ -105,12 +144,18 @@ class MeshNoc:
         if not transfers:
             return 0.0
         max_load = self.max_link_load(transfers)
-        max_hops = max((self.hops(s, d) for s, d, b in transfers if b > 0),
-                       default=0)
+        tr = np.asarray(transfers, dtype=np.float64).reshape(-1, 3)
+        src = tr[:, 0].astype(np.intp)
+        dst = tr[:, 1].astype(np.intp)
+        hops = self.route_table()[1][src, dst]
+        max_hops = int(hops[tr[:, 2] > 0].max()) if (tr[:, 2] > 0).any() else 0
         return max_load / link_bw_bytes + max_hops * router_cycles / freq_hz
 
     def transfer_energy_pj(self, transfers, pj_per_bit_hop: float) -> float:
-        e = 0.0
-        for src, dst, nbytes in transfers:
-            e += nbytes * 8 * self.hops(src, dst) * pj_per_bit_hop
-        return e
+        if not transfers:
+            return 0.0
+        tr = np.asarray(transfers, dtype=np.float64).reshape(-1, 3)
+        src = tr[:, 0].astype(np.intp)
+        dst = tr[:, 1].astype(np.intp)
+        hops = self.route_table()[1][src, dst]
+        return float((tr[:, 2] * 8 * hops).sum() * pj_per_bit_hop)

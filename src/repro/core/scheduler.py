@@ -12,7 +12,12 @@ Eq. 2–3) with Gurobi.  Gurobi is unavailable offline, so ``solve_ilp_ls``
 searches the *same feasible set* (one Hamilton cycle per sharing-set) for the
 *same objective* (min max-link-load) with exhaustive enumeration for small
 sets and multi-restart 2-opt local search jointly across sets otherwise;
-tests verify it matches brute force where brute force is tractable.
+tests verify it matches brute force where brute force is tractable.  The
+local search has two backends: ``"scan"`` (default) runs restarts as
+parallel chains inside one jitted ``lax.scan`` on the engine layer
+(``repro.engine.scheduler_opt``, which also batch-solves many problems at
+once via ``schedule_many``); ``"loop"`` is the host-Python reference this
+file implements.
 
 Baselines from Sec. VIII-E: ``solve_tsp`` (per-set min-total-hop cycle, the
 [47] approach) and ``solve_shp`` (shortest-path unicast of every chunk).
@@ -24,6 +29,7 @@ import itertools
 import math
 import random
 from dataclasses import dataclass
+from functools import lru_cache
 
 import numpy as np
 
@@ -91,17 +97,23 @@ def _move_edges(cyc: list[int], i: int, j: int):
 
 def _propose_moves(cycles: list[list[int]], rng: random.Random,
                    n_moves: int) -> list[tuple[int, int, int]]:
-    """Sample ``(set, i, j)`` 2-opt proposals across all eligible cycles."""
+    """Sample ``(set, i, j)`` 2-opt proposals across all eligible cycles.
+
+    The full-cycle reversal ``(0, n - 1)`` is not a 2-opt edge exchange; it
+    is *redrawn* rather than skipped so every call returns exactly
+    ``n_moves`` proposals (a skipped draw used to silently shrink the
+    batch below ``moves_per_round``).
+    """
     eligible = [si for si, c in enumerate(cycles) if len(c) >= 4]
     moves = []
+    if not eligible:
+        return moves
     for _ in range(n_moves):
-        if not eligible:
-            break
         si = eligible[rng.randrange(len(eligible))]
         n = len(cycles[si])
         i, j = sorted(rng.sample(range(n), 2))
-        if (i, j) == (0, n - 1):  # full reversal: not a 2-opt edge exchange
-            continue
+        while (i, j) == (0, n - 1):
+            i, j = sorted(rng.sample(range(n), 2))
         moves.append((si, i, j))
     return moves
 
@@ -115,36 +127,84 @@ def _batch_max_link_load(loads: np.ndarray) -> np.ndarray:
 
 # -- the ILP-equivalent joint optimizer ---------------------------------------
 
+BACKENDS = ("scan", "loop")
+
+
+@lru_cache(maxsize=4096)
+def _tsp_cycle(noc: MeshNoc, nodes: tuple[int, ...]) -> tuple[int, ...]:
+    """Memoized per-set min-total-hop cycle (NN construction + 2-opt).
+
+    Deterministic in ``nodes``, so one memo serves ``solve_tsp``, every
+    restart-1 seed of both LS backends, and repeated solves over the same
+    sharing sets (a mapper batch revisits the same region shapes often).
+    """
+    return tuple(_two_opt_distance(noc, _nearest_neighbor_cycle(noc,
+                                                                list(nodes))))
+
+
+def _initial_cycles(noc: MeshNoc, sharing_sets, r: int,
+                    rng: random.Random) -> list[list[int]]:
+    """Restart ``r``'s starting cycles — shared by both LS backends."""
+    cycles = []
+    for si, s in enumerate(sharing_sets):
+        c = list(s)
+        if r == 0:
+            # alternate row-/column-snakes across sets: translated sets
+            # then load disjoint link classes instead of piling onto the
+            # same row links (the coordination the joint ILP encodes)
+            c.sort(key=lambda n: _snake_key(noc, n, flip=si % 2 == 1))
+        elif r == 1:  # seed with the TSP solution: LS can only improve it
+            c = list(_tsp_cycle(noc, tuple(c)))
+        elif r == 2:
+            c.sort(key=lambda n: _snake_key(noc, n))
+        else:
+            rng.shuffle(c)
+        cycles.append(c)
+    return cycles
+
+
 def solve_ilp_ls(noc: MeshNoc, sharing_sets: list[list[int]],
                  chunk_bytes: list[float], link_bw: float, freq: float,
                  pj_per_bit_hop: float, *, seed: int = 0,
                  restarts: int = 4, iters: int = 400,
                  moves_per_round: int = 32,
-                 rng: random.Random | None = None) -> ScheduleResult:
+                 rng: random.Random | None = None,
+                 backend: str = "scan") -> ScheduleResult:
     """Joint min-max-link-load Hamilton cycle selection (paper Eq. 2–4).
 
-    The 2-opt local search is batched: per round it samples
-    ``moves_per_round`` candidate segment reversals jointly across all
-    sharing-sets, scores every proposal as a link-load *delta* against the
-    precomputed per-pair XY-route incidence (``MeshNoc.route_incidence``),
-    reduces the whole batch through the Pallas max-link-load kernel
-    (``engine.batch_cost.batch_max_link_load``), and applies the
-    non-worsening moves best-first — one per sharing-set per round, each
-    re-checked exactly against the already-applied deltas.  ``iters`` is
-    the move-*evaluation* budget (matching the old one-move-per-iteration
-    search); applied moves are bounded by rounds x sets rather than by
-    ``iters``, which the best-of-batch selection more than compensates in
-    practice (the brute-force and baseline-ordering tests pin quality).
+    ``backend="scan"`` (default) runs the whole multi-restart 2-opt local
+    search as ONE jitted ``lax.scan`` on the engine layer
+    (:func:`repro.engine.scheduler_opt.schedule_many` with this single
+    problem): restarts become parallel chains, each round scores a batch of
+    jax-PRNG move proposals as link-load deltas via gathers + segment-sum
+    against the dense :meth:`MeshNoc.route_table` and applies the best
+    non-worsening move per sharing-set in-array.  ``backend="loop"`` keeps
+    the host-Python reference search (the parity/quality baseline).
 
-    Every random choice is drawn from one explicit ``random.Random`` — pass
-    ``rng`` (or ``seed``) to make repeated DSE runs reproducible; the global
+    Both backends share the restart initializations (snake / TSP-seeded /
+    shuffles), the exhaustive small-set path, and the per-round move budget
+    (``iters`` move evaluations in rounds of ``moves_per_round``); they
+    draw from different RNG streams, so cycles may differ — quality is
+    pinned by the scan<=loop and brute-force tests.  Every random choice
+    derives from ``seed`` (or the explicit ``rng``): ``rng=Random(s)`` and
+    ``seed=s`` produce the same schedule on either backend, and the global
     ``random`` state is never touched.
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown scheduler backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
     rng = rng if rng is not None else random.Random(seed)
     small = all(len(s) <= 7 for s in sharing_sets) and len(sharing_sets) == 1
     if small:
         return _solve_exact(noc, sharing_sets, chunk_bytes, link_bw, freq,
                             pj_per_bit_hop)
+    if backend == "scan":
+        # deferred: engine.scheduler_opt imports this module for the shared
+        # move algebra — by call time both are fully initialized
+        from ..engine.scheduler_opt import _solve_one_scan
+        return _solve_one_scan(noc, sharing_sets, chunk_bytes, link_bw, freq,
+                               pj_per_bit_hop, rng=rng, restarts=restarts,
+                               iters=iters, moves_per_round=moves_per_round)
 
     # per-set weight of one cycle edge (Eq. 4: each edge carries N-1 chunks)
     weights = [(len(s) - 1) * ch for s, ch in zip(sharing_sets, chunk_bytes)]
@@ -159,21 +219,7 @@ def solve_ilp_ls(noc: MeshNoc, sharing_sets: list[list[int]],
     rounds = max(1, -(-iters // moves_per_round))
     stall_limit = max(2, 60 // moves_per_round)
     for r in range(max(3, restarts)):
-        cycles = []
-        for si, s in enumerate(sharing_sets):
-            c = list(s)
-            if r == 0:
-                # alternate row-/column-snakes across sets: translated sets
-                # then load disjoint link classes instead of piling onto the
-                # same row links (the coordination the joint ILP encodes)
-                c.sort(key=lambda n: _snake_key(noc, n, flip=si % 2 == 1))
-            elif r == 1:  # seed with the TSP solution: LS can only improve it
-                c = _two_opt_distance(noc, _nearest_neighbor_cycle(noc, c))
-            elif r == 2:
-                c.sort(key=lambda n: _snake_key(noc, n))
-            else:
-                rng.shuffle(c)
-            cycles.append(c)
+        cycles = _initial_cycles(noc, sharing_sets, r, rng)
         loads = noc.link_loads_np(_all_transfers(cycles, chunk_bytes))
         obj = float(loads.max()) if loads.size else 0.0
         stall = 0
@@ -251,16 +297,14 @@ def _solve_exact(noc: MeshNoc, sharing_sets, chunk_bytes, link_bw, freq,
 def solve_tsp(noc: MeshNoc, sharing_sets: list[list[int]],
               chunk_bytes: list[float], link_bw: float, freq: float,
               pj_per_bit_hop: float, *, seed: int = 0,
-              rng: random.Random | None = None) -> ScheduleResult:
+              rng: random.Random | None = None,
+              backend: str = "scan") -> ScheduleResult:
     """Per-set min-total-hop Hamilton cycle (the TSP method of [47]).
 
-    Deterministic; ``seed``/``rng`` accepted for SOLVERS signature parity.
+    Deterministic; ``seed``/``rng``/``backend`` accepted for SOLVERS
+    signature parity.
     """
-    cycles = []
-    for s in sharing_sets:
-        cyc = _nearest_neighbor_cycle(noc, s)
-        cyc = _two_opt_distance(noc, cyc)
-        cycles.append(cyc)
+    cycles = [list(_tsp_cycle(noc, tuple(s))) for s in sharing_sets]
     return _finish(noc, cycles, chunk_bytes, link_bw, freq, pj_per_bit_hop)
 
 
@@ -276,19 +320,27 @@ def _nearest_neighbor_cycle(noc: MeshNoc, nodes: list[int]) -> list[int]:
 
 
 def _two_opt_distance(noc: MeshNoc, cyc: list[int]) -> list[int]:
-    def total(c):
-        return sum(noc.hops(c[i], c[(i + 1) % len(c)]) for i in range(len(c)))
+    """First-improvement 2-opt on total cycle hop count.
+
+    A reversal of ``cyc[i:j+1]`` only swaps the two boundary edges (interior
+    edges reverse direction, and hop distance is symmetric), so each
+    candidate is scored by its 2-edge delta in O(1) instead of recomputing
+    the whole cycle length — same accept order and integer-exact deltas as
+    the old full-recompute sweep, one n lighter in complexity.
+    """
     best = list(cyc)
-    best_d = total(best)
+    n = len(best)
     improved = True
     while improved:
         improved = False
-        for i in range(1, len(best) - 1):
-            for j in range(i + 1, len(best)):
-                cand = _apply_2opt(best, i, j)
-                d = total(cand)
-                if d < best_d:
-                    best, best_d = cand, d
+        for i in range(1, n - 1):
+            for j in range(i + 1, n):
+                a, b = best[i - 1], best[i]
+                c, d = best[j], best[(j + 1) % n]
+                delta = (noc.hops(a, c) + noc.hops(b, d)
+                         - noc.hops(a, b) - noc.hops(c, d))
+                if delta < 0:
+                    best[i:j + 1] = best[i:j + 1][::-1]
                     improved = True
     return best
 
@@ -296,10 +348,12 @@ def _two_opt_distance(noc: MeshNoc, cyc: list[int]) -> list[int]:
 def solve_shp(noc: MeshNoc, sharing_sets: list[list[int]],
               chunk_bytes: list[float], link_bw: float, freq: float,
               pj_per_bit_hop: float, *, seed: int = 0,
-              rng: random.Random | None = None) -> ScheduleResult:
+              rng: random.Random | None = None,
+              backend: str = "scan") -> ScheduleResult:
     """Shortest-path unicast: every chunk goes owner→consumer directly.
 
-    Deterministic; ``seed``/``rng`` accepted for SOLVERS signature parity.
+    Deterministic; ``seed``/``rng``/``backend`` accepted for SOLVERS
+    signature parity.
     """
     tr: list[tuple[int, int, float]] = []
     for s, ch in zip(sharing_sets, chunk_bytes):

@@ -10,6 +10,10 @@ pipeline:
   trajectories in one jitted ``lax.scan`` over pow2-bucketed masked data,
   and fused one-dispatch candidate scoring (DKL features, RBF cross-kernel,
   GP mean/var, LCB, in-array area mask; Pallas ``lcb_rows`` reduction).
+* :mod:`.scheduler_opt` — the Data-Scheduler's jitted multi-chain 2-opt:
+  restarts as parallel chains in one ``lax.scan``, scatter-free flip-cumsum
+  move deltas, and pow2-bucketed multi-problem ``schedule_many`` batching
+  (Pallas ``delta_maxload_rows`` scoring on TPU).
 * :mod:`.pareto` — streaming latency/energy/area Pareto-frontier tracker.
 * :mod:`.cache` — content-addressed memoization of mapper/scheduler results
   keyed by (HwConfig, DnnGraph) digests.
@@ -21,6 +25,7 @@ from .batch_cost import (BatchCostResult, PartSpec, batch_area_mm2,
                          batch_max_link_load, batch_part_cost)
 from .cache import EvalCache, cons_digest, graph_digest, hw_digest
 from .pareto import ParetoFront, ParetoPoint
+from .scheduler_opt import schedule_many
 from .tuner_train import (compiled_program_count, fit_dkl, fit_filter,
                           pad_dataset, pow2_bucket, score_candidates,
                           score_candidates_raw)
@@ -31,5 +36,6 @@ __all__ = [
     "batch_part_cost", "EvalCache", "cons_digest", "graph_digest",
     "hw_digest", "ParetoFront", "ParetoPoint", "Campaign", "CampaignResult",
     "compiled_program_count", "fit_dkl", "fit_filter", "pad_dataset",
-    "pow2_bucket", "score_candidates", "score_candidates_raw",
+    "pow2_bucket", "schedule_many", "score_candidates",
+    "score_candidates_raw",
 ]

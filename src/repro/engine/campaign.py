@@ -74,6 +74,7 @@ class Campaign:
                  evaluator_kwargs: dict | None = None,
                  strategy_kwargs: dict | None = None,
                  mapper_backend: str | None = None,
+                 scheduler_backend: str | None = None,
                  evaluate_all_legal: bool = False,
                  checkpoint: str | Path | None = None,
                  max_workers: int | None = None,
@@ -93,6 +94,8 @@ class Campaign:
         self.strategy_kwargs = dict(strategy_kwargs or {})
         if mapper_backend is not None:
             self.evaluator_kwargs["mapper_backend"] = mapper_backend
+        if scheduler_backend is not None:
+            self.evaluator_kwargs["scheduler_backend"] = scheduler_backend
         self.checkpoint = Path(checkpoint) if checkpoint else None
         self.max_workers = max_workers or min(4, max(1, len(self.strategies)))
         self.cache = cache if cache is not None else EvalCache()

@@ -9,6 +9,10 @@ Two row-wise reductions sit on the engine's hot path:
 * ``max_rows`` — the max-link-load reduction: row-wise masked max, used to
   score batches of candidate NoC schedules (one row per schedule, one column
   per directed mesh link).
+* ``delta_maxload_rows`` — the engine Data-Scheduler's move scoring: fuse
+  the ``base + delta`` link-load accumulation of a whole 2-opt proposal
+  batch with the per-proposal max-link reduction (one row per search chain,
+  one slab per proposed segment reversal).
 * ``minplus_rows`` — the Algorithm-2 *segment* min-plus convolution: fuse the
   ``a[i] + b[r, i]`` broadcast-add with the row-wise min + first-argmin that
   combines per-segment DP tables under one shared capacity budget.
@@ -239,6 +243,48 @@ def lcb_rows(zq, zt, alpha, kinv, valid, ls2, sf2, beta, *,
                     jnp.asarray(valid), params, block_q=block_q,
                     interpret=interpret)
     return out[:q]
+
+
+def _delta_maxload_rows_kernel(b_ref, d_ref, o_ref):
+    o_ref[...] = jnp.max(b_ref[...][:, None, :] + d_ref[...], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _delta_maxload_rows(base, deltas, *, block_m: int, interpret: bool):
+    r, m, e = deltas.shape
+    grid = (r, pl.cdiv(m, block_m))
+    return pl.pallas_call(
+        _delta_maxload_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, e), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, block_m, e), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, m), deltas.dtype),
+        interpret=interpret,
+    )(base, deltas)
+
+
+def delta_maxload_rows(base, deltas, *, block_m: int = 128,
+                       interpret: bool | None = None):
+    """``([R, E] base, [R, M, E] deltas) -> [R, M] max(base + delta)``.
+
+    The engine Data-Scheduler's fused move-scoring reduction: row ``r`` is
+    one 2-opt chain's current link loads, ``deltas[r, m]`` the link-load
+    delta of its ``m``-th proposed segment reversal, and the output the
+    proposal's Eq. 4 objective — the broadcast add and the max-link
+    reduction fused in one pass instead of materializing ``base + delta``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    base = jnp.asarray(base)
+    deltas = jnp.asarray(deltas)
+    r, m, e = deltas.shape
+    block_m = max(1, min(block_m, m))
+    pad = (-m) % block_m
+    if pad:
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad), (0, 0)))
+    out = _delta_maxload_rows(base, deltas, block_m=block_m,
+                              interpret=interpret)
+    return out[:, :m]
 
 
 def _max_rows_kernel(x_ref, v_ref, o_ref):
