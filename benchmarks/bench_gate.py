@@ -1,0 +1,113 @@
+"""Perf-trajectory regression gate over ``experiments/BENCH_*.json``.
+
+``benchmarks.run`` writes a machine-readable artifact per run with named
+*gates* — the headline speedup/quality numbers each PR promises (batched
+mapper/scheduler/tuner/engine speedups, NicePIM-vs-random Fig. 9 quality).
+This module compares the current artifact against a committed baseline and
+fails (exit 1) when any gate regresses below its tolerance band:
+
+    PYTHONPATH=src python -m benchmarks.bench_gate \
+        --current experiments/BENCH_6.json --baseline /tmp/BENCH_6.json
+
+Skips cleanly (exit 0 with a message) when there is no baseline yet, or
+when baseline and current were produced in different modes (smoke vs
+full) — those numbers are not comparable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_CURRENT = ROOT / "experiments" / "BENCH_6.json"
+
+
+def load(path: str | Path) -> dict:
+    data = json.loads(Path(path).read_text())
+    schema = str(data.get("schema", ""))
+    if not schema.startswith("nicepim-bench/"):
+        raise ValueError(f"{path}: unknown schema {schema!r}")
+    return data
+
+
+def compare(current: dict, baseline: dict) -> tuple[list[str], list[str]]:
+    """Return ``(failures, report_lines)`` for current vs baseline gates.
+
+    A gate regresses when ``value < base * (1 - tolerance)`` (all gates
+    are higher-is-better ratios).  The *baseline's* tolerance is used: the
+    committed artifact declares the band the repo promises to stay inside.
+    Gates present on only one side are reported but never fail — they are
+    new or retired promises, not regressions.
+    """
+    failures: list[str] = []
+    lines: list[str] = []
+    base_gates = baseline.get("gates", {})
+    cur_gates = current.get("gates", {})
+    for name in sorted(set(base_gates) | set(cur_gates)):
+        if name not in cur_gates:
+            lines.append(f"~ {name}: gate removed (was "
+                         f"{base_gates[name]['value']:.2f})")
+            continue
+        if name not in base_gates:
+            lines.append(f"+ {name}: new gate "
+                         f"({cur_gates[name]['value']:.2f})")
+            continue
+        base = base_gates[name]
+        cur = cur_gates[name]
+        tol = float(base.get("tolerance", 0.25))
+        floor = float(base["value"]) * (1.0 - tol)
+        ratio = float(cur["value"]) / max(float(base["value"]), 1e-30)
+        verdict = "ok" if float(cur["value"]) >= floor else "REGRESSED"
+        lines.append(f"{'.' if verdict == 'ok' else '!'} {name}: "
+                     f"{cur['value']:.2f} vs baseline {base['value']:.2f} "
+                     f"({ratio:.2f}x, floor {floor:.2f}) {verdict}")
+        if verdict != "ok":
+            failures.append(name)
+    return failures, lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=str(DEFAULT_CURRENT))
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH artifact to gate against; "
+                         "omitted or missing => clean skip")
+    args = ap.parse_args(argv)
+
+    if not Path(args.current).exists():
+        print(f"bench_gate: current artifact {args.current} not found")
+        return 2
+    current = load(args.current)
+
+    if not args.baseline or not Path(args.baseline).exists():
+        print(f"bench_gate: no baseline ({args.baseline or 'not given'}); "
+              "skipping — commit the current artifact to start gating")
+        return 0
+    try:
+        baseline = load(args.baseline)
+    except (json.JSONDecodeError, ValueError, OSError) as e:
+        print(f"bench_gate: unreadable baseline ({e}); skipping")
+        return 0
+
+    if current.get("mode") != baseline.get("mode"):
+        print(f"bench_gate: mode mismatch (current={current.get('mode')}, "
+              f"baseline={baseline.get('mode')}); skipping — smoke and "
+              "full numbers are not comparable")
+        return 0
+
+    failures, lines = compare(current, baseline)
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"bench_gate: {len(failures)} gate(s) regressed: "
+              + ", ".join(failures))
+        return 1
+    print(f"bench_gate: all {len(lines)} gate(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from repro.engine.campaign import Campaign
 from repro.core.workloads import bert_base, googlenet, resnet50
+from repro.obs.trace import Tracer
 
 STRATEGIES = ("nicepim", "random", "simanneal", "gp", "xgboost")
 
@@ -34,20 +35,27 @@ def _nets(tiny: bool = False):
 def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
         strategies=STRATEGIES, checkpoint=None,
         evaluate_all_legal: bool = False,
-        tuner_backend: str | None = None) -> list[dict]:
+        tuner_backend: str | None = None,
+        trace: str | None = None) -> list[dict]:
     # evaluate_all_legal=True maps EVERY legal proposal per iteration in one
     # multi-config pass (more observations per DKL refit); the default keeps
     # the paper's first-legal-only walk for Fig. 9 parity.
     # tuner_backend="loop" runs the tuner/GP models on the scalar per-step
     # reference path instead of the jitted scan engine (same-seed curves
     # match within float drift — tests/test_tuner_engine.py pins this).
+    # trace="out.json" records every propose/map/schedule/evaluate span to a
+    # Chrome-trace file loadable in Perfetto / chrome://tracing.
+    tracer = Tracer() if trace else None
     campaign = Campaign(
         _nets(tiny), strategies, iterations=iterations, seed=seed,
         n_sample=512, evaluator_kwargs=dict(mapper_kwargs=dict(MAPPER_KWARGS)),
         strategy_kwargs=(dict(backend=tuner_backend) if tuner_backend
                          else None),
-        checkpoint=checkpoint, evaluate_all_legal=evaluate_all_legal)
+        checkpoint=checkpoint, evaluate_all_legal=evaluate_all_legal,
+        tracer=tracer)
     out = campaign.run()
+    if tracer is not None:
+        tracer.save(trace)
     rows = []
     for name in strategies:
         res = out.results[name]
@@ -60,28 +68,48 @@ def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
             "quality_mid": q[len(q) // 2] if q else 0.0,
             "best_cost": best.cost,
             "best_cfg": best.cfg.as_tuple(),
-            "solve_s": out.timings_s.get(name, 0.0),
+            "solve_s": out.wall_s.get(name, 0.0),
+            "cpu_s": out.timings_s.get(name, 0.0),
             "curve": q,
         })
+    from repro.engine.tuner_train import compiled_program_count
     rows.append({
         "table": "fig9", "strategy": "pareto",
         "iterations": iterations,
         "pareto_size": len(out.pareto),
         "pareto": out.pareto.to_jsonable(),
         "cache": out.cache_stats,
+        "metrics": out.metrics,
+        "programs": compiled_program_count(),
     })
     return rows
 
 
-def main(iterations: int = 12, tiny: bool = False) -> None:
-    rows = [r for r in run(iterations=iterations, tiny=tiny)
-            if r["strategy"] != "pareto"]
-    base = [r for r in rows if r["strategy"] == "random"][0]["quality_final"]
-    for r in rows:
+def main(iterations: int = 12, tiny: bool = False,
+         trace: str | None = None) -> None:
+    rows = run(iterations=iterations, tiny=tiny, trace=trace)
+    curves = [r for r in rows if r["strategy"] != "pareto"]
+    base = [r for r in curves if r["strategy"] == "random"][0]["quality_final"]
+    for r in curves:
         rel = r["quality_final"] / max(base, 1e-30)
         print(f"fig9_{r['strategy']},{r['solve_s'] * 1e6 / r['iterations']:.0f},"
               f"quality={r['quality_final']:.3e} vs_random={rel:.2f}x")
+    pareto = next(r for r in rows if r["strategy"] == "pareto")
+    cache = pareto["cache"]
+    total = cache["hits"] + cache["misses"]
+    print(f"# eval cache: {cache['hits']}/{total} hits "
+          f"({cache['entries']} entries); "
+          f"compiled programs: {sum(pareto['programs'].values())}")
+    if trace:
+        print(f"# chrome trace written to {trace}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iterations", type=int, default=12)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome-trace of the campaign here")
+    a = ap.parse_args()
+    main(iterations=a.iterations, tiny=a.tiny, trace=a.trace)

@@ -1,10 +1,11 @@
 """Assemble EXPERIMENTS.md from dry-run JSONs + benchmark results.
 
 Sections:
-  §Dry-run   — compile status, memory per device, collective schedule
-  §Roofline  — three terms per (arch x shape x mesh), bottleneck, MFU terms
-  §Paper     — Fig. 9/10/11/12 reproductions vs the paper's claims
-  §Perf      — hillclimb log (appended by benchmarks/perf_log.py entries)
+  §Dry-run          — compile status, memory per device, collective schedule
+  §Roofline         — three terms per (arch x shape x mesh), bottleneck, MFU
+  §Paper            — Fig. 9/10/11/12 reproductions vs the paper's claims
+  §Perf-trajectory  — named regression gates per BENCH_*.json artifact
+  §Perf             — hillclimb log (benchmarks/perf_log.py entries)
 """
 
 from __future__ import annotations
@@ -156,6 +157,7 @@ def paper_section() -> str:
         lines += [f"Campaign Pareto front: {par['pareto_size']} points; "
                   f"eval cache: {par['cache']['hits']} hits / "
                   f"{par['cache']['misses']} misses.", ""]
+        lines += _campaign_metrics(par)
     eng = [r for r in rows if r.get("table") == "engine"]
     if eng:
         r = eng[-1]
@@ -277,6 +279,67 @@ def paper_section() -> str:
     return "\n".join(lines)
 
 
+def _fmt_metric(v) -> str:
+    if isinstance(v, dict):  # histogram summary {count, sum, min, max, mean}
+        return (f"n={v.get('count', 0)} mean={v.get('mean', 0):.3g} "
+                f"[{v.get('min', 0):.3g}, {v.get('max', 0):.3g}]")
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _campaign_metrics(par: dict) -> list[str]:
+    """Selected registry metrics from the Fig. 9 campaign's pareto row."""
+    metrics = par.get("metrics") or {}
+    if not metrics:
+        return []
+    keep = [k for k in sorted(metrics)
+            if k.startswith(("eval_cache.", "pareto.", "campaign."))
+            or k.endswith((".best_cost", ".legal_fraction"))
+            or k.startswith("tuner.bucket_fill")
+            or k.startswith("scheduler.bucket_fill")]
+    lines = ["Campaign telemetry (metrics registry snapshot):", "",
+             "| metric | value |", "|---|---|"]
+    for k in keep:
+        lines.append(f"| `{k}` | {_fmt_metric(metrics[k])} |")
+    progs = par.get("programs") or {}
+    if progs:
+        lines.append(f"| `xla.programs` (total) | {sum(progs.values())} |")
+    lines.append("")
+    return lines
+
+
+def bench_section() -> str:
+    """§Perf-trajectory: the named gates in each BENCH_*.json artifact."""
+    lines = ["## §Perf-trajectory", ""]
+    files = sorted((ROOT / "experiments").glob("BENCH_*.json"))
+    if not files:
+        return "\n".join(lines + [
+            "(no BENCH artifacts yet — run `python -m benchmarks.run`)"])
+    lines += [
+        "Machine-readable perf artifacts written by `benchmarks.run` and "
+        "gated in CI by `benchmarks.bench_gate` (a gate regresses when it "
+        "falls below `baseline * (1 - tolerance)`).", "",
+        "| artifact | mode | gate | value | tolerance |", "|---|---|---|---|---|"]
+    for f in files:
+        try:
+            b = json.loads(f.read_text())
+        except json.JSONDecodeError:
+            lines.append(f"| {f.name} | ? | (unreadable) | | |")
+            continue
+        gates = b.get("gates", {})
+        for i, (name, g) in enumerate(sorted(gates.items())):
+            tag = f.name if i == 0 else ""
+            mode = b.get("mode", "?") if i == 0 else ""
+            lines.append(f"| {tag} | {mode} | `{name}` | "
+                         f"{g['value']:.2f} | {g.get('tolerance', 0):.0%} |")
+        secs = b.get("sections_s", {})
+        if secs:
+            total = sum(secs.values())
+            lines.append(f"| | | _wall_ | {total:.0f}s | |")
+    return "\n".join(lines + [""])
+
+
 def perf_section() -> str:
     lines = ["## §Perf", ""]
     if not PERF_DIR.exists():
@@ -302,6 +365,8 @@ def build() -> str:
         roofline_section(cells),
         "",
         paper_section(),
+        "",
+        bench_section(),
         "",
         perf_section(),
     ]

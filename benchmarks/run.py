@@ -3,8 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--full] [--skip fig9,...]
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract,
-persists raw rows to experiments/paper_benchmarks.json, and regenerates
-EXPERIMENTS.md via benchmarks.report.
+persists raw rows to experiments/paper_benchmarks.json, writes the
+perf-trajectory artifact experiments/BENCH_6.json (consumed by
+``benchmarks.bench_gate`` in CI to detect throughput regressions), and
+regenerates EXPERIMENTS.md via benchmarks.report.
 """
 
 from __future__ import annotations
@@ -23,22 +25,39 @@ from benchmarks import (engine_throughput, fig9_dse, fig10_mapper, fig11_ddam,
                         scheduler_throughput, tuner_throughput)
 
 
+BENCH_ID = 6
+BENCH_SCHEMA = "nicepim-bench/1"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size Fig.9/11 workloads too")
-    ap.add_argument("--fast", action="store_true",
+    ap.add_argument("--fast", "--smoke", action="store_true", dest="fast",
                     help="reduced Fig.10 nets (CI); default runs the "
                          "paper-scale networks")
     ap.add_argument("--skip", default="", help="comma list: fig9,fig10,...")
     ap.add_argument("--fig9-iters", type=int, default=20)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome-trace of the Fig. 9 campaign here")
     args = ap.parse_args()
     skip = set(filter(None, args.skip.split(",")))
 
     all_rows: list[dict] = []
+    sections_s: dict[str, float] = {}
+    emitted: list[dict] = []
+    gates: dict[str, dict] = {}
+    # smoke runs on loaded CI workers jitter far more than dedicated
+    # full runs, so the regression band is wider there
+    tol = 0.40 if args.fast else 0.25
+
+    def gate(name: str, value: float):
+        gates[name] = {"value": float(value), "tolerance": tol,
+                       "higher_is_better": True}
 
     def emit(name: str, us: float, derived: str):
         print(f"{name},{us:.1f},{derived}", flush=True)
+        emitted.append({"name": name, "us_per_call": us, "derived": derived})
 
     if "fig12" not in skip:
         t0 = time.time()
@@ -47,7 +66,8 @@ def main() -> None:
         for r in rows:
             emit(f"fig12_{r['array']}_{r['method']}",
                  r["latency_us"], f"norm={r['norm_latency']:.3f}")
-        print(f"# fig12 took {time.time() - t0:.1f}s", flush=True)
+        sections_s["fig12"] = time.time() - t0
+        print(f"# fig12 took {sections_s['fig12']:.1f}s", flush=True)
 
     if "scheduler" not in skip:
         t0 = time.time()
@@ -64,7 +84,9 @@ def main() -> None:
         emit("scheduler_batched", 1e6 * r["scan_s"] / r["n_solves"],
              f"solves_per_s={r['scan_solves_per_s']:.1f} "
              f"speedup={r['speedup']:.1f}x")
-        print(f"# scheduler took {time.time() - t0:.1f}s", flush=True)
+        gate("scheduler_batched_speedup", r["speedup"])
+        sections_s["scheduler"] = time.time() - t0
+        print(f"# scheduler took {sections_s['scheduler']:.1f}s", flush=True)
 
     if "fig10" not in skip:
         t0 = time.time()
@@ -81,7 +103,8 @@ def main() -> None:
                      r["mapper_latency_ms"] * 1e3,
                      f"dLat={-r['latency_reduction']:.1%} "
                      f"dE={-r['energy_reduction']:.1%}")
-        print(f"# fig10 took {time.time() - t0:.1f}s", flush=True)
+        sections_s["fig10"] = time.time() - t0
+        print(f"# fig10 took {sections_s['fig10']:.1f}s", flush=True)
 
     if "fig11" not in skip:
         t0 = time.time()
@@ -91,7 +114,8 @@ def main() -> None:
             emit(f"fig11_{r['net']}", r["mapper_latency_ms"] * 1e3,
                  f"thr_gain={r['throughput_gain']:+.1%} "
                  f"lat_ratio={r['latency_ratio']:.1f}x")
-        print(f"# fig11 took {time.time() - t0:.1f}s", flush=True)
+        sections_s["fig11"] = time.time() - t0
+        print(f"# fig11 took {sections_s['fig11']:.1f}s", flush=True)
 
     if "mapper" not in skip:
         t0 = time.time()
@@ -108,6 +132,7 @@ def main() -> None:
              f"cands_per_s={r['batched_cands_per_s']:.1f} "
              f"speedup={r['speedup']:.1f}x "
              f"map_speedup={r['map_speedup']:.2f}x")
+        gate("mapper_batched_speedup", r["speedup"])
         # multi-config mode: map a whole proposal batch per map_many call;
         # --fast keeps the tiny net and the soft smoke threshold, the full
         # run enforces the >=3x end-to-end contract at batch >= 8
@@ -122,7 +147,9 @@ def main() -> None:
              f"maps_per_s={r['maps_per_s_batched']:.2f} "
              f"speedup={r['speedup']:.2f}x "
              f"vs_batched_seq={r['speedup_vs_batched_seq']:.2f}x")
-        print(f"# mapper took {time.time() - t0:.1f}s", flush=True)
+        gate("mapper_multi_speedup", r["speedup"])
+        sections_s["mapper"] = time.time() - t0
+        print(f"# mapper took {sections_s['mapper']:.1f}s", flush=True)
 
     if "tuner" not in skip:
         t0 = time.time()
@@ -138,7 +165,9 @@ def main() -> None:
              f"iters_per_s={r['engine_iters_per_s']:.2f} "
              f"speedup={r['speedup']:.1f}x "
              f"programs={sum(r['programs'].values())}")
-        print(f"# tuner took {time.time() - t0:.1f}s", flush=True)
+        gate("tuner_engine_speedup", r["speedup"])
+        sections_s["tuner"] = time.time() - t0
+        print(f"# tuner took {sections_s['tuner']:.1f}s", flush=True)
 
     if "engine" not in skip:
         t0 = time.time()
@@ -152,11 +181,14 @@ def main() -> None:
         emit("engine_batched", 1e6 / r["batched_configs_per_s"],
              f"configs_per_s={r['batched_configs_per_s']:.1f} "
              f"speedup={r['speedup']:.1f}x")
-        print(f"# engine took {time.time() - t0:.1f}s", flush=True)
+        gate("engine_batched_speedup", r["speedup"])
+        sections_s["engine"] = time.time() - t0
+        print(f"# engine took {sections_s['engine']:.1f}s", flush=True)
 
     if "fig9" not in skip:
         t0 = time.time()
-        rows = fig9_dse.run(iterations=args.fig9_iters, tiny=not args.full)
+        rows = fig9_dse.run(iterations=args.fig9_iters, tiny=not args.full,
+                            trace=args.trace)
         all_rows += rows
         curves = [r for r in rows if "quality_final" in r]
         base = next((r["quality_final"] for r in curves
@@ -166,12 +198,18 @@ def main() -> None:
                  r["solve_s"] * 1e6 / max(1, r["iterations"]),
                  f"quality={r['quality_final']:.3e} "
                  f"vs_random={r['quality_final'] / max(base, 1e-30):.2f}x")
+        nice = next((r for r in curves if r["strategy"] == "nicepim"), None)
+        if nice is not None:
+            gate("fig9_nicepim_vs_random",
+                 nice["quality_final"] / max(base, 1e-30))
         pareto = next((r for r in rows if r["strategy"] == "pareto"), None)
         if pareto:
             emit("fig9_pareto", 0.0,
                  f"front={pareto['pareto_size']} "
-                 f"cache_hits={pareto['cache']['hits']}")
-        print(f"# fig9 took {time.time() - t0:.1f}s", flush=True)
+                 f"cache_hits={pareto['cache']['hits']} "
+                 f"programs={sum(pareto['programs'].values())}")
+        sections_s["fig9"] = time.time() - t0
+        print(f"# fig9 took {sections_s['fig9']:.1f}s", flush=True)
 
     out = ROOT / "experiments" / "paper_benchmarks.json"
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -185,6 +223,19 @@ def main() -> None:
                 if any(str(r.get("table", "")).startswith(s) for s in skip)]
         merged = kept + all_rows
     out.write_text(json.dumps(merged, indent=1, default=str))
+
+    bench = {
+        "schema": BENCH_SCHEMA,
+        "bench_id": BENCH_ID,
+        "mode": "full" if args.full else ("smoke" if args.fast else "default"),
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "sections_s": sections_s,
+        "benchmarks": emitted,
+        "gates": gates,
+    }
+    bench_path = ROOT / "experiments" / f"BENCH_{BENCH_ID}.json"
+    bench_path.write_text(json.dumps(bench, indent=1) + "\n")
+    print(f"# wrote {bench_path}", flush=True)
 
     from benchmarks import report
     report.main()

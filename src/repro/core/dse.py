@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from .hardware import DEFAULT_CONSTRAINTS, HwConfig, PimConstraints
 from .ir import DnnGraph
 from .mapper import PimMapper, clear_mapper_caches, evaluate_mapping
+from ..obs import metrics, trace
 
 
 @dataclass
@@ -139,20 +140,27 @@ class WorkloadEvaluator:
         return hw_digest(cfg) + ":" + self._wl_digest
 
     def __call__(self, cfg: HwConfig) -> tuple[float, dict, dict]:
+        with trace.span("evaluate", configs=1) as sp:
+            return self._eval_one(cfg, sp)
+
+    def _eval_one(self, cfg: HwConfig, sp: dict) -> tuple[float, dict, dict]:
         # the constraints are part of the point's identity: two configs with
         # the same variable tuple but different substrate constants (e.g. a
         # different cap_bank_bytes) must never alias one cache entry
         key = (cfg.as_tuple(), cfg.cons)
         if key in self._cache:
+            sp["cache"] = "local_hit"
             return self._cache[key]
         ckey = None
         if self.cache is not None:
             ckey = self._content_key(cfg)
             hit = self.cache.get(ckey)
             if hit is not None:
+                sp["cache"] = "content_hit"
                 out = (hit[0], dict(hit[1]), dict(hit[2]))
                 self._cache[key] = out
                 return out
+        sp["cache"] = "miss"
         self.evaluations += 1
         mapper = PimMapper(cfg, **self.mapper_kwargs)
         lats: dict[str, float] = {}
@@ -199,6 +207,11 @@ class WorkloadEvaluator:
         memos are dropped once after the whole batch (clearing inside it
         would defeat the cross-config batching).
         """
+        with trace.span("evaluate", configs=len(cfgs)) as sp:
+            return self._eval_batch(cfgs, sp)
+
+    def _eval_batch(self, cfgs: list[HwConfig], sp: dict
+                    ) -> list[tuple[float, dict, dict]]:
         out: list = [None] * len(cfgs)
         todo: dict[tuple, list[int]] = {}    # cfg tuple -> batch positions
         cfg_of: dict[tuple, HwConfig] = {}
@@ -216,6 +229,8 @@ class WorkloadEvaluator:
                     continue
             todo.setdefault(key, []).append(i)
             cfg_of.setdefault(key, cfg)
+        sp["evaluated"] = len(todo)
+        sp["cached"] = len(cfgs) - sum(len(v) for v in todo.values())
         if not todo:
             return out
         self.evaluations += len(todo)
@@ -262,7 +277,8 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
             propose_k: int = 8,
             cons: PimConstraints = DEFAULT_CONSTRAINTS,
             verbose: bool = False, pareto=None, start_iteration: int = 0,
-            on_iteration=None, evaluate_all_legal: bool = False) -> DseResult:
+            on_iteration=None, evaluate_all_legal: bool = False,
+            tracer=None) -> DseResult:
     """One strategy's DSE loop (Fig. 7).
 
     The whole proposal batch is area-checked in one vectorized call
@@ -280,14 +296,41 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
     observations to ``strategy.observe`` and the Pareto front instead of at
     most one mapped point, widening the suggestion model's dataset per
     refit at far less than ``propose_k`` times the mapping cost.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) is installed as the active
+    tracer for the run; when one is already active (a campaign installed
+    it) every iteration's ``propose``/``evaluate``/``fit`` phases emit
+    spans regardless.  Per-iteration best-cost and legal-fraction metrics
+    land in the process registry under ``dse.<strategy>``.
     """
+    from contextlib import nullcontext
     from ..engine.batch_cost import batch_area_mm2
+    sname = getattr(strategy, "name", type(strategy).__name__.lower())
+    best_gauge = metrics.METRICS.gauge(f"dse.{sname}.best_cost")
+    legal_hist = metrics.METRICS.histogram(f"dse.{sname}.legal_fraction")
     obs: list[Observation] = []
-    for it in range(start_iteration, iterations):
+    ctx = trace.activate(tracer) if tracer is not None else nullcontext()
+    with ctx:
+        for it in range(start_iteration, iterations):
+            obs.extend(_dse_iteration(
+                strategy, evaluator, it, propose_k, cons, verbose, pareto,
+                on_iteration, evaluate_all_legal, sname, best_gauge,
+                legal_hist, batch_area_mm2))
+    return DseResult(obs)
+
+
+def _dse_iteration(strategy, evaluator, it, propose_k, cons, verbose,
+                   pareto, on_iteration, evaluate_all_legal, sname,
+                   best_gauge, legal_hist, batch_area_mm2
+                   ) -> list[Observation]:
+    with trace.span("iteration", strategy=sname, it=it):
         t0 = time.time()
         it_obs: list[Observation] = []
-        props = strategy.propose(propose_k)
+        with trace.span("propose", strategy=sname, k=propose_k):
+            props = strategy.propose(propose_k)
         areas = batch_area_mm2(props)
+        legal_n = sum(1 for a in areas
+                      if float(a) <= cons.area_budget_mm2)
         evaluated: list[tuple[HwConfig, float, tuple]] = []
         if evaluate_all_legal:
             # every legal proposal is mapped, batched across configs
@@ -331,8 +374,19 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
                     pareto.offer(ParetoPoint(sum(lats.values()),
                                              sum(ens.values()), area,
                                              payload=list(cfg.as_tuple())))
-        fit_info = strategy.fit() if evaluated else None
-        obs.extend(it_obs)
+        if evaluated:
+            with trace.span("fit", strategy=sname):
+                fit_info = strategy.fit()
+        else:
+            fit_info = None
+        # per-iteration search-progress metrics (read back by campaigns
+        # and the fig9/report observability sections)
+        metrics.METRICS.counter(f"dse.{sname}.iterations").inc()
+        metrics.METRICS.counter(f"dse.{sname}.observations").inc(len(it_obs))
+        legal_hist.observe(legal_n / max(1, len(props)))
+        for o in it_obs:
+            if o.cost is not None and not math.isinf(o.cost):
+                best_gauge.min(o.cost)
         if on_iteration is not None:
             on_iteration(it, it_obs)
         if verbose and evaluated:
@@ -345,4 +399,4 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
                   f"area={area:.1f} "
                   f"cost={cost if not math.isinf(cost) else 'inf'} "
                   f"({time.time() - t0:.1f}s){fit_str}")
-    return DseResult(obs)
+    return it_obs

@@ -37,6 +37,7 @@ from .partition import (LM, comm_batch_geometry, comm_estimate,
                         wr_candidates, LOOPS)
 from .regions import SM, Region, gen_sm_candidates
 from .scheduler import solve_ilp_ls, SOLVERS
+from ..obs import trace
 
 INF = float("inf")
 
@@ -194,6 +195,24 @@ def clear_mapper_caches() -> None:
     _COMM_GEOM.clear()
     _sharing_latency.cache_clear()
     part_layer_cost.cache_clear()
+
+
+def mapper_cache_stats() -> dict[str, int]:
+    """Current size of every mapper-level memo (observability snapshot).
+
+    Keys mirror the module-level cache names; campaigns fold these into
+    their metrics snapshot so memo growth is visible without a debugger.
+    """
+    return {
+        "layer_candidates": _layer_candidates.cache_info().currsize,
+        "batch_candidates": len(_BATCH_CANDS._d),
+        "node_latencies": len(_NODE_LAT._d),
+        "candidate_structs": len(_CAND_STRUCT._d),
+        "candidate_bases": len(_CAND_BASE._d),
+        "comm_geometries": len(_COMM_GEOM._d),
+        "schedules": len(_SCHED_MEMO._d),
+        "part_layer_costs": part_layer_cost.cache_info().currsize,
+    }
 
 
 def _batched_node_latencies(hw: HwConfig,
@@ -668,7 +687,10 @@ class PimMapper:
 
     # ---- Algorithm 1 ----------------------------------------------------------
     def map(self, graph: DnnGraph) -> Mapping:
-        hw = self.hw
+        with trace.span("map", graph=graph.name, configs=1):
+            return self._map(graph)
+
+    def _map(self, graph: DnnGraph) -> Mapping:
         segments = graph.segments()
         dls = self._init_dls(graph)
         mapping: Mapping | None = None
@@ -688,6 +710,8 @@ class PimMapper:
                          dl_max_group=self.dl_max_group, backend=self.backend,
                          dp_reduce=self.dp_reduce)
 
+    @trace.traced("map_many", argspec=lambda self, graph, cfgs, **kw:
+                  {"graph": graph.name, "configs": len(cfgs)})
     def map_many(self, graph: DnnGraph, cfgs: Sequence[HwConfig],
                  *, on_infeasible: str = "raise") -> list[Mapping | None]:
         """Map ``graph`` under several hardware configs, batched across them.

@@ -42,6 +42,7 @@ from ..core.hardware import HwConfig
 from ..core.ir import Layer
 from ..core.layout import DataLayout
 from ..kernels import dse_eval
+from ..obs.trace import traced
 
 INF = float("inf")
 
@@ -486,6 +487,8 @@ class BatchCostResult:
         )
 
 
+@traced("batch_cost", argspec=lambda configs, specs, **kw:
+        {"configs": len(configs), "specs": len(specs)})
 def batch_part_cost(configs: Sequence[HwConfig],
                     specs: Sequence[PartSpec | tuple],
                     *, chunk: int = 32, spec_chunk: int | None = None,
@@ -602,6 +605,8 @@ def _finalize_result(res: dict, configs, specs, cons) -> BatchCostResult:
     )
 
 
+@traced("batch_cost", argspec=lambda configs, specs, **kw:
+        {"pairs": len(specs), "mode": "paired"})
 def batch_part_cost_paired(configs: Sequence[HwConfig],
                            specs: Sequence[PartSpec | tuple],
                            *, spec_chunk: int = 1024,

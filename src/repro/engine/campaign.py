@@ -22,7 +22,9 @@ import json
 import os
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Sequence
@@ -31,6 +33,9 @@ from ..core.dse import DseResult, Observation, WorkloadEvaluator, run_dse
 from ..core.hardware import DEFAULT_CONSTRAINTS, HwConfig, PimConstraints
 from ..core.ir import DnnGraph
 from ..core.surrogates import make_strategy
+from ..obs import metrics as obs_metrics
+from ..obs import trace
+from ..obs.metrics import collect_engine_metrics
 from .cache import EvalCache, _sha, cons_digest, workloads_digest
 from .pareto import ParetoFront, ParetoPoint
 
@@ -51,11 +56,23 @@ def _obs_from_json(d: dict, cons: PimConstraints) -> Observation:
 
 @dataclass
 class CampaignResult:
+    """Outcome of a campaign run.
+
+    ``timings_s`` is per-strategy *thread CPU* time (GIL-fair across the
+    concurrent strategies); ``wall_s`` is per-strategy wall-clock time,
+    which additionally counts time blocked on XLA dispatch and on the
+    other strategies.  ``metrics`` is a flat snapshot of the metrics
+    registry taken at the end of the run (cache hit rates, compiled
+    program counts, bucket occupancy, per-strategy best cost, ...).
+    """
+
     results: dict[str, DseResult]
     pareto: ParetoFront
     cache_stats: dict
     resumed: list[str] = field(default_factory=list)
     timings_s: dict[str, float] = field(default_factory=dict)
+    wall_s: dict[str, float] = field(default_factory=dict)
+    metrics: dict = field(default_factory=dict)
 
     def best(self) -> Observation:
         cands = [o for r in self.results.values() for o in r.observations
@@ -79,6 +96,8 @@ class Campaign:
                  checkpoint: str | Path | None = None,
                  max_workers: int | None = None,
                  cache: EvalCache | None = None,
+                 tracer: trace.Tracer | None = None,
+                 metrics: obs_metrics.MetricsRegistry | None = None,
                  verbose: bool = False):
         self.workloads = list(workloads)
         self.strategies = list(strategies)
@@ -99,6 +118,8 @@ class Campaign:
         self.checkpoint = Path(checkpoint) if checkpoint else None
         self.max_workers = max_workers or min(4, max(1, len(self.strategies)))
         self.cache = cache if cache is not None else EvalCache()
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else obs_metrics.METRICS
         self.verbose = verbose
         self.pareto = ParetoFront()
         self._obs: dict[str, list[Observation]] = {}
@@ -124,32 +145,61 @@ class Campaign:
             "strategy_kwargs": repr(sorted(self.strategy_kwargs.items())),
         })
 
+    def _discard_checkpoint(self, reason: str, detail: str) -> None:
+        """Record that a checkpoint exists but cannot be resumed from.
+
+        ``reason`` is one of ``"unreadable"`` (truncated / corrupt JSON, or
+        an I/O error) and ``"fingerprint_mismatch"`` (a valid checkpoint
+        from a *different* campaign: other workloads, constraints, seed or
+        iteration budget).  Silent discards cost users entire re-runs, so
+        this is deliberately loud: a RuntimeWarning, a
+        ``campaign.checkpoint_discarded`` counter (plus a per-reason one)
+        and an instant trace event.
+        """
+        warnings.warn(
+            f"discarding campaign checkpoint {self.checkpoint} "
+            f"({reason}): {detail}; starting fresh",
+            RuntimeWarning, stacklevel=3)
+        self.metrics.counter("campaign.checkpoint_discarded").inc()
+        self.metrics.counter(f"campaign.checkpoint_discarded.{reason}").inc()
+        trace.instant("checkpoint_discarded", cat="campaign",
+                      reason=reason, path=str(self.checkpoint))
+
     def _load_checkpoint(self) -> dict[str, list[Observation]]:
         if not self.checkpoint or not self.checkpoint.exists():
             return {}
         try:
             state = json.loads(self.checkpoint.read_text())
-        except (json.JSONDecodeError, OSError):
-            return {}  # unreadable/truncated checkpoint: start fresh
+        except (json.JSONDecodeError, OSError) as e:
+            self._discard_checkpoint("unreadable", str(e))
+            return {}
         if state.get("fingerprint") != self._fingerprint():
-            return {}  # different campaign (workloads/params/seed): start over
+            self._discard_checkpoint(
+                "fingerprint_mismatch",
+                "checkpoint was written by a campaign with different "
+                "workloads, constraints or parameters")
+            return {}
         return {name: [_obs_from_json(d, self.cons) for d in rows]
                 for name, rows in state.get("strategies", {}).items()}
 
     def _write_checkpoint(self) -> None:
         if not self.checkpoint:
             return
-        with self._lock:
-            state = {
-                "fingerprint": self._fingerprint(),
-                "iterations": self.iterations, "seed": self.seed,
-                "strategies": {n: [_obs_to_json(o) for o in obs]
-                               for n, obs in self._obs.items()},
-                "pareto": self.pareto.to_jsonable(),
-            }
-            tmp = self.checkpoint.with_suffix(".tmp")
-            tmp.write_text(json.dumps(state))
-            os.replace(tmp, self.checkpoint)
+        with trace.span("checkpoint", cat="campaign") as sp:
+            with self._lock:
+                state = {
+                    "fingerprint": self._fingerprint(),
+                    "iterations": self.iterations, "seed": self.seed,
+                    "strategies": {n: [_obs_to_json(o) for o in obs]
+                                   for n, obs in self._obs.items()},
+                    "pareto": self.pareto.to_jsonable(),
+                    "metrics": self.metrics.snapshot(),
+                }
+                tmp = self.checkpoint.with_suffix(".tmp")
+                tmp.write_text(json.dumps(state))
+                os.replace(tmp, self.checkpoint)
+                sp["observations"] = sum(
+                    len(obs) for obs in self._obs.values())
 
     # -- the run -------------------------------------------------------------
     def _completed_iters(self, obs: list[Observation]) -> int:
@@ -167,16 +217,31 @@ class Campaign:
 
     def _run_strategy(self, name: str, evaluator: WorkloadEvaluator,
                       saved: list[Observation]
-                      ) -> tuple[str, DseResult, bool, float]:
+                      ) -> tuple[str, DseResult, bool, float, float]:
         # thread CPU time: strategies run concurrently under the GIL, so
-        # wall time would charge each strategy for the others' bytecode
-        t0 = time.thread_time()
+        # wall time would charge each strategy for the others' bytecode.
+        # Wall time is still recorded alongside — it is what the user
+        # waits for, and the gap to CPU time shows blocking on XLA
+        # dispatch (which releases the GIL) and on sibling strategies.
+        t0_cpu = time.thread_time()
+        t0_wall = time.perf_counter()
+        trace.set_thread_name(f"strategy:{name}")
+        with trace.span("strategy", cat="campaign", strategy=name) as sp:
+            res, resumed = self._run_strategy_body(name, evaluator, saved)
+            sp["observations"] = len(res.observations)
+            sp["resumed"] = resumed
+        return (name, res, resumed,
+                time.thread_time() - t0_cpu, time.perf_counter() - t0_wall)
+
+    def _run_strategy_body(self, name: str, evaluator: WorkloadEvaluator,
+                           saved: list[Observation]
+                           ) -> tuple[DseResult, bool]:
         start = self._completed_iters(saved)
         if start >= self.iterations:
             with self._lock:
                 self._obs[name] = saved
             self._offer_pareto(saved)
-            return name, DseResult(saved), True, time.thread_time() - t0
+            return DseResult(saved), True
         strat = make_strategy(name, cons=self.cons, seed=self.seed,
                               n_sample=self.n_sample, **self.strategy_kwargs)
         resumed = bool(saved)
@@ -200,32 +265,41 @@ class Campaign:
                       verbose=self.verbose, start_iteration=start,
                       on_iteration=on_iteration,
                       evaluate_all_legal=self.evaluate_all_legal)
-        return (name, DseResult(saved + res.observations), resumed,
-                time.thread_time() - t0)
+        return DseResult(saved + res.observations), resumed
 
     def run(self) -> CampaignResult:
-        saved = self._load_checkpoint()
-        # campaigns walk many hardware configs: drop the hw-keyed mapper
-        # memos after each one so memory stays flat over long runs (a clear
-        # only costs re-derivation if another strategy is mid-evaluation)
-        kwargs = dict(self.evaluator_kwargs)
-        kwargs.setdefault("clear_caches_between_configs", True)
-        evaluator = WorkloadEvaluator(self.workloads, cache=self.cache,
-                                      **kwargs)
-        results: dict[str, DseResult] = {}
-        resumed: list[str] = []
-        timings: dict[str, float] = {}
-        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
-            futs = [pool.submit(self._run_strategy, name, evaluator,
-                                saved.get(name, []))
-                    for name in self.strategies]
-            for fut in futs:
-                name, res, was_resumed, elapsed = fut.result()
-                results[name] = res
-                timings[name] = elapsed
-                if was_resumed:
-                    resumed.append(name)
-        self._write_checkpoint()
+        ctx = trace.activate(self.tracer) if self.tracer is not None \
+            else nullcontext()
+        with ctx:
+            trace.set_thread_name("campaign")
+            saved = self._load_checkpoint()
+            # campaigns walk many hardware configs: drop the hw-keyed mapper
+            # memos after each one so memory stays flat over long runs (a
+            # clear only costs re-derivation if another strategy is
+            # mid-evaluation)
+            kwargs = dict(self.evaluator_kwargs)
+            kwargs.setdefault("clear_caches_between_configs", True)
+            evaluator = WorkloadEvaluator(self.workloads, cache=self.cache,
+                                          **kwargs)
+            results: dict[str, DseResult] = {}
+            resumed: list[str] = []
+            timings: dict[str, float] = {}
+            walls: dict[str, float] = {}
+            with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+                futs = [pool.submit(self._run_strategy, name, evaluator,
+                                    saved.get(name, []))
+                        for name in self.strategies]
+                for fut in futs:
+                    name, res, was_resumed, cpu_s, wall_s = fut.result()
+                    results[name] = res
+                    timings[name] = cpu_s
+                    walls[name] = wall_s
+                    if was_resumed:
+                        resumed.append(name)
+            snapshot = collect_engine_metrics(
+                self.metrics, cache=self.cache, pareto=self.pareto)
+            self._write_checkpoint()
         return CampaignResult(results=results, pareto=self.pareto,
                               cache_stats=dict(self.cache.stats),
-                              resumed=resumed, timings_s=timings)
+                              resumed=resumed, timings_s=timings,
+                              wall_s=walls, metrics=snapshot)

@@ -50,6 +50,7 @@ from jax.experimental import enable_x64
 from ..core.noc import MeshNoc
 from ..core.scheduler import (ScheduleResult, _all_transfers, _finish,
                               _initial_cycles, _solve_exact)
+from ..obs import metrics, trace
 from .tuner_train import pow2_bucket
 
 _USE_PALLAS = jax.default_backend() == "tpu"
@@ -339,6 +340,8 @@ def _run_bucket(setups: list[_Setup], *, rounds: int, moves_per_round: int,
     e = noc.n_links()
     rows = len(setups) * chains
     r_pad = pow2_bucket(rows, minimum=4)
+    metrics.METRICS.histogram("scheduler.bucket_fill").observe(rows / r_pad)
+    metrics.METRICS.counter("scheduler.padded_rows").inc(r_pad - rows)
     cycles0 = np.zeros((r_pad, s_pad, n_pad), dtype=np.int32)
     lens = np.zeros((r_pad, s_pad), dtype=np.int32)
     weights = np.zeros((r_pad, s_pad))
@@ -398,22 +401,32 @@ def schedule_many(problems, link_bw: float, freq: float,
     """
     use_pallas = _USE_PALLAS if use_pallas is None else use_pallas
     rounds = _rounds(iters, moves_per_round)
-    results: list[ScheduleResult | None] = [None] * len(problems)
-    buckets: dict[tuple, list[tuple[int, _Setup]]] = {}
-    for pi, (noc, sets, chunks) in enumerate(problems):
-        st = _setup_problem(noc, sets, chunks, rng=random.Random(seed),
-                            restarts=restarts, iters=iters,
-                            moves_per_round=moves_per_round)
-        results[pi] = _resolve_host(st, link_bw, freq, pj_per_bit_hop)
-        if results[pi] is None:
-            buckets.setdefault(_bucket_key(st), []).append((pi, st))
-    for (_, s_pad, n_pad), entries in buckets.items():
-        chains = _run_bucket([st for _, st in entries], rounds=rounds,
-                             moves_per_round=moves_per_round, s_pad=s_pad,
-                             n_pad=n_pad, use_pallas=use_pallas)
-        for (pi, st), per_chain in zip(entries, chains):
-            results[pi] = _finish_chains(st, per_chain, link_bw, freq,
-                                         pj_per_bit_hop)
+    with trace.span("schedule_many", cat="engine",
+                    problems=len(problems)) as sp:
+        results: list[ScheduleResult | None] = [None] * len(problems)
+        buckets: dict[tuple, list[tuple[int, _Setup]]] = {}
+        for pi, (noc, sets, chunks) in enumerate(problems):
+            st = _setup_problem(noc, sets, chunks, rng=random.Random(seed),
+                                restarts=restarts, iters=iters,
+                                moves_per_round=moves_per_round)
+            results[pi] = _resolve_host(st, link_bw, freq, pj_per_bit_hop)
+            if results[pi] is None:
+                buckets.setdefault(_bucket_key(st), []).append((pi, st))
+        for (mesh, s_pad, n_pad), entries in buckets.items():
+            with trace.span("schedule", cat="engine",
+                            bucket=f"{mesh}:{s_pad}x{n_pad}",
+                            problems=len(entries)):
+                chains = _run_bucket([st for _, st in entries],
+                                     rounds=rounds,
+                                     moves_per_round=moves_per_round,
+                                     s_pad=s_pad, n_pad=n_pad,
+                                     use_pallas=use_pallas)
+            for (pi, st), per_chain in zip(entries, chains):
+                results[pi] = _finish_chains(st, per_chain, link_bw, freq,
+                                             pj_per_bit_hop)
+        sp["buckets"] = len(buckets)
+        sp["host_resolved"] = len(problems) - sum(
+            len(v) for v in buckets.values())
     return results
 
 

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dse_eval
+from ..obs import metrics, trace
 from ..training.optim import Adam
 
 MIN_BUCKET = 8
@@ -199,19 +200,49 @@ def _scan_fit(loss_fn, opt: Adam, params, opt_state, args, steps: int):
 
 
 @partial(jax.jit, static_argnames=("opt", "steps"))
+def _fit_filter_jit(params, opt_state, x, y, mask, *, opt: Adam, steps: int):
+    return _scan_fit(masked_mse, opt, params, opt_state, (x, y, mask), steps)
+
+
+@partial(jax.jit, static_argnames=("opt", "steps"))
+def _fit_dkl_jit(params, opt_state, x, y, mask, *, opt: Adam, steps: int):
+    return _scan_fit(masked_nlml, opt, params, opt_state, (x, y, mask), steps)
+
+
+def _record_bucket(kind: str, y, mask) -> None:
+    """Pow2-bucket occupancy + padding-waste metrics for one fit dispatch.
+
+    ``mask`` arrives concrete (the host built it in ``pad_dataset``), so
+    summing it never blocks on an in-flight computation.
+    """
+    bucket = int(y.shape[0])
+    valid = int(np.asarray(mask).sum())
+    metrics.METRICS.gauge(f"tuner.bucket.{kind}").set(bucket)
+    metrics.METRICS.histogram(f"tuner.bucket_fill.{kind}").observe(
+        valid / bucket if bucket else 0.0)
+    metrics.METRICS.counter(f"tuner.padded_rows.{kind}").inc(bucket - valid)
+
+
 def fit_filter(params, opt_state, x, y, mask, *, opt: Adam, steps: int):
     """Whole filter-MLP Adam trajectory in one jitted scan.
 
     Returns ``(params, opt_state, losses [steps])``; matches ``steps``
     sequential ``core.tuner._filter_step`` calls on the unpadded data.
     """
-    return _scan_fit(masked_mse, opt, params, opt_state, (x, y, mask), steps)
+    _record_bucket("filter", y, mask)
+    with trace.span("fit_filter", cat="engine", bucket=int(y.shape[0]),
+                    steps=int(steps)):
+        return _fit_filter_jit(params, opt_state, x, y, mask,
+                               opt=opt, steps=steps)
 
 
-@partial(jax.jit, static_argnames=("opt", "steps"))
 def fit_dkl(params, opt_state, x, y, mask, *, opt: Adam, steps: int):
     """Whole DKL (MLP + GP hyperparameter) trajectory in one jitted scan."""
-    return _scan_fit(masked_nlml, opt, params, opt_state, (x, y, mask), steps)
+    _record_bucket("dkl", y, mask)
+    with trace.span("fit_dkl", cat="engine", bucket=int(y.shape[0]),
+                    steps=int(steps)):
+        return _fit_dkl_jit(params, opt_state, x, y, mask,
+                            opt=opt, steps=steps)
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +285,16 @@ def dkl_predict(params, xt, yt, mask, xq):
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))
+def _score_candidates_jit(params, xt, yt, mask, xq, area_ok, beta, *,
+                          use_pallas: bool = False):
+    ls2, sf2, sn2 = kernel_scalars(params)
+    zt = dkl_features(params, xt, mask)
+    zq = dkl_features(params, xq)
+    alpha, kinv = _posterior_state(zt, yt, mask, ls2, sf2, sn2)
+    lcb = _lcb(zq, zt, alpha, kinv, mask, ls2, sf2, beta, use_pallas)
+    return jnp.where(area_ok, lcb, jnp.inf)
+
+
 def score_candidates(params, xt, yt, mask, xq, area_ok, beta, *,
                      use_pallas: bool = False):
     """Fused DKL propose: one dispatch over the whole candidate batch.
@@ -264,25 +305,16 @@ def score_candidates(params, xt, yt, mask, xq, area_ok, beta, *,
     ``area_ok=False`` (the filter model's in-array area mask) score ``+inf``
     so they sort last without any Python-side list filtering.
     """
-    ls2, sf2, sn2 = kernel_scalars(params)
-    zt = dkl_features(params, xt, mask)
-    zq = dkl_features(params, xq)
-    alpha, kinv = _posterior_state(zt, yt, mask, ls2, sf2, sn2)
-    lcb = _lcb(zq, zt, alpha, kinv, mask, ls2, sf2, beta, use_pallas)
-    return jnp.where(area_ok, lcb, jnp.inf)
+    with trace.span("score_candidates", cat="engine",
+                    bucket=int(yt.shape[0]), candidates=int(xq.shape[0])):
+        return _score_candidates_jit(params, xt, yt, mask, xq, area_ok,
+                                     beta, use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))
-def score_candidates_raw(xt, yt, mask, xq, area_ok, beta, *,
-                         noise_var: float = 1e-3,
-                         use_pallas: bool = False):
-    """Raw-parameter GP scoring (Fig. 9 ``gp`` ablation), same primitives.
-
-    Median-heuristic lengthscale on the raw normalized parameters, unit
-    signal variance, ``noise_var`` jitter, y standardized over the valid
-    rows — the exact model of ``GPSurrogate``'s numpy reference, expressed
-    on the shared masked-Cholesky / LCB primitives.
-    """
+def _score_candidates_raw_jit(xt, yt, mask, xq, area_ok, beta, *,
+                              noise_var: float = 1e-3,
+                              use_pallas: bool = False):
     d2 = jnp.sum((xt[:, None, :] - xt[None, :, :]) ** 2, -1)
     m2 = (mask[:, None] & mask[None, :]) & (d2 > 0)
     ls2 = jnp.nanmedian(jnp.where(m2, d2, jnp.nan))
@@ -299,15 +331,32 @@ def score_candidates_raw(xt, yt, mask, xq, area_ok, beta, *,
     return jnp.where(area_ok, lcb, jnp.inf)
 
 
+def score_candidates_raw(xt, yt, mask, xq, area_ok, beta, *,
+                         noise_var: float = 1e-3,
+                         use_pallas: bool = False):
+    """Raw-parameter GP scoring (Fig. 9 ``gp`` ablation), same primitives.
+
+    Median-heuristic lengthscale on the raw normalized parameters, unit
+    signal variance, ``noise_var`` jitter, y standardized over the valid
+    rows — the exact model of ``GPSurrogate``'s numpy reference, expressed
+    on the shared masked-Cholesky / LCB primitives.
+    """
+    with trace.span("score_candidates", cat="engine",
+                    bucket=int(yt.shape[0]), candidates=int(xq.shape[0])):
+        return _score_candidates_raw_jit(xt, yt, mask, xq, area_ok, beta,
+                                         noise_var=noise_var,
+                                         use_pallas=use_pallas)
+
+
 # ---------------------------------------------------------------------------
 # XLA program-count introspection (the O(log n) recompile contract)
 # ---------------------------------------------------------------------------
 
 _JITTED = {
-    "fit_filter": fit_filter,
-    "fit_dkl": fit_dkl,
-    "score_candidates": score_candidates,
-    "score_candidates_raw": score_candidates_raw,
+    "fit_filter": _fit_filter_jit,
+    "fit_dkl": _fit_dkl_jit,
+    "score_candidates": _score_candidates_jit,
+    "score_candidates_raw": _score_candidates_raw_jit,
     "dkl_predict": dkl_predict,
 }
 

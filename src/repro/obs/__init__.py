@@ -1,0 +1,26 @@
+"""Campaign telemetry: Chrome-trace spans + a process-wide metrics registry.
+
+* :mod:`.trace` — thread-safe tracer emitting Chrome trace event format
+  JSON (``X`` complete events; pid=campaign, tid=strategy thread), with
+  ``span("map"|"schedule"|"fit"|"propose"|"evaluate"|"checkpoint")``
+  context managers and :class:`jax.profiler.TraceAnnotation` wrapping on
+  the engine dispatch sites so host spans line up with XLA profiles.
+* :mod:`.metrics` — counters/gauges/histograms (cache hits, mapper memo
+  sizes, compiled-program counts, pow2-bucket occupancy, Pareto size,
+  per-iteration best cost), snapshotted into ``CampaignResult`` and the
+  campaign checkpoint.
+
+Both are opt-in and near-free when idle: tracing is off until a tracer is
+installed; metric writes happen at dispatch-site rates only.
+"""
+
+from .metrics import (METRICS, Counter, Gauge, Histogram, MetricsRegistry,
+                      collect_engine_metrics, get_registry)
+from .trace import (Tracer, activate, current, install, instant, set_thread_name,
+                    span, traced)
+
+__all__ = [
+    "METRICS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "collect_engine_metrics", "get_registry", "Tracer", "activate",
+    "current", "install", "instant", "set_thread_name", "span", "traced",
+]

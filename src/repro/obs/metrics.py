@@ -1,0 +1,167 @@
+"""Process-wide metrics registry: counters, gauges, histograms.
+
+The DSE stack records *what happened* here — cache hits, recompiles, pow2
+bucket occupancy, Pareto front growth, per-iteration search progress — while
+:mod:`.trace` records *when*.  Instruments are cheap (one small lock per
+instrument, touched at dispatch-site rates, never per candidate) and always
+on; campaigns snapshot the registry into :class:`CampaignResult` and the
+campaign checkpoint, and ``benchmarks/report.py`` folds the snapshot into
+EXPERIMENTS.md.
+
+Naming convention: dotted lowercase paths (``eval_cache.hits``,
+``tuner.bucket_fill.filter``, ``dse.random.best_cost``).
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    """Last-written value (sizes, best-so-far, program counts)."""
+
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = None
+
+    def set(self, v) -> None:
+        with self._lock:
+            self.value = v
+
+    def min(self, v) -> None:
+        """Keep the running minimum (best-cost style gauges)."""
+        with self._lock:
+            if self.value is None or v < self.value:
+                self.value = v
+
+    def snapshot(self):
+        return self.value
+
+
+class Histogram:
+    """Streaming summary (count / sum / min / max — mean derived).
+
+    Full bucketed histograms are overkill for the campaign metrics; the
+    summary is enough to read occupancy and padding waste off a run.
+    """
+
+    __slots__ = ("_lock", "count", "total", "vmin", "vmax")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.total += v
+            self.vmin = min(self.vmin, v)
+            self.vmax = max(self.vmax, v)
+
+    def snapshot(self):
+        if not self.count:
+            return {"count": 0}
+        return {"count": self.count, "sum": self.total,
+                "min": self.vmin, "max": self.vmax,
+                "mean": self.total / self.count}
+
+
+class MetricsRegistry:
+    """Thread-safe name -> instrument store with typed get-or-create."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: dict[str, object] = {}
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = self._instruments[name] = cls()
+            elif not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {name!r} is {type(inst).__name__}, "
+                    f"not {cls.__name__}")
+            return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self) -> dict:
+        """Flat ``{name: value}`` dict (histograms become summary dicts)."""
+        with self._lock:
+            items = sorted(self._instruments.items())
+        return {name: inst.snapshot() for name, inst in items}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._instruments.clear()
+
+
+#: The process-wide default registry — instrumented code writes here unless
+#: handed an explicit registry (campaigns accept one for test isolation).
+METRICS = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    return METRICS
+
+
+def collect_engine_metrics(registry: MetricsRegistry | None = None, *,
+                           cache=None, pareto=None) -> dict:
+    """Pull point-in-time engine state into gauges and return a snapshot.
+
+    Collects: :class:`EvalCache` hits/misses/entries, every mapper memo's
+    current size, per-entry-point XLA compiled-program counts
+    (``engine.compiled_program_count``), and the Pareto front size.  Lazy
+    imports keep :mod:`repro.obs` free of repro dependencies at import time.
+    """
+    reg = registry if registry is not None else METRICS
+    if cache is not None:
+        for k, v in cache.stats.items():
+            reg.gauge(f"eval_cache.{k}").set(v)
+    if pareto is not None:
+        reg.gauge("pareto.size").set(len(pareto))
+    try:
+        from ..engine.tuner_train import compiled_program_count
+        for name, n in compiled_program_count().items():
+            reg.gauge(f"xla.programs.{name}").set(n)
+    except Exception:
+        pass
+    try:
+        from ..core.mapper import mapper_cache_stats
+        for name, size in mapper_cache_stats().items():
+            reg.gauge(f"mapper.memo.{name}").set(size)
+    except Exception:
+        pass
+    return reg.snapshot()
