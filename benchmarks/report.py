@@ -231,21 +231,26 @@ def paper_section() -> str:
                   "pow2-bucketed `schedule_many` call over chunk-scaled "
                   "problem variants (contract: >=5x batched solve "
                   "throughput; scan objective <= loop on every array). "
-                  "Singles are reported unasserted — on CPU the 16x16 "
-                  "array's dense link state is memory-bound (~1x; the "
-                  "Pallas `delta_maxload_rows` path targets TPU).", "",
-                  "| case | scan (ms) | loop (ms) | speedup |",
-                  "|---|---|---|---|"]
+                  "The 16x16 array's 960 dense link loads made the scan "
+                  "memory-bound on CPU before PR 7 (~0.9x vs loop, 239 ms "
+                  "per solve); the int16 flip-cumsum + streamed delta "
+                  "scoring hold it at >=1x (asserted; ~1.7x / ~107 ms "
+                  "measured on the `jnp-dense` path — `pallas-stream` is "
+                  "the TPU path).", "",
+                  "| case | path | scan (ms) | loop (ms) | speedup |",
+                  "|---|---|---|---|---|"]
         for r in sched:
             if r["case"] == "batched_total":
                 continue
             tag = (f"{r['case']} (batch {r['batch']})"
                    if "batch" in r else r["case"])
-            lines.append(f"| {tag} | {r['scan_s'] * 1e3:.0f} | "
+            lines.append(f"| {tag} | {r.get('path', '-')} | "
+                         f"{r['scan_s'] * 1e3:.0f} | "
                          f"{r['loop_s'] * 1e3:.0f} | "
                          f"{r['speedup']:.1f}x |")
         if tot:
             lines.append(f"| **batched total ({tot['n_solves']} solves)** | "
+                         f"- | "
                          f"{tot['scan_s'] * 1e3:.0f} | "
                          f"{tot['loop_s'] * 1e3:.0f} | "
                          f"**{tot['speedup']:.1f}x** |")

@@ -70,9 +70,14 @@ def _warm_buckets(tuner, *, n_min: int, n_max: int, n_sample: int,
         y = rng.normal(size=(b,)).astype(np.float32)
         mask = np.zeros(b, bool)
         mask[:max(3, b // 2)] = True
-        fit_filter(fm.params, fm.opt_state, x, y, mask,
+        # the fit entry points donate (params, opt_state); the models keep
+        # using theirs afterwards, so the warm-up burns copies
+        import jax.numpy as jnp
+        from jax import tree_util
+        copy = lambda t: tree_util.tree_map(jnp.array, t)  # noqa: E731
+        fit_filter(copy(fm.params), copy(fm.opt_state), x, y, mask,
                    opt=_FILTER_OPT, steps=filter_steps)
-        fit_dkl(sg.params, sg.opt_state, x, y, mask,
+        fit_dkl(copy(sg.params), copy(sg.opt_state), x, y, mask,
                 opt=_DKL_OPT, steps=dkl_steps)
         score_candidates(sg.params, x, y, mask, xq, ok, tuner.beta,
                          use_pallas=_USE_PALLAS)

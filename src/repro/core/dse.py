@@ -100,6 +100,13 @@ class WorkloadEvaluator:
     configuration, keeping long multi-config campaigns at a flat memory
     footprint; :meth:`evaluate_batch` clears once per batch instead so the
     shape memos amortize across the whole batch.
+    ``batch_prefill=True`` makes :meth:`evaluate_batch` solve the WHOLE
+    batch's uncached sharing schedules in one cross-config
+    ``prefill_schedules_many`` pass before the per-mapping accounting walk
+    (one ``schedule_many`` dispatch per NoC-scalar group instead of one
+    per mapping); results are bit-identical either way, so the flag keys
+    neither cache.  ``run_dse(..., pipeline=True)`` turns it on for the
+    duration of the run.
     """
 
     def __init__(self, workloads: list[DnnGraph], *, alpha: float = 1.0,
@@ -107,7 +114,8 @@ class WorkloadEvaluator:
                  mapper_kwargs: dict | None = None, cache=None,
                  mapper_backend: str | None = None,
                  scheduler_backend: str = "scan",
-                 clear_caches_between_configs: bool = False):
+                 clear_caches_between_configs: bool = False,
+                 batch_prefill: bool = False):
         self.workloads = workloads
         self.alpha = alpha
         self.beta = beta
@@ -117,6 +125,7 @@ class WorkloadEvaluator:
             self.mapper_kwargs["backend"] = mapper_backend
         self.scheduler_backend = scheduler_backend
         self.clear_caches_between_configs = clear_caches_between_configs
+        self.batch_prefill = batch_prefill
         self._cache: dict[tuple, tuple[float, dict, dict]] = {}
         self.cache = cache
         self._wl_digest: str | None = None
@@ -245,6 +254,13 @@ class WorkloadEvaluator:
                     break
                 mappings = mapper.map_many(
                     g, [cfg_of[k] for k in live], on_infeasible="none")
+                if self.batch_prefill and self.scheduler_backend == "scan":
+                    # one cross-config scheduler batch for the whole
+                    # proposal round, instead of one per surviving mapping
+                    from .mapper import prefill_schedules_many
+                    prefill_schedules_many(
+                        [m for m in mappings if m is not None],
+                        backend=self.scheduler_backend)
                 still = []
                 for k, m in zip(live, mappings):
                     if m is None:      # capacity-infeasible: same containment
@@ -278,7 +294,7 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
             cons: PimConstraints = DEFAULT_CONSTRAINTS,
             verbose: bool = False, pareto=None, start_iteration: int = 0,
             on_iteration=None, evaluate_all_legal: bool = False,
-            tracer=None) -> DseResult:
+            tracer=None, pipeline: bool = False) -> DseResult:
     """One strategy's DSE loop (Fig. 7).
 
     The whole proposal batch is area-checked in one vectorized call
@@ -302,20 +318,41 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
     it) every iteration's ``propose``/``evaluate``/``fit`` phases emit
     spans regardless.  Per-iteration best-cost and legal-fraction metrics
     land in the process registry under ``dse.<strategy>``.
+
+    ``pipeline=True`` runs the device-resident iteration pipeline: the
+    strategy (a scan-backend :class:`PimTuner`) is wrapped in
+    :class:`repro.engine.pipeline.DsePipeline` — fused on-device propose,
+    one host sync per proposal, deferred fit — and the evaluator's
+    ``batch_prefill`` flag is enabled for the duration so each proposal
+    round's sharing schedules solve in one cross-config batch.  Results
+    are identical to the staged path under a shared seed (pinned by
+    ``tests/test_pipeline.py`` and ``benchmarks/pipeline_throughput.py``).
     """
     from contextlib import nullcontext
     from ..engine.batch_cost import batch_area_mm2
+    prefill_restore = None
+    if pipeline:
+        from ..engine.pipeline import DsePipeline
+        if not isinstance(strategy, DsePipeline):
+            strategy = DsePipeline(strategy)
+        if hasattr(evaluator, "batch_prefill"):
+            prefill_restore = evaluator.batch_prefill
+            evaluator.batch_prefill = True
     sname = getattr(strategy, "name", type(strategy).__name__.lower())
     best_gauge = metrics.METRICS.gauge(f"dse.{sname}.best_cost")
     legal_hist = metrics.METRICS.histogram(f"dse.{sname}.legal_fraction")
     obs: list[Observation] = []
     ctx = trace.activate(tracer) if tracer is not None else nullcontext()
-    with ctx:
-        for it in range(start_iteration, iterations):
-            obs.extend(_dse_iteration(
-                strategy, evaluator, it, propose_k, cons, verbose, pareto,
-                on_iteration, evaluate_all_legal, sname, best_gauge,
-                legal_hist, batch_area_mm2))
+    try:
+        with ctx:
+            for it in range(start_iteration, iterations):
+                obs.extend(_dse_iteration(
+                    strategy, evaluator, it, propose_k, cons, verbose,
+                    pareto, on_iteration, evaluate_all_legal, sname,
+                    best_gauge, legal_hist, batch_area_mm2))
+    finally:
+        if prefill_restore is not None:
+            evaluator.batch_prefill = prefill_restore
     return DseResult(obs)
 
 

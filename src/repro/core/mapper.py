@@ -1162,36 +1162,71 @@ def _prefill_schedules(mapping: Mapping, solver: str, seed: int,
                        backend: str) -> None:
     """Solve a whole mapping's missing sharing problems in one engine batch.
 
-    Collects every uncached ``_sharing_latency`` key of the mapping's
-    chosen layers, dedups their underlying ``(mesh, sets, chunk)`` problems,
-    runs ONE :func:`engine.scheduler_opt.schedule_many` call (pow2-bucketed
-    multi-problem scan), and prefills the memo — each per-layer value is
-    bit-identical to what the serial path would have computed.
+    The single-mapping entry point of :func:`prefill_schedules_many`
+    (``evaluate_mapping`` calls it per mapping on the scan backend).
     """
-    hw = mapping.hw
-    want: dict[tuple, tuple] = {}          # sched key -> (shape, problems)
-    for lname in mapping.choices:
-        args = _layer_sharing_args(mapping, lname)
-        key = _sched_key(hw, *args, solver, seed, backend)
-        if key in _SCHED_MEMO or key in want:
-            continue
-        want[key] = (args[1], _sharing_problem_list(*args))
+    prefill_schedules_many([mapping], solver=solver, seed=seed,
+                           backend=backend)
+
+
+def prefill_schedules_many(mappings: Sequence[Mapping], *,
+                           solver: str = "ilp", seed: int = 0,
+                           backend: str = "scan") -> None:
+    """Prefill the sharing-schedule memo for SEVERAL mappings in one batch.
+
+    The cross-config generalization behind the device-resident DSE
+    pipeline: collects every uncached ``_sharing_latency`` key across all
+    mappings (typically one mapping per still-feasible config of a proposal
+    round), dedups the underlying ``(mesh, sets, chunk)`` problems, and
+    runs ONE :func:`engine.scheduler_opt.schedule_many` call per distinct
+    ``(link_bw, freq, pj/bit/hop)`` NoC-scalar group — configs that differ
+    only in parameters the NoC scalars don't depend on share a single
+    pow2-bucketed dispatch.  Every memo value is bit-identical to the
+    serial per-layer path (``schedule_many``'s per-problem PRNG streams
+    are batch-independent), so prefilled and lazily-computed entries can
+    never disagree.  No-op for non-scan backends / non-ilp solvers.
+    """
+    if solver != "ilp" or backend != "scan":
+        return
+    # sched key -> (shape, problems, hw); the key embeds hw, so identical
+    # sharing problems under DIFFERENT configs stay distinct memo entries
+    want: dict[tuple, tuple] = {}
+    for mapping in mappings:
+        hw = mapping.hw
+        for lname in mapping.choices:
+            args = _layer_sharing_args(mapping, lname)
+            key = _sched_key(hw, *args, solver, seed, backend)
+            if key in _SCHED_MEMO or key in want:
+                continue
+            want[key] = (args[1], _sharing_problem_list(*args), hw)
     if not want:
         return
     from ..engine.scheduler_opt import schedule_many
-    uniq: dict[tuple, int] = {}            # problem identity -> flat index
-    flat = []
-    for shape, problems in want.values():
+
+    def _scalars(hw: HwConfig) -> tuple:
+        return (hw.link_bw_bytes, hw.cons.freq_hz,
+                hw.cons.noc_energy_pj_per_bit_hop)
+
+    # NoC-scalar triple -> (problem identity -> flat index, flat problems)
+    groups: dict[tuple, tuple[dict, list]] = {}
+    for shape, problems, hw in want.values():
+        uniq, flat = groups.setdefault(_scalars(hw), ({}, []))
         for sets, chunk in problems:
             pk = (shape, sets, chunk)
             if pk not in uniq:
                 uniq[pk] = len(flat)
                 flat.append((MeshNoc(shape[0], shape[1]), sets,
                              [chunk] * len(sets)))
-    results = schedule_many(flat, hw.link_bw_bytes, hw.cons.freq_hz,
-                            hw.cons.noc_energy_pj_per_bit_hop, seed=seed)
+    with trace.span("prefill_schedules", cat="engine",
+                    mappings=len(mappings), missing=len(want),
+                    problems=sum(len(f) for _, f in groups.values()),
+                    groups=len(groups)):
+        solved = {tri: schedule_many(flat, *tri, seed=seed)
+                  for tri, (_, flat) in groups.items()}
     fills = []
-    for key, (shape, problems) in want.items():
+    for key, (shape, problems, hw) in want.items():
+        uniq, _ = groups[_scalars(hw)]
+        results = solved[_scalars(hw)]
         lat = 0.0
         en = 0.0
         for sets, chunk in problems:

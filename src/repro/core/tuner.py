@@ -111,20 +111,37 @@ class FilterModel:
     def fit(self, steps: int = 200) -> float:
         if len(self._y) < 8:
             return float("nan")
-        x = np.array(self._x, np.float32)
-        y = np.array(self._y, np.float32)
         if self.backend == "loop":
+            x = np.array(self._x, np.float32)
+            y = np.array(self._y, np.float32)
             xj, yj = jnp.asarray(x), jnp.asarray(y)
             loss = jnp.inf
             for _ in range(steps):
                 self.params, self.opt_state, loss = _filter_step(
                     self.params, self.opt_state, xj, yj)
             return float(loss)
-        xp, yp, mask = pad_dataset(x, y)
+        return float(self.fit_arrays(steps)[-1])
+
+    def fit_arrays(self, steps: int = 200):
+        """Scan-backend fit WITHOUT the final-loss host sync.
+
+        Returns the device-resident loss trajectory (``None`` when there
+        are too few observations) — the device-resident pipeline's hook:
+        the dispatch is enqueued asynchronously and the host never blocks
+        on it unless someone actually reads a loss.  Model state updates
+        are identical to :meth:`fit`.
+        """
+        if len(self._y) < 8:
+            return None
+        x = np.array(self._x, np.float32)
+        y = np.array(self._y, np.float32)
+        # explicit put: the training-set staging is the ONE host->device
+        # hop of a fit, so the pipeline's transfer guard stays clean
+        xp, yp, mask = map(jax.device_put, pad_dataset(x, y))
         self.params, self.opt_state, losses = fit_filter(
             self.params, self.opt_state, xp, yp, mask,
             opt=_FILTER_OPT, steps=steps)
-        return float(losses[-1])
+        return losses
 
     def predict_area_x(self, x: np.ndarray) -> np.ndarray:
         """Predicted areas (mm^2) for an ``[n, 7]`` normalized-param matrix."""
@@ -232,12 +249,12 @@ class DklSuggestionModel:
     def fit(self, steps: int = 300) -> float:
         if len(self._y) < 3:
             return float("nan")
-        y = np.array(self._y, np.float64)
-        self._mu = float(y.mean())
-        self._sigma = float(y.std() + 1e-9)
-        x = np.array(self._x, np.float32)
-        yn = ((y - self._mu) / self._sigma).astype(np.float32)
         if self.backend == "loop":
+            y = np.array(self._y, np.float64)
+            self._mu = float(y.mean())
+            self._sigma = float(y.std() + 1e-9)
+            x = np.array(self._x, np.float32)
+            yn = ((y - self._mu) / self._sigma).astype(np.float32)
             xj, yj = jnp.asarray(x), jnp.asarray(yn)
             loss = jnp.inf
             for _ in range(steps):
@@ -245,13 +262,27 @@ class DklSuggestionModel:
                     self.params, self.opt_state, xj, yj)
             self._dirty = False
             return float(loss)
-        xp, yp, mask = pad_dataset(x, yn)
+        return float(self.fit_arrays(steps)[-1])
+
+    def fit_arrays(self, steps: int = 300):
+        """Scan-backend fit WITHOUT the final-loss host sync (see
+        :meth:`FilterModel.fit_arrays`); returns ``None`` below 3 points."""
+        if len(self._y) < 3:
+            return None
+        y = np.array(self._y, np.float64)
+        self._mu = float(y.mean())
+        self._sigma = float(y.std() + 1e-9)
+        x = np.array(self._x, np.float32)
+        yn = ((y - self._mu) / self._sigma).astype(np.float32)
+        # device-resident training set: one explicit put per fit, and the
+        # cached ``_train`` feeds propose scoring without another transfer
+        xp, yp, mask = map(jax.device_put, pad_dataset(x, yn))
         self.params, self.opt_state, losses = fit_dkl(
             self.params, self.opt_state, xp, yp, mask,
             opt=_DKL_OPT, steps=steps)
         self._train = (xp, yp, mask)
         self._dirty = False
-        return float(losses[-1])
+        return losses
 
     def rank_x(self, xq: np.ndarray,
                area_ok: np.ndarray | None = None) -> np.ndarray:

@@ -14,6 +14,9 @@ pipeline:
   restarts as parallel chains in one ``lax.scan``, scatter-free flip-cumsum
   move deltas, and pow2-bucketed multi-problem ``schedule_many`` batching
   (Pallas ``delta_maxload_rows`` scoring on TPU).
+* :mod:`.pipeline` — device-resident DSE iteration pipeline: the tuner's
+  fused propose chained into in-array top-k selection with one host sync
+  per proposal, deferred model fits, and cross-config scheduler prefill.
 * :mod:`.pareto` — streaming latency/energy/area Pareto-frontier tracker.
 * :mod:`.cache` — content-addressed memoization of mapper/scheduler results
   keyed by (HwConfig, DnnGraph) digests.
@@ -30,12 +33,13 @@ from .tuner_train import (compiled_program_count, fit_dkl, fit_filter,
                           pad_dataset, pow2_bucket, score_candidates,
                           score_candidates_raw)
 from .campaign import Campaign, CampaignResult
+from .pipeline import DsePipeline
 
 __all__ = [
     "BatchCostResult", "PartSpec", "batch_area_mm2", "batch_max_link_load",
-    "batch_part_cost", "EvalCache", "cons_digest", "graph_digest",
-    "hw_digest", "ParetoFront", "ParetoPoint", "Campaign", "CampaignResult",
-    "compiled_program_count", "fit_dkl", "fit_filter", "pad_dataset",
-    "pow2_bucket", "schedule_many", "score_candidates",
+    "batch_part_cost", "DsePipeline", "EvalCache", "cons_digest",
+    "graph_digest", "hw_digest", "ParetoFront", "ParetoPoint", "Campaign",
+    "CampaignResult", "compiled_program_count", "fit_dkl", "fit_filter",
+    "pad_dataset", "pow2_bucket", "schedule_many", "score_candidates",
     "score_candidates_raw",
 ]

@@ -1,0 +1,185 @@
+"""Device-resident DSE iteration pipeline (the fused Fig. 7 hot path).
+
+``run_dse``'s staged path round-trips through the host between every tuner
+stage of an iteration: the filter model's predicted areas are pulled back
+and exponentiated in numpy, the suggestion model's scores come back as a
+numpy array for ``np.argsort``, the dedup-to-k walk runs over Python
+tuples, and each ``fit`` blocks on ``float(losses[-1])`` before the next
+iteration starts.  :class:`DsePipeline` chains the SAME jitted stage
+functions — the filter forward pass, the fused
+:func:`repro.engine.tuner_train.score_candidates` dispatch, and an
+in-array top-k selection replicating
+:func:`repro.core.hardware.configs_from_rows` — with device arrays flowing
+between them:
+
+* every stage input is an explicit ``jax.device_put`` (no implicit
+  host->device transfers; ``tests/test_pipeline.py`` pins this under
+  ``jax.transfer_guard("disallow")``),
+* the area mask, candidate scores, stable sort, stop-at-first-invalid
+  walk, duplicate suppression, and top-k scatter all stay on device,
+* exactly ONE host sync per proposal — the ``device_get`` of the winner
+  indices — after which the k ``HwConfig`` objects materialize from the
+  host-side sample matrix, and
+* :meth:`fit` uses the models' ``fit_arrays`` hooks, so both Adam
+  trajectories are enqueued asynchronously and the host never blocks on a
+  loss scalar (the staged path syncs twice per iteration here).
+
+Selection semantics are bit-compatible with the staged path: the same
+sampled value matrix (identical RNG stream), the same jitted scoring
+program, a stable argsort, and a walk that stops at the first
+area-rejected row — so a shared seed yields identical proposals, pinned by
+the parity tests and the ``benchmarks/pipeline_throughput.py`` contract.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hardware import (HwConfig, normalize_params_batch,
+                             sample_config_values)
+from ..obs import trace
+from .tuner_train import mlp_forward, score_candidates
+
+
+@jax.jit
+def _area_mask(params, xq, budget):
+    """Filter-model area mask with the all-reject fallback folded in-array.
+
+    Mirrors the staged ``FilterModel.predict_area_x`` + budget comparison
+    (same MLP forward, same ``exp(pred) * budget <= budget`` test) and the
+    staged propose's "an all-reject filter would starve the search" escape:
+    when no candidate passes, every candidate does.
+    """
+    pred = mlp_forward(params, xq)[:, 0]
+    mask = jnp.exp(pred) * budget <= budget
+    return jnp.where(jnp.any(mask), mask, True)
+
+
+@jax.jit
+def _masked_zeros(ok):
+    """Scores for an untrained suggestion model: zeros, masked to +inf."""
+    return jnp.where(ok, jnp.zeros(ok.shape, jnp.float32), jnp.inf)
+
+
+# jitted so the trajectory's last loss is picked on device: eager indexing
+# (even a static a[-1:]) dispatches dynamic_slice with a host index scalar,
+# which a transfer guard rejects
+_last = jax.jit(lambda a: a[-1])
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _select_topk(vals, scores, valid, *, k: int):
+    """In-array twin of :func:`repro.core.hardware.configs_from_rows`.
+
+    Stable-sorts the candidate rows by score, walks them best-first
+    stopping at the first invalid row (``cumprod`` over the sorted mask),
+    suppresses rows whose exact value tuple already appeared earlier in
+    the walk (pairwise-equality against the strict lower triangle), and
+    scatters the first ``k`` survivors' ORIGINAL row indices into rank
+    order.  Returns ``(indices [k], count)``; unfilled slots are -1.
+    """
+    order = jnp.argsort(scores)             # stable, like np kind="stable"
+    v = vals[order]
+    alive = jnp.cumprod(valid[order].astype(jnp.int32)).astype(bool)
+    dup = jnp.tril(jnp.all(v[:, None, :] == v[None, :, :], axis=-1),
+                   -1).any(axis=1)
+    keep = alive & ~dup
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    take = keep & (rank < k)
+    # ranks of taken rows are unique and < k; everything else piles into
+    # the sacrificial slot k, which the trim below discards
+    slot = jnp.where(take, rank, k)
+    sel = jnp.full((k + 1,), -1, jnp.int32).at[slot].set(
+        order.astype(jnp.int32))
+    return sel[:k], jnp.sum(take.astype(jnp.int32))
+
+
+class DsePipeline:
+    """Strategy adapter running a scan-backend :class:`PimTuner` fused.
+
+    Drop-in for the tuner anywhere ``run_dse`` accepts a strategy (or pass
+    ``run_dse(..., pipeline=True)`` to wrap transparently): ``propose`` is
+    the device-resident chain above, ``observe`` delegates, and ``fit``
+    defers the loss sync.  The evaluator side of the iteration batches its
+    scheduler work through ``prefill_schedules_many`` when the evaluator's
+    ``batch_prefill`` flag is on (``run_dse(pipeline=True)`` enables it for
+    the duration of the run).
+    """
+
+    def __init__(self, tuner):
+        missing = [a for a in ("filter_model", "suggestion", "rng",
+                               "n_sample", "cons")
+                   if not hasattr(tuner, a)]
+        if missing:
+            raise ValueError(f"DsePipeline needs a PimTuner-like strategy; "
+                             f"{type(tuner).__name__} lacks {missing}")
+        if getattr(tuner, "backend", None) != "scan":
+            raise ValueError("DsePipeline requires a scan-backend tuner "
+                             f"(got backend={getattr(tuner, 'backend', None)!r})")
+        # lazy: core.tuner imports this package's tuner_train at its top
+        # level, so a module-level import here would be circular
+        from ..core.tuner import _USE_PALLAS
+        self.tuner = tuner
+        self.name = getattr(tuner, "name", "nicepim")
+        self._use_pallas = _USE_PALLAS
+        # scalars/constants the jitted stages consume, pre-staged once so
+        # steady-state proposals perform no implicit host->device transfer
+        self._beta = jax.device_put(np.float32(tuner.suggestion.beta))
+        self._budget = jax.device_put(
+            np.float32(tuner.cons.area_budget_mm2))
+        self._ones = jax.device_put(np.ones(tuner.n_sample, bool))
+
+    # -- the fused propose chain -------------------------------------------
+
+    def propose(self, k: int = 8) -> list[HwConfig]:
+        t = self.tuner
+        with trace.span("fused_propose", cat="engine",
+                        n=t.n_sample, k=k) as sp:
+            # stage 0 (host): vectorized draw + normalize, then ONE put
+            vals = sample_config_values(t.n_sample, t.rng, t.cons)
+            xq = jax.device_put(normalize_params_batch(vals))
+            ok = (_area_mask(t.filter_model.params, xq, self._budget)
+                  if t.filter_model.trained() else self._ones)
+            scores = self._scores(xq, ok)
+            sel, cnt = _select_topk(jax.device_put(vals), scores, ok, k=k)
+            # the iteration's one host sync: k winner indices + a count
+            sel, cnt = jax.device_get((sel, cnt))
+            sp["selected"] = int(cnt)
+        return [HwConfig.from_tuple(tuple(int(x) for x in vals[i]),
+                                    cons=t.cons)
+                for i in sel[:int(cnt)]]
+
+    def _scores(self, xq, ok):
+        sg = self.tuner.suggestion
+        if len(sg._y) < 3:
+            return _masked_zeros(ok)
+        if sg._dirty or sg._train is None:
+            sg.fit_arrays()          # same refit-when-stale rule as rank_x
+        xp, yp, mask = sg._train
+        return score_candidates(sg.params, xp, yp, mask, xq, ok,
+                                self._beta, use_pallas=self._use_pallas)
+
+    # -- the strategy protocol ---------------------------------------------
+
+    def observe(self, cfg: HwConfig, area_mm2: float,
+                cost: float | None) -> None:
+        self.tuner.observe(cfg, area_mm2, cost)
+
+    def fit(self) -> dict:
+        """Refit both models WITHOUT blocking on their losses.
+
+        Returns device scalars (or NaN before the models have enough
+        observations); ``run_dse`` only formats them under ``verbose``, so
+        the non-verbose loop never waits for a fit to finish — the next
+        iteration's host-side sampling and mapper work overlap with the
+        enqueued Adam scans.
+        """
+        nan = float("nan")
+        fl = self.tuner.filter_model.fit_arrays()
+        dl = self.tuner.suggestion.fit_arrays()
+        return {"filter": nan if fl is None else _last(fl),
+                "dkl": nan if dl is None else _last(dl)}

@@ -55,30 +55,56 @@ from .tuner_train import pow2_bucket
 
 _USE_PALLAS = jax.default_backend() == "tpu"
 
+# pad mesh-dependent shapes (node count, link count) to pow2 so every mesh
+# with the same padded envelope reuses ONE compiled program — per-mesh
+# recompiles, not device compute, dominate a cold campaign's scheduling
+# time.  schedule_many(pad_shapes=False) restores the PR 6 exact-shape
+# programs (the staged baseline pipeline_throughput measures against);
+# results are bit-identical either way (padded links carry zero loads and
+# zero deltas through an exact max).
+_PAD_SHAPES = True
+
 
 @functools.lru_cache(maxsize=8)
-def _mesh_incidence(noc: MeshNoc) -> jax.Array:
-    """Dense 0/1 XY-route incidence ``[NN, NN, E]`` int8 for one mesh.
+def _mesh_incidence(noc: MeshNoc, nn_pad: int | None = None,
+                    e_pad: int | None = None) -> jax.Array:
+    """Dense 0/1 XY-route incidence ``[NN', NN', E']`` int8 for one mesh.
 
     ``inc[a, b, e] = 1`` iff link ``e`` lies on the XY route ``a -> b`` —
     the gather form of :meth:`MeshNoc.route_table` the jitted 2-opt scores
     deltas against (int8: the largest paper mesh, 16x16, stays at 63 MB).
-    Cached as a device-resident ``jax.Array`` so repeat solves on one mesh
-    reuse the buffer instead of re-transferring it per dispatch.
+    ``nn_pad`` / ``e_pad`` zero-pad the node and link axes to a shared
+    pow2 envelope (node ids never reach the padded rows; padded links have
+    no incidence, so their loads stay exactly zero).  Cached as a
+    device-resident ``jax.Array`` so repeat solves on one mesh reuse the
+    buffer instead of re-transferring it per dispatch.
     """
     route_pad, _ = noc.route_table()
     nn, e = noc.n_nodes, noc.n_links()
+    nn_pad = nn if nn_pad is None else nn_pad
+    e_pad = e if e_pad is None else e_pad
     flat = np.zeros((nn * nn, e + 1), dtype=np.int8)
     rows = np.repeat(np.arange(nn * nn), route_pad.shape[2])
     np.add.at(flat, (rows, route_pad.reshape(nn * nn, -1).ravel()), 1)
-    return jnp.asarray(flat[:, :e].reshape(nn, nn, e))
+    inc = np.zeros((nn_pad, nn_pad, e_pad), dtype=np.int8)
+    inc[:nn, :nn, :e] = flat[:, :e].reshape(nn, nn, e)
+    return jax.device_put(inc)
+
+
+def _mesh_pads(noc: MeshNoc, pad: bool) -> tuple[int, int]:
+    """(node, link) axis sizes for one mesh's jitted state."""
+    if not pad:
+        return noc.n_nodes, noc.n_links()
+    return (pow2_bucket(noc.n_nodes, minimum=4),
+            pow2_bucket(noc.n_links(), minimum=8))
 
 
 # -- the jitted multi-chain search --------------------------------------------
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("rounds", "n_moves", "use_pallas"))
+                   static_argnames=("rounds", "n_moves", "use_pallas"),
+                   donate_argnums=(0, 3))
 def _scan_solve(cycles0, lens, weights, loads0, keys, inc, *,
                 rounds: int, n_moves: int, use_pallas: bool):
     """The whole multi-round 2-opt search as one ``lax.scan``.
@@ -102,6 +128,12 @@ def _scan_solve(cycles0, lens, weights, loads0, keys, inc, *,
     combination worsens it (overlapping routes), the round falls back to
     the single globally best move, so the objective never increases, the
     same monotonicity the loop reference's sequential best-first rule has.
+
+    ``cycles0`` / ``loads0`` are donated: the caller packs fresh buffers
+    per bucket (never the cached ``inc``), so XLA aliases the large padded
+    state with the returned ``(cycles, loads)`` instead of allocating a
+    second copy.  ``keys`` has no same-shape output to alias and stays
+    un-donated.
     """
     R, S, N = cycles0.shape
     E = loads0.shape[1]
@@ -113,10 +145,19 @@ def _scan_solve(cycles0, lens, weights, loads0, keys, inc, *,
         ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
         keys_next, k_si, k_r = ks[:, 0], ks[:, 1], ks[:, 2]
         # -- propose: uniform eligible set, uniform valid (i, j) reversal --
-        logits = jnp.where(lens >= 4, 0.0, -jnp.inf)
-        si = jax.vmap(
-            lambda k, lg: jax.random.categorical(k, lg, shape=(M,)))(
-                k_si, logits)                                   # [R, M]
+        # width-independent set draw: ONE uniform per proposal, rank-indexed
+        # into the eligible sets.  (random.categorical would consume bits
+        # shaped [M, S], tying every row's stream to the bucket's padded set
+        # axis; this consumes [M] regardless of padding, so the canonical
+        # pow4/chunked bucket shapes leave each schedule bit-identical.)
+        elig = lens >= 4                                        # [R, S]
+        n_elig = jnp.sum(elig, axis=1)                          # [R]
+        u = jax.vmap(lambda k: jax.random.uniform(k, (M,)))(k_si)
+        idx = jnp.minimum((u * n_elig[:, None]).astype(jnp.int32),
+                          n_elig[:, None] - 1)                  # [R, M]
+        rank = jnp.cumsum(elig, axis=1) - 1                     # [R, S]
+        si = jnp.argmax((rank[:, None, :] == idx[:, :, None])
+                        & elig[:, None, :], axis=2)             # [R, M]
         n = jnp.take_along_axis(lens, si, axis=1)               # [R, M]
         # ranks over i<j pairs in (i, j) lexicographic order; the full
         # reversal (0, n-1) has rank n-2 and is skipped by shifting — every
@@ -131,10 +172,12 @@ def _scan_solve(cycles0, lens, weights, loads0, keys, inc, *,
         j = i + 1 + (r - (i * (n - 1) - i * (i - 1) // 2))
         # -- flip-cumsum per (row, set): interior deltas become gathers ---
         ca, cb = cycles[..., :-1], cycles[..., 1:]              # [R, S, N-1]
-        flip = (inc[cb, ca] - inc[ca, cb]).astype(jnp.float32)
+        flip = (inc[cb, ca] - inc[ca, cb]).astype(jnp.int16)
         # log-depth associative scan: XLA CPU lowers plain cumsum along a
-        # middle axis pathologically (~12x slower here), and the counts are
-        # small ints so f32 addition is exact in any order
+        # middle axis pathologically (~12x slower here).  int16 halves the
+        # memory traffic of the [R, S, N, E] prefix again vs f32 (2.3x on
+        # the 960-link 16x16 case) and stays exact: the counts are bounded
+        # by the cycle length, far inside the int16 range
         flipcum = jnp.concatenate(
             [jnp.zeros_like(flip[..., :1, :]),
              jax.lax.associative_scan(jnp.add, flip, axis=2)],
@@ -154,19 +197,22 @@ def _scan_solve(cycles0, lens, weights, loads0, keys, inc, *,
         nxt = at(jnp.where(j + 1 < n, j + 1, 0))
         ci, cj = at(i), at(j)
         bterm = (inc[prv, cj] + inc[ci, nxt]
-                 - inc[prv, ci] - inc[cj, nxt]).astype(jnp.float32)
+                 - inc[prv, ci] - inc[cj, nxt]).astype(jnp.int16)
         w = jnp.take_along_axis(weights, si, axis=1)            # [R, M]
-        # per-link counts are small exact ints; the whole scoring pass runs
-        # in f32 (half the memory traffic of the E axis) — acceptance is
-        # protected by the exact-f64 gate below, never by these scores
+        # per-link counts are small exact ints carried in int16; scoring
+        # scales them by the set weight in f32 — acceptance is protected
+        # by the exact-f64 gate below, never by these scores
         cnt = fc(j) - fc(i) + bterm                             # [R, M, E]
-        delta = cnt * w.astype(jnp.float32)[..., None]
         loads32 = loads.astype(jnp.float32)
+        w32 = w.astype(jnp.float32)
         # -- score every proposal against the current loads ---------------
         if use_pallas:
             from ..kernels import dse_eval
-            objs = dse_eval.delta_maxload_rows(loads32, delta)
+            # streamed link tiles + in-kernel count scaling: the f32
+            # [R, M, E] delta tensor is never materialized
+            objs = dse_eval.delta_maxload_rows(loads32, cnt, w32)
         else:
+            delta = cnt.astype(jnp.float32) * w32[..., None]
             objs = jnp.max(loads32[:, None, :] + delta, axis=-1)
         # -- best non-worsening move per set, joint apply with fallback ---
         obj32 = obj.astype(jnp.float32)
@@ -175,8 +221,10 @@ def _scan_solve(cycles0, lens, weights, loads0, keys, inc, *,
         best_m = jnp.argmin(objs_s, axis=1)                     # [R, S]
         valid_s = jnp.min(objs_s, axis=1) <= obj32[:, None]
         m_star = jnp.argmin(objs, axis=1)                       # [R]
-        # exact per-set counts of the chosen moves, f64-weighted
-        cnt_s = jnp.take_along_axis(cnt, best_m[..., None], axis=1)
+        # exact per-set counts of the chosen moves, f64-weighted (the
+        # int16 counts convert exactly)
+        cnt_s = jnp.take_along_axis(cnt, best_m[..., None],
+                                    axis=1).astype(loads.dtype)
         w_s = jnp.where(valid_s, weights, 0.0)                  # [R, S]
         comb = jnp.einsum('rs,rse->re', w_s, cnt_s)             # exact f64
         take_comb = jnp.max(loads + comb, axis=-1) <= obj
@@ -279,10 +327,37 @@ def _rounds(iters: int, moves_per_round: int) -> int:
     return max(1, -(-iters // moves_per_round))
 
 
-def _bucket_key(st: _Setup) -> tuple:
-    """(mesh, padded set count, padded max set size) — one jit program each."""
-    return (st.noc, pow2_bucket(len(st.sets), minimum=1),
-            pow2_bucket(max(len(s) for s in st.sets), minimum=4))
+# fixed row-axis size for canonical (pad_shapes) buckets: bigger buckets run
+# as several 32-row dispatches of ONE program, smaller ones pad up to it
+_R_CHUNK = 32
+_SOLO_EXACT_LINKS = 512   # solo solves on meshes at least this wide get
+                          # exact (pow2) rows instead of the canonical chunk
+
+
+def _pow4_bucket(n: int, minimum: int) -> int:
+    """Next power of FOUR >= max(n, minimum) — the coarse program-key class.
+
+    Under ``pad_shapes`` the set-count and set-size axes quantize to pow4
+    instead of pow2: both axes are fully masked (padded sets carry zero
+    weight and zero length, padded tail slots sit past every row's true
+    length), so coarser padding is bit-safe and halves the number of
+    distinct compiled programs per mesh envelope — at most 4x padded work
+    on one axis, against a ~1.4 s XLA compile saved per collapsed shape.
+    """
+    p = pow2_bucket(n, minimum=minimum)
+    return p * 2 if (p.bit_length() - 1) % 2 else p
+
+
+def _bucket_key(st: _Setup, pad_shapes: bool) -> tuple:
+    """(mesh, padded set count, padded max set size) — one jit program each.
+
+    With ``pad_shapes`` the class bounds are pow4 (see :func:`_pow4_bucket`)
+    so problems with nearby shapes share a bucket AND a compiled program;
+    without it they are exact pow2, the PR 6 per-shape behavior.
+    """
+    pad = _pow4_bucket if pad_shapes else pow2_bucket
+    return (st.noc, pad(len(st.sets), minimum=1),
+            pad(max(len(s) for s in st.sets), minimum=4))
 
 
 def _resolve_host(st: _Setup, link_bw: float, freq: float,
@@ -327,26 +402,70 @@ def _fold_keys(seeds, digests, chains):
 
 
 def _run_bucket(setups: list[_Setup], *, rounds: int, moves_per_round: int,
-                s_pad: int, n_pad: int, use_pallas: bool) -> list[list]:
+                s_pad: int, n_pad: int, use_pallas: bool,
+                pad_shapes: bool = True) -> list[list]:
     """Solve one bucket's problems in lockstep; returns per-problem chains
     (each a ``[chain][set] -> node order`` nested list).
 
     Every problem in a bucket shares the mesh and the padded (sets, set
-    size) envelope; rows of the jitted state are (problem x chain) pairs,
-    padded to a pow2 row count so the XLA program count stays logarithmic.
+    size) envelope; rows of the jitted state are (problem x chain) pairs.
+    With ``pad_shapes`` the row axis is CANONICAL: buckets run as chunks of
+    exactly ``_R_CHUNK`` rows (larger buckets become several dispatches of
+    one program, smaller ones pad up), and the mesh axes are pow2-padded,
+    so different meshes with the same padded envelope share ONE compiled
+    program (the incidence table is a runtime argument — only shapes key
+    the jit cache).  Without it the row axis is the exact pow2 bucket of
+    the batch, the PR 6 per-shape behavior.  Rows are independent (one
+    PRNG stream each; padded rows burn copies of row 0), so chunking and
+    padding leave every problem's schedule bit-identical.
+    """
+    chains = len(setups[0].inits)
+    solo_exact = (len(setups) == 1
+                  and setups[0].noc.n_links() >= _SOLO_EXACT_LINKS)
+    if not pad_shapes or chains > _R_CHUNK or solo_exact:
+        # exact rows when canonicalization is off, when one problem's
+        # chains overflow a chunk, or for a SOLO solve on a big mesh: a
+        # single 6-chain Fig. 12 16x16 solve (960 links) is memory-bound
+        # in its dense link state and must not burn 26 padded rows.  On
+        # small meshes burner rows are nearly free, so solos keep the
+        # canonical chunk width and share the batched bucket's program.
+        # (Row count never shifts a chain's PRNG stream — each row folds
+        # its own key — so this only changes cost, never results.)
+        r_pad = pow2_bucket(len(setups) * chains, minimum=4)
+        per = len(setups)
+    else:
+        r_pad = _R_CHUNK
+        per = max(1, _R_CHUNK // chains)
+    results: list[list] = []
+    for lo in range(0, len(setups), per):
+        results.extend(_pack_solve(
+            setups[lo:lo + per], rounds=rounds,
+            moves_per_round=moves_per_round, s_pad=s_pad, n_pad=n_pad,
+            r_pad=r_pad, use_pallas=use_pallas, pad_shapes=pad_shapes))
+    return results
+
+
+def _pack_solve(setups: list[_Setup], *, rounds: int, moves_per_round: int,
+                s_pad: int, n_pad: int, r_pad: int, use_pallas: bool,
+                pad_shapes: bool) -> list[list]:
+    """Pack one row-chunk of setups and run the jitted search at ``r_pad``.
+
+    All inputs go through explicit ``jax.device_put``: the engine performs
+    no implicit host->device transfers (``tests/test_pipeline.py`` runs
+    this under ``jax.transfer_guard("disallow")``).
     """
     noc = setups[0].noc
     chains = len(setups[0].inits)
-    e = noc.n_links()
+    _, e_pad = _mesh_pads(noc, pad_shapes)
     rows = len(setups) * chains
-    r_pad = pow2_bucket(rows, minimum=4)
     metrics.METRICS.histogram("scheduler.bucket_fill").observe(rows / r_pad)
     metrics.METRICS.counter("scheduler.padded_rows").inc(r_pad - rows)
     cycles0 = np.zeros((r_pad, s_pad, n_pad), dtype=np.int32)
     lens = np.zeros((r_pad, s_pad), dtype=np.int32)
     weights = np.zeros((r_pad, s_pad))
-    loads0 = np.zeros((r_pad, e))
+    loads0 = np.zeros((r_pad, e_pad))
     keys = np.zeros((r_pad, 2), dtype=np.uint32)
+    e = noc.n_links()
     for p, st in enumerate(setups):
         for c, init in enumerate(st.inits):
             row = p * chains + c
@@ -354,22 +473,30 @@ def _run_bucket(setups: list[_Setup], *, rounds: int, moves_per_round: int,
                 cycles0[row, si, :len(cyc)] = cyc
                 lens[row, si] = len(cyc)
                 weights[row, si] = (len(cyc) - 1) * st.chunks[si]
-            loads0[row] = noc.link_loads_np(
+            loads0[row, :e] = noc.link_loads_np(
                 _all_transfers(init, list(st.chunks)))
     keys[:rows] = np.asarray(_fold_keys(
-        np.array([st.seed_eff for st in setups for _ in range(chains)],
-                 dtype=np.uint32),
-        np.array([st.digest for st in setups for _ in range(chains)],
-                 dtype=np.uint32),
-        np.arange(rows, dtype=np.uint32) % chains), dtype=np.uint32)
+        jax.device_put(np.array(
+            [st.seed_eff for st in setups for _ in range(chains)],
+            dtype=np.uint32)),
+        jax.device_put(np.array(
+            [st.digest for st in setups for _ in range(chains)],
+            dtype=np.uint32)),
+        jax.device_put(np.arange(rows, dtype=np.uint32) % chains)),
+        dtype=np.uint32)
     for row in range(rows, r_pad):   # padded rows: burn a copy of row 0
         cycles0[row], lens[row] = cycles0[0], lens[0]
         weights[row], loads0[row], keys[row] = (weights[0], loads0[0],
                                                 keys[0])
     with enable_x64():
+        inc = (_mesh_incidence(noc, *_mesh_pads(noc, True)) if pad_shapes
+               else _mesh_incidence(noc))
+        # cycles0/loads0 are donated by _scan_solve — freshly packed per
+        # bucket, so handing the buffers over is safe
         out_cycles, _, _ = _scan_solve(
-            jnp.asarray(cycles0), jnp.asarray(lens), jnp.asarray(weights),
-            jnp.asarray(loads0), jnp.asarray(keys), _mesh_incidence(noc),
+            jax.device_put(cycles0), jax.device_put(lens),
+            jax.device_put(weights), jax.device_put(loads0),
+            jax.device_put(keys), inc,
             rounds=rounds, n_moves=moves_per_round, use_pallas=use_pallas)
     out_cycles = np.asarray(out_cycles)
     results = []
@@ -388,7 +515,8 @@ def schedule_many(problems, link_bw: float, freq: float,
                   pj_per_bit_hop: float, *, seed: int = 0,
                   restarts: int = 4, iters: int = 400,
                   moves_per_round: int = 32,
-                  use_pallas: bool | None = None) -> list[ScheduleResult]:
+                  use_pallas: bool | None = None,
+                  pad_shapes: bool | None = None) -> list[ScheduleResult]:
     """Solve a batch of ``(noc, sharing_sets, chunk_bytes)`` problems.
 
     Problems are pow2-bucketed by (mesh, set count, max set size) and each
@@ -398,8 +526,15 @@ def schedule_many(problems, link_bw: float, freq: float,
     ``solve_ilp_ls(..., backend="scan", seed=seed)`` result bit-for-bit —
     per-problem PRNG streams make results independent of batch composition,
     so the mapper's schedule memo can be prefilled batch-wise.
+
+    ``pad_shapes`` (default: the module's ``_PAD_SHAPES``, True) pow2-pads
+    the mesh axes AND canonicalizes the bucket shape — pow4 set-count/
+    set-size classes, fixed ``_R_CHUNK``-row dispatches — so distinct
+    meshes and nearby problem shapes share compiled programs; results are
+    bit-identical with or without padding — only compile count changes.
     """
     use_pallas = _USE_PALLAS if use_pallas is None else use_pallas
+    pad_shapes = _PAD_SHAPES if pad_shapes is None else pad_shapes
     rounds = _rounds(iters, moves_per_round)
     with trace.span("schedule_many", cat="engine",
                     problems=len(problems)) as sp:
@@ -411,16 +546,20 @@ def schedule_many(problems, link_bw: float, freq: float,
                                 moves_per_round=moves_per_round)
             results[pi] = _resolve_host(st, link_bw, freq, pj_per_bit_hop)
             if results[pi] is None:
-                buckets.setdefault(_bucket_key(st), []).append((pi, st))
+                buckets.setdefault(_bucket_key(st, pad_shapes),
+                                   []).append((pi, st))
         for (mesh, s_pad, n_pad), entries in buckets.items():
+            nn_pad, e_pad = _mesh_pads(mesh, pad_shapes)
             with trace.span("schedule", cat="engine",
                             bucket=f"{mesh}:{s_pad}x{n_pad}",
+                            envelope=f"{nn_pad}n{e_pad}e",
                             problems=len(entries)):
                 chains = _run_bucket([st for _, st in entries],
                                      rounds=rounds,
                                      moves_per_round=moves_per_round,
                                      s_pad=s_pad, n_pad=n_pad,
-                                     use_pallas=use_pallas)
+                                     use_pallas=use_pallas,
+                                     pad_shapes=pad_shapes)
             for (pi, st), per_chain in zip(entries, chains):
                 results[pi] = _finish_chains(st, per_chain, link_bw, freq,
                                              pj_per_bit_hop)
@@ -446,8 +585,9 @@ def _solve_one_scan(noc: MeshNoc, sharing_sets, chunk_bytes, link_bw: float,
     got = _resolve_host(st, link_bw, freq, pj_per_bit_hop)
     if got is not None:
         return got
-    _, s_pad, n_pad = _bucket_key(st)
+    _, s_pad, n_pad = _bucket_key(st, _PAD_SHAPES)
     per_chain = _run_bucket([st], rounds=_rounds(iters, moves_per_round),
                             moves_per_round=moves_per_round, s_pad=s_pad,
-                            n_pad=n_pad, use_pallas=_USE_PALLAS)[0]
+                            n_pad=n_pad, use_pallas=_USE_PALLAS,
+                            pad_shapes=_PAD_SHAPES)[0]
     return _finish_chains(st, per_chain, link_bw, freq, pj_per_bit_hop)

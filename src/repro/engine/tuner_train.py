@@ -199,12 +199,18 @@ def _scan_fit(loss_fn, opt: Adam, params, opt_state, args, steps: int):
     return params, opt_state, losses
 
 
-@partial(jax.jit, static_argnames=("opt", "steps"))
+# params/opt_state are donated: every trajectory returns a same-shaped
+# (params, opt_state), so XLA updates the optimizer state in place.  Callers
+# hand ownership over — the model classes reassign from the return value;
+# anything re-running a fit from the SAME initial state must pass copies
+# (``tests/test_pipeline.py`` pins that donated fits still match the loop
+# references and that the inputs really are consumed).
+@partial(jax.jit, static_argnames=("opt", "steps"), donate_argnums=(0, 1))
 def _fit_filter_jit(params, opt_state, x, y, mask, *, opt: Adam, steps: int):
     return _scan_fit(masked_mse, opt, params, opt_state, (x, y, mask), steps)
 
 
-@partial(jax.jit, static_argnames=("opt", "steps"))
+@partial(jax.jit, static_argnames=("opt", "steps"), donate_argnums=(0, 1))
 def _fit_dkl_jit(params, opt_state, x, y, mask, *, opt: Adam, steps: int):
     return _scan_fit(masked_nlml, opt, params, opt_state, (x, y, mask), steps)
 

@@ -22,10 +22,13 @@ Two row-wise reductions sit on the engine's hot path:
   precomputed ``K^-1`` / ``K^-1 y``, and the lower-confidence-bound score,
   all in one pass.
 
-Both kernels tile rows across the grid and keep the full reduction axis in
-one VMEM block; off-TPU they run in ``interpret=True`` mode (this container's
-validation path), matching the pure-jnp semantics bit-for-bit — which the
-engine relies on for its 1e-6 parity contract with the scalar cost model.
+The kernels tile rows across the grid; most keep the full reduction axis in
+one VMEM block, while ``delta_maxload_rows`` *streams* the link axis (the
+innermost grid dimension walks link tiles with a running max in the
+revisited output block, double-buffered by the Pallas pipeline).  Off-TPU
+they run in ``interpret=True`` mode (this container's validation path),
+matching the pure-jnp semantics bit-for-bit — which the engine relies on
+for its 1e-6 parity contract with the scalar cost model.
 """
 
 from __future__ import annotations
@@ -245,27 +248,40 @@ def lcb_rows(zq, zt, alpha, kinv, valid, ls2, sf2, beta, *,
     return out[:q]
 
 
-def _delta_maxload_rows_kernel(b_ref, d_ref, o_ref):
-    o_ref[...] = jnp.max(b_ref[...][:, None, :] + d_ref[...], axis=-1)
+def _delta_maxload_rows_kernel(b_ref, d_ref, w_ref, o_ref):
+    # streaming running-max: the link (E) axis is the innermost grid dim,
+    # so the output block is revisited across link tiles — Pallas
+    # double-buffers the (base, delta) tile loads while the previous tile
+    # reduces, and the full E axis never has to fit in one VMEM block
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref[...], -jnp.inf)
+    d = d_ref[...].astype(o_ref.dtype) * w_ref[...][..., None]
+    part = jnp.max(b_ref[...][:, None, :] + d, axis=-1)
+    o_ref[...] = jnp.maximum(o_ref[...], part)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def _delta_maxload_rows(base, deltas, *, block_m: int, interpret: bool):
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_e", "interpret"))
+def _delta_maxload_rows(base, deltas, weights, *, block_m: int,
+                        block_e: int, interpret: bool):
     r, m, e = deltas.shape
-    grid = (r, pl.cdiv(m, block_m))
+    grid = (r, pl.cdiv(m, block_m), pl.cdiv(e, block_e))
     return pl.pallas_call(
         _delta_maxload_rows_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, e), lambda i, j: (i, 0)),
-                  pl.BlockSpec((1, block_m, e), lambda i, j: (i, j, 0))],
-        out_specs=pl.BlockSpec((1, block_m), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, m), deltas.dtype),
+        in_specs=[pl.BlockSpec((1, block_e), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((1, block_m, block_e),
+                               lambda i, j, k: (i, j, k)),
+                  pl.BlockSpec((1, block_m), lambda i, j, k: (i, j))],
+        out_specs=pl.BlockSpec((1, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, m), base.dtype),
         interpret=interpret,
-    )(base, deltas)
+    )(base, deltas, weights)
 
 
-def delta_maxload_rows(base, deltas, *, block_m: int = 128,
-                       interpret: bool | None = None):
+def delta_maxload_rows(base, deltas, weights=None, *, block_m: int = 128,
+                       block_e: int = 512, interpret: bool | None = None):
     """``([R, E] base, [R, M, E] deltas) -> [R, M] max(base + delta)``.
 
     The engine Data-Scheduler's fused move-scoring reduction: row ``r`` is
@@ -273,17 +289,39 @@ def delta_maxload_rows(base, deltas, *, block_m: int = 128,
     delta of its ``m``-th proposed segment reversal, and the output the
     proposal's Eq. 4 objective — the broadcast add and the max-link
     reduction fused in one pass instead of materializing ``base + delta``.
+
+    ``weights [R, M]`` optionally scales each proposal's delta slab
+    in-kernel (``base + deltas * w``): the scheduler passes its small-int
+    flip *counts* (int16) plus the per-set byte weight, so the f32 ``[R, M,
+    E]`` delta tensor is never materialized in memory (XLA may fuse the
+    scale-and-add into an FMA, so this path can differ from the unfused
+    two-op reference by 1 ulp — scheduler acceptance is protected by its
+    exact-f64 gate, never by these scores).  The link axis is
+    *streamed*: the grid's innermost dimension walks ``block_e``-wide link
+    tiles with a running max in the revisited output block, so the 960-link
+    16x16 mesh no longer needs the whole E axis resident per block.
     """
     interpret = _default_interpret() if interpret is None else interpret
     base = jnp.asarray(base)
     deltas = jnp.asarray(deltas)
     r, m, e = deltas.shape
+    if weights is None:
+        weights = jnp.ones((r, m), base.dtype)
+    weights = jnp.asarray(weights, base.dtype)
     block_m = max(1, min(block_m, m))
-    pad = (-m) % block_m
-    if pad:
-        deltas = jnp.pad(deltas, ((0, 0), (0, pad), (0, 0)))
-    out = _delta_maxload_rows(base, deltas, block_m=block_m,
-                              interpret=interpret)
+    block_e = max(1, min(block_e, e))
+    pad_m = (-m) % block_m
+    if pad_m:
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad_m), (0, 0)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad_m)))
+    pad_e = (-e) % block_e
+    if pad_e:
+        # padded links must not win the max: -inf base, zero delta
+        base = jnp.pad(base, ((0, 0), (0, pad_e)),
+                       constant_values=-jnp.inf)
+        deltas = jnp.pad(deltas, ((0, 0), (0, 0), (0, pad_e)))
+    out = _delta_maxload_rows(base, deltas, weights, block_m=block_m,
+                              block_e=block_e, interpret=interpret)
     return out[:, :m]
 
 

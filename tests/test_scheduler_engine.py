@@ -321,6 +321,29 @@ def test_delta_maxload_rows_numpy_parity():
         np.testing.assert_allclose(got, ref, rtol=1e-6)
 
 
+def test_delta_maxload_rows_weighted_int16_parity():
+    """The scheduler's streamed form: int16 flip counts scaled in-kernel.
+
+    ``_scan_solve`` passes small-int flip counts (int16) as ``deltas`` and
+    the per-set byte weight as ``weights`` so the f32 [R, M, E] slab is
+    never materialized; the link axis streams in ``block_e`` tiles with a
+    running max.  Pin all of that against the unfused numpy reference.
+    """
+    from repro.kernels import dse_eval
+    rng = np.random.default_rng(1)
+    for r, m, e in ((2, 3, 24), (4, 17, 960), (1, 128, 60)):
+        base = (rng.normal(size=(r, e)) * 1e4).astype(np.float32)
+        cnt = rng.integers(-2, 3, size=(r, m, e)).astype(np.int16)
+        w = rng.uniform(0.5, 8192.0, size=(r, m)).astype(np.float32)
+        ref = (base[:, None, :]
+               + cnt.astype(np.float32) * w[:, :, None]).max(axis=-1)
+        for block_e in (512, 64, 7):   # 7 forces ragged -inf link padding
+            got = np.asarray(dse_eval.delta_maxload_rows(
+                base, cnt, w, block_e=block_e, interpret=True))
+            # in-kernel scale-and-add may fuse to an FMA: 1-ulp tolerance
+            np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # evaluate_mapping threading: batched prefill == per-layer path
 # ---------------------------------------------------------------------------
