@@ -1,6 +1,7 @@
 """Benchmark harness entry point: one reproduction per paper figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--skip fig9,...]
+    PYTHONPATH=src python -m benchmarks.run --lint   # pimlint, no figures
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract,
 persists raw rows to experiments/paper_benchmarks.json, writes the
@@ -20,16 +21,26 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
-from benchmarks import (engine_throughput, fig9_dse, fig10_mapper, fig11_ddam,
-                        fig12_scheduler, mapper_throughput,
-                        scheduler_throughput, tuner_throughput)
-
-
 BENCH_ID = 6
 BENCH_SCHEMA = "nicepim-bench/1"
+LINT_ID = 8
 
 
 def main() -> None:
+    # --lint short-circuits before the figure imports: it runs the same
+    # code path as ``python -m repro.analysis`` (rules, baseline, exit
+    # codes) and writes the experiments/LINT_8.json artifact CI uploads
+    if "--lint" in sys.argv[1:]:
+        from repro.analysis.__main__ import main as lint_main
+        extra = [a for a in sys.argv[1:] if a != "--lint"]
+        sys.exit(lint_main(["--root", str(ROOT), "--json",
+                            str(ROOT / "experiments" / f"LINT_{LINT_ID}.json")]
+                           + extra))
+
+    from benchmarks import (engine_throughput, fig9_dse, fig10_mapper,
+                            fig11_ddam, fig12_scheduler, mapper_throughput,
+                            scheduler_throughput, tuner_throughput)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size Fig.9/11 workloads too")

@@ -1,0 +1,44 @@
+"""pimlint: repo-specific static analysis for the engine's jit invariants.
+
+The jitted DSE engine (PRs 1-7) rests on invariants that are only exercised
+at runtime — donation pins, ``transfer_guard`` replays, pow2-bucketed
+program-count bounds, Pallas parity tests — and several past bugs (the
+weak-typed ``log_sn`` recompile in PR 4, the dropped seed in PR 1, the
+unbounded mapper memos in PR 3) are exactly the class a linter catches
+before CI runs.  This package is an AST-based lint pass with per-rule
+checkers targeting this repo's specific hazards:
+
+========  ==============  ====================================================
+id        name            hazard
+========  ==============  ====================================================
+PIM001    host-sync       ``float()``/``int()``/``.item()``/``np.asarray`` on
+                          values flowing out of jitted functions in
+                          ``engine/`` / ``kernels/`` hot paths
+PIM002    retrace         weak-typed scalar closures in jitted callees,
+                          jit call sites bypassing the pow2/pow4 bucketing
+                          helpers, jit objects missing from ``_JITTED``
+PIM003    use-after-donate reads of an argument after it was passed in a
+                          ``donate_argnums`` position
+PIM004    cache-hygiene   ``lru_cache(maxsize=None)`` in library code; memos
+                          missing from ``clear_mapper_caches()`` /
+                          ``mapper_cache_stats()``
+PIM005    rng-seed        unseeded ``random`` / ``np.random`` use in engine
+                          or benchmark code
+PIM006    kernel-parity   Pallas kernels exported from ``kernels/dse_eval.py``
+                          without a numpy-parity test under ``tests/``
+========  ==============  ====================================================
+
+Run with ``python -m repro.analysis`` (stdlib only, no third-party deps).
+Intentional cases carry an inline ``# pimlint: disable=<rule>`` suppression
+with a rationale, or live in the committed baseline file
+(``pimlint.baseline.json``); CI fails on any NEW finding.
+"""
+
+from .core import (Finding, LintModule, LintResult, load_baseline, run_lint,
+                   save_baseline)
+from .rules import ALL_RULES, rule_by_key
+
+__all__ = [
+    "ALL_RULES", "Finding", "LintModule", "LintResult", "load_baseline",
+    "rule_by_key", "run_lint", "save_baseline",
+]

@@ -1,0 +1,137 @@
+"""``python -m repro.analysis`` — the pimlint CLI.
+
+Exit codes:
+
+* 0 — no new findings (suppressed / baselined ones are fine)
+* 1 — new findings present
+* 2 — usage or internal error (unreadable baseline, no files scanned)
+
+``--json PATH`` additionally writes the machine-readable report CI uploads
+as ``experiments/LINT_8.json``.  When ``repro.obs.metrics`` is importable
+the per-rule totals are mirrored into ``lint.findings.{rule}`` counters so
+lint volume shows up next to the campaign metrics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import (default_targets, load_baseline, run_lint, save_baseline)
+from .rules import ALL_RULES, rule_by_key
+
+
+def _publish_metrics(result) -> None:
+    """Best-effort mirror of per-rule counts into the obs metrics registry."""
+    try:
+        from repro.obs.metrics import METRICS
+    except Exception:
+        return
+    for rule, row in result.counts().items():
+        METRICS.counter(f"lint.findings.{row['name']}").inc(
+            row["new"] + row["baselined"])
+
+
+def _report(result, root: Path) -> dict:
+    status = "clean" if not result.findings else "dirty"
+    return {
+        "schema": "nicepim-lint/1",
+        "status": status,
+        "files_scanned": result.files_scanned,
+        "parse_errors": result.parse_errors,
+        "rules": {r.id: {"name": r.name} for r in ALL_RULES},
+        "counts": result.counts(),
+        "new_findings": [f.to_dict() for f in result.findings],
+        "baselined": len(result.baselined),
+        "suppressed": len(result.suppressed),
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="pimlint: jit/donation/cache invariant checks")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files or directories to lint "
+                             "(default: <root>/src and <root>/benchmarks)")
+    parser.add_argument("--root", type=Path, default=Path.cwd(),
+                        help="repo root findings are reported relative to")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help="baseline file "
+                             "(default: <root>/pimlint.baseline.json)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline file entirely")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="grandfather every current finding and exit 0")
+    parser.add_argument("--json", type=Path, default=None, metavar="PATH",
+                        help="write the machine-readable report here")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule table and exit")
+    parser.add_argument("--rule", action="append", default=None,
+                        metavar="KEY", help="run only this rule "
+                        "(id or name; repeatable)")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id}  {rule.name}")
+            print(f"    hint: {rule.hint}")
+        return 0
+
+    root = args.root.resolve()
+    baseline_path = args.baseline or (root / "pimlint.baseline.json")
+    baseline = None
+    if not args.no_baseline and not args.write_baseline:
+        try:
+            baseline = load_baseline(baseline_path)
+        except (ValueError, json.JSONDecodeError) as exc:
+            print(f"pimlint: error: {exc}", file=sys.stderr)
+            return 2
+
+    rules = None
+    if args.rule:
+        rules = []
+        for key in args.rule:
+            rule = rule_by_key(key)
+            if rule is None:
+                print(f"pimlint: error: unknown rule {key!r}",
+                      file=sys.stderr)
+                return 2
+            rules.append(rule)
+
+    targets = [p.resolve() for p in args.paths] or default_targets(root)
+    result = run_lint(root, targets, rules=rules, baseline=baseline)
+
+    if result.files_scanned == 0:
+        print("pimlint: error: no python files scanned", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        save_baseline(baseline_path, result.findings + result.baselined)
+        print(f"pimlint: wrote {len(result.findings) + len(result.baselined)}"
+              f" finding(s) to {baseline_path}")
+        return 0
+
+    _publish_metrics(result)
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(
+            json.dumps(_report(result, root), indent=1) + "\n")
+
+    for f in result.findings:
+        print(f.render())
+    summary = (f"pimlint: {result.files_scanned} files, "
+               f"{len(result.findings)} new finding(s), "
+               f"{len(result.baselined)} baselined, "
+               f"{len(result.suppressed)} suppressed")
+    print(summary)
+    if result.parse_errors:
+        for p in result.parse_errors:
+            print(f"pimlint: warning: could not parse {p}", file=sys.stderr)
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,298 @@
+"""Checker framework: file discovery, suppressions, baselines, findings.
+
+The framework is deliberately stdlib-only (``ast`` + ``re`` + ``json``) so
+the lint step costs nothing to run on a bare interpreter — CI runs it
+before any heavyweight import.
+
+Suppression syntax (matched by rule id ``PIM004`` or name
+``cache-hygiene``, case-insensitive; ``all`` matches every rule):
+
+* same line::
+
+      @lru_cache(maxsize=None)   # pimlint: disable=cache-hygiene -- why
+
+* next line::
+
+      # pimlint: disable-next-line=host-sync -- the sanctioned pull
+      out = np.asarray(jitted(x))
+
+* whole file (anywhere in the file)::
+
+      # pimlint: disable-file=rng-seed -- fuzzing entry point, unseeded on purpose
+
+Baseline: ``pimlint.baseline.json`` holds fingerprints of grandfathered
+findings.  A fingerprint hashes (rule, path, normalized source line) — NOT
+the line number — so unrelated edits above a baselined finding don't
+resurrect it.  ``--write-baseline`` refreshes the file.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+#: directory names never descended into (fixture corpora must not lint the
+#: real tree's rules against themselves)
+EXCLUDED_DIRS = {"__pycache__", ".git", ".pytest_cache", "fixtures",
+                 "node_modules", ".eggs", "build", "dist"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*pimlint:\s*(disable|disable-next-line|disable-file)"
+    r"\s*=\s*([A-Za-z0-9_,\- ]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding: file:line, rule id, message, and a fix hint."""
+
+    rule: str                 # "PIM004"
+    name: str                 # "cache-hygiene"
+    path: str                 # posix relpath from the lint root
+    line: int
+    col: int
+    message: str
+    hint: str
+    source_line: str = ""     # stripped text of the anchor line
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable id for baseline matching (line-number independent)."""
+        basis = f"{self.rule}|{self.path}|{self.source_line}"
+        return hashlib.sha1(basis.encode()).hexdigest()[:16]
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule}"
+                f"({self.name}) {self.message}\n    hint: {self.hint}")
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "name": self.name, "path": self.path,
+                "line": self.line, "col": self.col, "message": self.message,
+                "hint": self.hint, "fingerprint": self.fingerprint}
+
+
+class _Suppressions:
+    """Per-file suppression table parsed from the raw source."""
+
+    def __init__(self, text: str):
+        self.by_line: dict[int, set[str]] = {}
+        self.whole_file: set[str] = set()
+        for i, ln in enumerate(text.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(ln)
+            if not m:
+                continue
+            kind = m.group(1)
+            # everything after ``--`` is the human rationale, not a rule key
+            keys = {k.strip().lower()
+                    for k in m.group(2).split("--")[0].split(",") if k.strip()}
+            if kind == "disable":
+                self.by_line.setdefault(i, set()).update(keys)
+            elif kind == "disable-next-line":
+                self.by_line.setdefault(i + 1, set()).update(keys)
+            else:
+                self.whole_file.update(keys)
+
+    def matches(self, finding: Finding) -> bool:
+        keys = self.whole_file | self.by_line.get(finding.line, set())
+        return bool(keys & {"all", finding.rule.lower(),
+                            finding.name.lower()})
+
+
+@dataclass
+class LintModule:
+    """One parsed source file plus the path-derived rule scopes."""
+
+    path: Path
+    relpath: str              # posix, relative to the lint root
+    text: str
+    tree: ast.Module
+    lines: list[str] = field(default_factory=list)
+    suppressions: _Suppressions | None = None
+
+    @property
+    def segments(self) -> set[str]:
+        return set(Path(self.relpath).parts)
+
+    def in_scope(self, *names: str) -> bool:
+        """True if any path segment matches (``engine``, ``kernels``, ...)."""
+        return bool(self.segments & set(names))
+
+    @property
+    def is_library(self) -> bool:
+        """Library code = everything outside tests/ and benchmarks/."""
+        return not self.in_scope("tests", "benchmarks")
+
+    def source_line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule, node_or_line, message: str,
+                col: int = 0) -> Finding:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 1))
+        col = (col if isinstance(node_or_line, int)
+               else getattr(node_or_line, "col_offset", 0))
+        return Finding(rule=rule.id, name=rule.name, path=self.relpath,
+                       line=line, col=col, message=message, hint=rule.hint,
+                       source_line=self.source_line(line))
+
+
+@dataclass
+class LintContext:
+    """Everything the rules see: parsed modules + the tests reference corpus."""
+
+    root: Path
+    modules: list[LintModule]
+    test_sources: list[tuple[str, str]]   # (relpath, text) under tests/
+
+
+@dataclass
+class LintResult:
+    findings: list[Finding]               # new (not suppressed, not baselined)
+    suppressed: list[Finding]
+    baselined: list[Finding]
+    files_scanned: int
+    parse_errors: list[str] = field(default_factory=list)
+
+    @property
+    def all_active(self) -> list[Finding]:
+        """Everything real in the tree right now (new + baselined)."""
+        return self.baselined + self.findings
+
+    def counts(self) -> dict[str, dict[str, int]]:
+        out: dict[str, dict[str, int]] = {}
+        for kind, items in (("new", self.findings),
+                            ("suppressed", self.suppressed),
+                            ("baselined", self.baselined)):
+            for f in items:
+                row = out.setdefault(f.rule, {"name": f.name, "new": 0,
+                                              "suppressed": 0,
+                                              "baselined": 0})
+                row[kind] += 1
+        return out
+
+
+def iter_python_files(paths: list[Path]):
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for sub in sorted(p.rglob("*.py")):
+                if not EXCLUDED_DIRS & set(sub.relative_to(p).parts[:-1]):
+                    yield sub
+
+
+def _load_module(path: Path, root: Path) -> LintModule | None:
+    text = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError:
+        return None
+    rel = path.resolve().relative_to(root.resolve()).as_posix() \
+        if path.resolve().is_relative_to(root.resolve()) else path.as_posix()
+    mod = LintModule(path=path, relpath=rel, text=text, tree=tree,
+                     lines=text.splitlines())
+    mod.suppressions = _Suppressions(text)
+    return mod
+
+
+def default_targets(root: Path) -> list[Path]:
+    """The repo's lintable surface: library sources + benchmarks."""
+    out = []
+    for cand in ("src", "benchmarks"):
+        if (root / cand).is_dir():
+            out.append(root / cand)
+    return out or [root]
+
+
+def load_context(root: Path, targets: list[Path] | None = None) -> LintContext:
+    root = root.resolve()
+    targets = targets or default_targets(root)
+    modules, errors = [], []
+    for path in iter_python_files(targets):
+        mod = _load_module(path, root)
+        if mod is None:
+            errors.append(str(path))
+        else:
+            modules.append(mod)
+    test_sources: list[tuple[str, str]] = []
+    tests_dir = root / "tests"
+    if tests_dir.is_dir():
+        for path in iter_python_files([tests_dir]):
+            rel = path.relative_to(root).as_posix()
+            test_sources.append((rel, path.read_text(encoding="utf-8")))
+    ctx = LintContext(root=root, modules=modules, test_sources=test_sources)
+    ctx.parse_errors = errors  # type: ignore[attr-defined]
+    return ctx
+
+
+def run_lint(root: Path | str, targets: list[Path] | None = None, *,
+             rules=None, baseline: dict | None = None) -> LintResult:
+    """Run every rule over ``root`` and split findings by disposition."""
+    from .rules import ALL_RULES
+    root = Path(root)
+    ctx = load_context(root, targets)
+    rules = ALL_RULES if rules is None else rules
+    raw: list[Finding] = []
+    for rule in rules:
+        for mod in ctx.modules:
+            raw.extend(rule.check_module(mod, ctx))
+        raw.extend(rule.finalize(ctx))
+    raw.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    by_path = {m.relpath: m for m in ctx.modules}
+    new, suppressed, baselined = [], [], []
+    budget: dict[tuple[str, str, str], int] = {}
+    for entry in (baseline or {}).get("findings", []):
+        key = (entry["rule"], entry["path"], entry["fingerprint"])
+        budget[key] = budget.get(key, 0) + 1
+    for f in raw:
+        mod = by_path.get(f.path)
+        if mod is not None and mod.suppressions.matches(f):
+            suppressed.append(f)
+            continue
+        key = (f.rule, f.path, f.fingerprint)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            baselined.append(f)
+        else:
+            new.append(f)
+    return LintResult(findings=new, suppressed=suppressed,
+                      baselined=baselined, files_scanned=len(ctx.modules),
+                      parse_errors=getattr(ctx, "parse_errors", []))
+
+
+# ---------------------------------------------------------------------------
+# Baseline I/O
+# ---------------------------------------------------------------------------
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: Path | str) -> dict:
+    path = Path(path)
+    if not path.exists():
+        return {"version": BASELINE_VERSION, "findings": []}
+    data = json.loads(path.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {path}: "
+                         f"{data.get('version')!r}")
+    return data
+
+
+def save_baseline(path: Path | str, findings: list[Finding]) -> None:
+    """Persist the current findings as the new grandfathered set.
+
+    Every entry carries a ``reason`` slot — fill it in before committing;
+    an unexplained baseline entry defeats the point of the gate.
+    """
+    entries = [{"rule": f.rule, "path": f.path, "line": f.line,
+                "fingerprint": f.fingerprint, "source": f.source_line,
+                "reason": "TODO: justify this grandfathered finding"}
+               for f in findings]
+    Path(path).write_text(json.dumps(
+        {"version": BASELINE_VERSION, "findings": entries}, indent=1) + "\n")

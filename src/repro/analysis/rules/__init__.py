@@ -1,0 +1,34 @@
+"""The six pimlint rules, instantiated once."""
+
+from __future__ import annotations
+
+from .base import Rule
+from .caches import CacheHygieneRule
+from .donation import UseAfterDonateRule
+from .host_sync import HostSyncRule
+from .parity import KernelParityRule
+from .retrace import RetraceRule
+from .rng import RngSeedRule
+
+ALL_RULES: list[Rule] = [
+    HostSyncRule(),
+    RetraceRule(),
+    UseAfterDonateRule(),
+    CacheHygieneRule(),
+    RngSeedRule(),
+    KernelParityRule(),
+]
+
+
+def rule_by_key(key: str) -> Rule | None:
+    """Look a rule up by id (``PIM001``) or name (``host-sync``)."""
+    key = key.lower()
+    for rule in ALL_RULES:
+        if key in (rule.id.lower(), rule.name.lower()):
+            return rule
+    return None
+
+
+__all__ = ["ALL_RULES", "Rule", "rule_by_key", "HostSyncRule",
+           "RetraceRule", "UseAfterDonateRule", "CacheHygieneRule",
+           "RngSeedRule", "KernelParityRule"]

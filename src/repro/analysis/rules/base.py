@@ -1,0 +1,19 @@
+"""Rule protocol: per-module checks plus a cross-file finalize pass."""
+
+from __future__ import annotations
+
+
+class Rule:
+    """One checker.  Subclasses set ``id``/``name``/``hint`` and override
+    :meth:`check_module` (per file) and/or :meth:`finalize` (cross-file,
+    runs once after every module was visited)."""
+
+    id: str = "PIM000"
+    name: str = "base"
+    hint: str = ""
+
+    def check_module(self, mod, ctx):
+        return []
+
+    def finalize(self, ctx):
+        return []

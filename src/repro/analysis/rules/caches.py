@@ -1,0 +1,148 @@
+"""PIM004 cache-hygiene: unbounded memos and unregistered mapper caches.
+
+PR 3's mapper memos grew without bound until campaigns leaked memory across
+hardware configs; the fix was (a) bounds on every memo and (b) a central
+``clear_mapper_caches()`` / ``mapper_cache_stats()`` registry the campaign
+calls between configs and the metrics layer snapshots.  Two sub-checks keep
+that true:
+
+* ``lru_cache(maxsize=None)`` (or ``functools.cache``) anywhere in library
+  code — an unbounded memo grows with every distinct key for the life of
+  the process;
+* module-level memos (``_BoundedCache`` instances, ``lru_cache``-decorated
+  functions) in the module that defines ``clear_mapper_caches`` must be
+  referenced by BOTH the clear function and ``mapper_cache_stats`` —
+  a memo outside the registry silently survives config changes and is
+  invisible to the ``mapper.memo.*`` gauges.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule
+from .common import call_name, names_in
+
+_LRU_NAMES = {"lru_cache", "functools.lru_cache"}
+_UNBOUNDED_CACHE = {"cache", "functools.cache"}
+
+
+def _lru_call_unbounded(node: ast.Call) -> bool:
+    if call_name(node) not in _LRU_NAMES:
+        return False
+    if node.args:
+        a = node.args[0]
+        return isinstance(a, ast.Constant) and a.value is None
+    for kw in node.keywords:
+        if kw.arg == "maxsize":
+            return (isinstance(kw.value, ast.Constant)
+                    and kw.value.value is None)
+    return False
+
+
+class CacheHygieneRule(Rule):
+    id = "PIM004"
+    name = "cache-hygiene"
+    hint = ("give the memo an explicit maxsize (or use _BoundedCache) and, "
+            "if it is keyed by hardware config, register it in "
+            "clear_mapper_caches()/mapper_cache_stats() so long campaigns "
+            "stay flat and the mapper.memo.* gauges can see it")
+
+    def check_module(self, mod, ctx):
+        findings = []
+        if mod.is_library:
+            findings += self._unbounded(mod)
+        findings += self._registry(mod)
+        return findings
+
+    def _unbounded(self, mod):
+        findings = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and _lru_call_unbounded(node):
+                findings.append(mod.finding(
+                    self, node,
+                    "`lru_cache(maxsize=None)` is an unbounded memo — it "
+                    "grows with every distinct key for the process "
+                    "lifetime"))
+            elif (isinstance(node, (ast.Name, ast.Attribute))
+                  and self._is_cache_decorator(mod, node)):
+                findings.append(mod.finding(
+                    self, node,
+                    "`functools.cache` is unbounded — use "
+                    "lru_cache(maxsize=...) instead"))
+        return findings
+
+    @staticmethod
+    def _is_cache_decorator(mod, node) -> bool:
+        from .common import dotted
+        if dotted(node) not in _UNBOUNDED_CACHE:
+            return False
+        # only when used as a decorator (a bare Name load of a local
+        # variable called "cache" must not trip this)
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node in fn.decorator_list:
+                return True
+        return False
+
+    # -- the clear/stats registry ------------------------------------------
+
+    def _registry(self, mod):
+        clear_fn = stats_fn = None
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.FunctionDef):
+                if stmt.name == "clear_mapper_caches":
+                    clear_fn = stmt
+                elif stmt.name == "mapper_cache_stats":
+                    stats_fn = stmt
+        if clear_fn is None or stats_fn is None:
+            return []
+        # module-level memos: _BoundedCache(...) assignments and
+        # lru_cache-decorated defs
+        memos: list[tuple[str, int]] = []
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and isinstance(stmt.value, ast.Call) \
+                    and (call_name(stmt.value) or "").endswith(
+                        "_BoundedCache"):
+                memos.append((stmt.targets[0].id, stmt.lineno))
+            elif isinstance(stmt, ast.FunctionDef):
+                for dec in stmt.decorator_list:
+                    if isinstance(dec, ast.Call) \
+                            and call_name(dec) in _LRU_NAMES:
+                        memos.append((stmt.name, stmt.lineno))
+        clear_names = names_in(clear_fn)
+        stats_names = names_in(stats_fn)
+        # one level of shim aliasing: ``fn.cache_clear = MEMO.clear`` makes
+        # MEMO reachable through fn (the _sharing_latency pattern)
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Attribute) \
+                    and isinstance(stmt.targets[0].value, ast.Name):
+                via = stmt.targets[0].value.id
+                aliased = names_in(stmt.value)
+                if via in clear_names:
+                    clear_names |= aliased
+                if via in stats_names:
+                    stats_names |= aliased
+        # helper functions called by stats can reference the memo too
+        helper_defs = {s.name: s for s in mod.tree.body
+                       if isinstance(s, ast.FunctionDef)}
+        for pool in (clear_names, stats_names):
+            for name in list(pool):
+                if name in helper_defs and name not in (
+                        "clear_mapper_caches", "mapper_cache_stats"):
+                    pool |= names_in(helper_defs[name])
+        findings = []
+        for name, lineno in memos:
+            missing = [what for what, pool in
+                       (("clear_mapper_caches", clear_names),
+                        ("mapper_cache_stats", stats_names))
+                       if name not in pool]
+            if missing:
+                findings.append(mod.finding(
+                    self, lineno,
+                    f"memo `{name}` is missing from {' and '.join(missing)}"
+                    f" — it will survive config changes unseen"))
+        return findings

@@ -1,0 +1,145 @@
+"""Shared AST helpers: dotted-name resolution and jit-object discovery."""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> str | None:
+    return dotted(call.func)
+
+
+def is_jax_jit_expr(node: ast.AST) -> ast.Call | None:
+    """The ``jax.jit(...)``/``partial(jax.jit, ...)`` call under ``node``.
+
+    Returns the call whose keywords carry ``donate_argnums`` /
+    ``static_argnames`` (the outer ``partial`` for the partial form), or
+    None when ``node`` is not a jit-wrapping expression.  Covers::
+
+        @jax.jit                    /  @partial(jax.jit, ...)
+        @functools.partial(jax.jit, ...)
+        f = jax.jit(g)              /  f = jax.jit(lambda ...)
+    """
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in ("jax.jit", "jit"):
+            return node
+        if name in ("partial", "functools.partial") and node.args:
+            inner = dotted(node.args[0])
+            if inner in ("jax.jit", "jit"):
+                return node
+    elif dotted(node) in ("jax.jit",):
+        # bare ``@jax.jit`` decorator: synthesize an argument-less call so
+        # callers read donation/static info uniformly
+        fake = ast.Call(func=node, args=[], keywords=[])
+        return fake
+    return None
+
+
+def _int_tuple(node: ast.AST) -> tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+        return tuple(out)
+    return ()
+
+
+@dataclass
+class JitObject:
+    """One module-level jit-compiled object."""
+
+    name: str
+    node: ast.AST                     # the def or assign statement
+    lineno: int
+    donate: tuple[int, ...] = ()
+    func_def: ast.FunctionDef | None = None   # body available for defs
+
+
+@dataclass
+class ModuleJits:
+    """Module-level jit objects plus names importable as jitted."""
+
+    objects: dict[str, JitObject] = field(default_factory=dict)
+    imported: set[str] = field(default_factory=set)
+
+    @property
+    def names(self) -> set[str]:
+        return set(self.objects) | self.imported
+
+
+def collect_module_jits(tree: ast.Module) -> ModuleJits:
+    """Find jit objects defined (or imported by ``_jit`` convention) here."""
+    out = ModuleJits()
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in stmt.decorator_list:
+                call = is_jax_jit_expr(dec)
+                if call is not None:
+                    donate = ()
+                    for kw in call.keywords:
+                        if kw.arg == "donate_argnums":
+                            donate = _int_tuple(kw.value)
+                    out.objects[stmt.name] = JitObject(
+                        name=stmt.name, node=stmt, lineno=stmt.lineno,
+                        donate=donate, func_def=stmt)
+        elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            call = is_jax_jit_expr(stmt.value)
+            if call is not None:
+                name = stmt.targets[0].id
+                donate = ()
+                for kw in getattr(call, "keywords", []):
+                    if kw.arg == "donate_argnums":
+                        donate = _int_tuple(kw.value)
+                out.objects[name] = JitObject(name=name, node=stmt,
+                                              lineno=stmt.lineno,
+                                              donate=donate)
+        elif isinstance(stmt, ast.ImportFrom):
+            for alias in stmt.names:
+                local = alias.asname or alias.name
+                if local.endswith("_jit"):
+                    out.imported.add(local)
+    return out
+
+
+def jitted_registry_names(tree: ast.Module) -> set[str]:
+    """Names registered in a module-level ``_JITTED = {...}`` dict literal."""
+    names: set[str] = set()
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id == "_JITTED" \
+                and isinstance(stmt.value, ast.Dict):
+            for v in stmt.value.values:
+                name = dotted(v)
+                if name:
+                    names.add(name.split(".")[-1])
+    return names
+
+
+def walk_functions(tree: ast.Module):
+    """Every (possibly nested) function definition in the module."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}

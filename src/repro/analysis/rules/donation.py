@@ -1,0 +1,93 @@
+"""PIM003 use-after-donate: reads of a buffer after XLA took ownership.
+
+``donate_argnums`` lets XLA alias an argument's buffer into the output
+(the engine donates the Adam (params, opt_state) pairs and the scheduler's
+(cycles, loads) hot state).  Reading the donated python reference afterward
+returns a deleted array — an error at best, silent garbage under some
+backends.  ``tests/test_pipeline.py`` pins donation at runtime with
+``.is_deleted()``; this rule catches the misuse pattern at review time.
+
+The checker collects every module-level jit definition carrying
+``donate_argnums`` across the whole lint run, then flags call sites that
+pass a bare name in a donated position and read that name again later in
+the same function without rebinding it first.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule
+from .common import call_name, collect_module_jits
+
+
+class UseAfterDonateRule(Rule):
+    id = "PIM003"
+    name = "use-after-donate"
+    hint = ("rebind the name from the call's return value (params, state = "
+            "fit(params, state, ...)) or pass a fresh copy; a donated "
+            "buffer must never be read again")
+
+    def finalize(self, ctx):
+        # donating functions are resolved by simple name across the repo:
+        # the engine's donating entry points have unique names and call
+        # sites import them directly
+        donors: dict[str, tuple[int, ...]] = {}
+        for mod in ctx.modules:
+            for obj in collect_module_jits(mod.tree).objects.values():
+                if obj.donate:
+                    donors[obj.name] = obj.donate
+        if not donors:
+            return []
+        findings = []
+        for mod in ctx.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    findings.extend(
+                        self._check_function(mod, node, donors))
+        return findings
+
+    def _check_function(self, mod, fn, donors):
+        findings = []
+        # flat, line-ordered event stream of the function body: donation
+        # call sites, name loads, name stores
+        calls = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = (call_name(node) or "").split(".")[-1]
+                if name in donors:
+                    calls.append((node, name))
+        if not calls:
+            return findings
+        loads: dict[str, list[int]] = {}
+        stores: dict[str, list[int]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name):
+                target = (loads if isinstance(node.ctx, ast.Load)
+                          else stores)
+                target.setdefault(node.id, []).append(node.lineno)
+        for call, name in calls:
+            for pos in donors[name]:
+                if pos >= len(call.args):
+                    continue
+                arg = call.args[pos]
+                if not isinstance(arg, ast.Name):
+                    continue   # temporaries (device_put(...), literals) die
+                end = getattr(call, "end_lineno", call.lineno)
+                # a store at the call's own line is the canonical rebind
+                # from the return value (x, s = fit(x, s, ...))
+                rebind = min((ln for ln in stores.get(arg.id, [])
+                              if ln >= call.lineno), default=None)
+                for ln in sorted(loads.get(arg.id, [])):
+                    if ln <= end:
+                        continue
+                    if rebind is not None and ln >= rebind:
+                        break
+                    findings.append(mod.finding(
+                        self, ln,
+                        f"`{arg.id}` is read after being donated to "
+                        f"`{name}` (donate_argnums position {pos}, call at "
+                        f"line {call.lineno}) — the buffer belongs to XLA "
+                        f"now"))
+                    break   # one finding per donated arg is enough
+        return findings

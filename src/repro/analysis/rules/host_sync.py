@@ -1,0 +1,170 @@
+"""PIM001 host-sync: device->host pulls on jit-produced values in hot paths.
+
+Every ``float()`` / ``int()`` / ``.item()`` / ``np.asarray()`` applied to a
+value that flows out of a jitted function blocks the host on the XLA
+computation.  In ``engine/`` and ``kernels/`` — the per-dispatch hot paths —
+those syncs are exactly what PRs 5-7 spent their effort removing (the
+device-resident pipeline's contract is ONE host sync per proposal wave).
+
+The checker runs a per-function forward taint walk: names assigned from a
+call to a known-jitted object (module-level ``@jax.jit`` defs, ``x =
+jax.jit(...)`` objects, imported ``*_jit`` names) are tainted, taint
+propagates through ordinary assignments and ``for`` targets, and
+``jax.device_get`` — the sanctioned sync API — clears it.  A sync call on a
+tainted value (or directly on a jit call) is a finding.
+
+The per-dispatch result pull at an engine boundary is sometimes the design
+(e.g. chunked dispatch loops that must concatenate on host); those carry an
+inline suppression with a rationale.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule
+from .common import call_name, collect_module_jits
+
+#: calls that force a device->host sync when handed a device value
+_SYNC_FUNCS = {"float", "int", "np.asarray", "numpy.asarray",
+               "np.array", "numpy.array"}
+#: the blessed sync API — clears taint instead of flagging
+_SANCTIONED = {"jax.device_get", "device_get", "jax.block_until_ready"}
+
+
+def _is_sanctioned(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and call_name(node) in _SANCTIONED
+
+
+class HostSyncRule(Rule):
+    id = "PIM001"
+    name = "host-sync"
+    hint = ("pull results once via jax.device_get at the dispatch boundary "
+            "(or keep the value on device); if this IS the sanctioned "
+            "per-dispatch pull, suppress with a rationale")
+
+    def check_module(self, mod, ctx):
+        if not mod.in_scope("engine", "kernels"):
+            return []
+        jits = collect_module_jits(mod.tree)
+        if not jits.names:
+            return []
+        findings = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(self._check_function(mod, node, jits.names))
+        return findings
+
+    # -- the forward taint walk --------------------------------------------
+
+    def _check_function(self, mod, fn, jit_names):
+        tainted: set[str] = set()
+        findings: list = []
+        seen: set[int] = set()   # node ids already reported
+
+        def expr_tainted(expr: ast.AST) -> bool:
+            if _is_sanctioned(expr):
+                return False
+            for sub in ast.walk(expr):
+                if _is_sanctioned(sub):
+                    continue
+                if isinstance(sub, ast.Call):
+                    name = call_name(sub)
+                    if name and (name in jit_names
+                                 or name.split(".")[-1] in jit_names):
+                        return True
+                if isinstance(sub, ast.Name) and sub.id in tainted:
+                    return True
+            return False
+
+        def target_names(target: ast.AST) -> list[str]:
+            out = []
+            for sub in ast.walk(target):
+                if isinstance(sub, ast.Name):
+                    out.append(sub.id)
+            return out
+
+        def check_syncs(expr: ast.AST):
+            for sub in ast.walk(expr):
+                if not isinstance(sub, ast.Call) or id(sub) in seen:
+                    continue
+                name = call_name(sub)
+                if name in _SYNC_FUNCS and sub.args \
+                        and expr_tainted(sub.args[0]):
+                    seen.add(id(sub))
+                    findings.append(mod.finding(
+                        self, sub,
+                        f"`{name}()` forces a host sync on a value produced "
+                        f"by a jitted function (inside `{fn.name}`)"))
+                elif isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr == "item" and not sub.args \
+                        and expr_tainted(sub.func.value):
+                    seen.add(id(sub))
+                    findings.append(mod.finding(
+                        self, sub,
+                        f"`.item()` forces a host sync on a value produced "
+                        f"by a jitted function (inside `{fn.name}`)"))
+
+        def handle(stmt: ast.stmt):
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = stmt.value
+                if value is None:
+                    return
+                check_syncs(value)
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                names = [n for t in targets for n in target_names(t)]
+                # a sanctioned pull (device_get) or a flagged sync both
+                # leave a HOST value behind — don't re-flag downstream
+                produces_device = (expr_tainted(value)
+                                   and not _is_sanctioned(value)
+                                   and not (isinstance(value, ast.Call)
+                                            and call_name(value)
+                                            in _SYNC_FUNCS))
+                for n in names:
+                    (tainted.add if produces_device
+                     else tainted.discard)(n)
+            elif isinstance(stmt, ast.For):
+                check_syncs(stmt.iter)
+                if expr_tainted(stmt.iter):
+                    for n in target_names(stmt.target):
+                        tainted.add(n)
+                walk_body(stmt.body)
+                walk_body(stmt.orelse)
+            elif isinstance(stmt, ast.While):
+                check_syncs(stmt.test)
+                walk_body(stmt.body)
+                walk_body(stmt.orelse)
+            elif isinstance(stmt, ast.If):
+                check_syncs(stmt.test)
+                walk_body(stmt.body)
+                walk_body(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    check_syncs(item.context_expr)
+                walk_body(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                walk_body(stmt.body)
+                for h in stmt.handlers:
+                    walk_body(h.body)
+                walk_body(stmt.orelse)
+                walk_body(stmt.finalbody)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                if stmt.value is not None:
+                    check_syncs(stmt.value)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                pass   # nested defs get their own walk
+            else:
+                for sub in ast.iter_child_nodes(stmt):
+                    if isinstance(sub, ast.expr):
+                        check_syncs(sub)
+
+        def walk_body(body):
+            # two passes so loop-carried taint reaches syncs earlier in the
+            # body than the assignment that taints them
+            for _ in range(2):
+                for stmt in body:
+                    handle(stmt)
+
+        walk_body(fn.body)
+        return findings

@@ -1,0 +1,46 @@
+"""PIM006 kernel-parity: every exported Pallas kernel needs a numpy oracle.
+
+The Pallas kernels in ``kernels/dse_eval.py`` run under three regimes
+(compiled TPU path, ``interpret=True`` fallback, numpy reference) and the
+repo's correctness story is the numpy-parity tests that pin all three
+together.  A kernel exported without a parity test is a kernel whose
+compiled behaviour nobody is checking.
+
+The rule runs as a finalize pass: collect the public top-level functions of
+``kernels/dse_eval.py``, then require each name to appear (word-bounded)
+somewhere under ``tests/``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .base import Rule
+
+
+class KernelParityRule(Rule):
+    id = "PIM006"
+    name = "kernel-parity"
+    hint = ("add a numpy-parity test under tests/ that calls the kernel and "
+            "compares against its _ref_* numpy oracle (see "
+            "tests/test_dse_eval_kernels.py for the pattern)")
+
+    def finalize(self, ctx):
+        findings = []
+        corpus = "\n".join(text for _, text in ctx.test_sources)
+        for mod in ctx.modules:
+            if not mod.relpath.endswith("kernels/dse_eval.py"):
+                continue
+            for stmt in mod.tree.body:
+                if not isinstance(stmt, ast.FunctionDef):
+                    continue
+                if stmt.name.startswith("_"):
+                    continue
+                if not re.search(rf"\b{re.escape(stmt.name)}\b", corpus):
+                    findings.append(mod.finding(
+                        self, stmt.lineno,
+                        f"exported kernel `{stmt.name}` has no reference "
+                        f"under tests/ — its compiled behaviour is "
+                        f"unchecked against the numpy oracle"))
+        return findings

@@ -1,0 +1,162 @@
+"""PIM002 retrace: hazards that multiply XLA programs per campaign.
+
+Three sub-checks, all rooted in bugs this repo has actually shipped:
+
+* **weak-type scalars** — PR 4's ``log_sn`` bug: a Python scalar captured
+  into a jitted callee without a dtype pin (``jnp.asarray(x)`` with no
+  ``dtype=``) traces weak-typed and forces one spurious recompile when a
+  strongly-typed value later flows through the same program.  Flagged
+  inside jitted function bodies when the argument is a function parameter
+  or a local bound to a numeric literal.
+
+* **bucket bypass** — jit call sites whose argument shapes come straight
+  from ``len(...)`` / ``.shape`` without passing through a bucketing helper
+  (``pow2_bucket`` / ``_pow4_bucket`` / ``pad_dataset`` / ``_next_pow2``):
+  every distinct data size then compiles a fresh program, the exact
+  pathology the pow2 bucketing contract (PR 4/5/7) exists to prevent.
+
+* **unregistered jit** — module-level jit objects in ``engine/`` missing
+  from the module's ``_JITTED`` registry are invisible to
+  ``compiled_program_count()``, so the program-count CI contract cannot see
+  them recompiling.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule
+from .common import (call_name, collect_module_jits, jitted_registry_names,
+                     names_in)
+
+_ASARRAY = {"jnp.asarray", "jnp.array", "jax.numpy.asarray",
+            "jax.numpy.array"}
+#: a call through any of these names legitimizes a raw ``len``/``.shape``
+_BUCKET_HELPERS = ("pow2_bucket", "_pow4_bucket", "pow4_bucket",
+                   "pad_dataset", "_next_pow2", "next_pow2", "_bucket_key",
+                   "_mesh_pads", "_rounds")
+
+
+def _has_dtype(call: ast.Call) -> bool:
+    if len(call.args) >= 2:
+        return True
+    return any(kw.arg == "dtype" for kw in call.keywords)
+
+
+class RetraceRule(Rule):
+    id = "PIM002"
+    name = "retrace"
+    hint = ("pin scalar closures with jnp.asarray(x, dtype=...), route "
+            "dynamic sizes through the pow2/pow4 bucketing helpers, and "
+            "register jit objects in the module's _JITTED dict so "
+            "compiled_program_count() sees them")
+
+    def check_module(self, mod, ctx):
+        if not mod.in_scope("engine", "kernels"):
+            return []
+        jits = collect_module_jits(mod.tree)
+        findings = []
+        findings += self._weak_types(mod, jits)
+        findings += self._bucket_bypass(mod, jits)
+        if mod.in_scope("engine"):
+            findings += self._unregistered(mod, jits)
+        return findings
+
+    # -- (a) weak-typed scalar pins ----------------------------------------
+
+    def _weak_types(self, mod, jits):
+        findings = []
+        for obj in jits.objects.values():
+            fn = obj.func_def
+            if fn is None:
+                continue
+            params = {a.arg for a in (fn.args.args + fn.args.kwonlyargs
+                                      + fn.args.posonlyargs)}
+            numeric_locals = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) \
+                        and isinstance(node.value, ast.Constant) \
+                        and isinstance(node.value.value, (int, float)):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            numeric_locals.add(t.id)
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Call)
+                        and call_name(node) in _ASARRAY):
+                    continue
+                if _has_dtype(node) or not node.args:
+                    continue
+                arg = node.args[0]
+                if isinstance(arg, ast.Name) \
+                        and arg.id in params | numeric_locals:
+                    findings.append(mod.finding(
+                        self, node,
+                        f"`{call_name(node)}({arg.id})` inside jitted "
+                        f"`{fn.name}` has no dtype pin — a Python scalar "
+                        f"here traces weak-typed and forces a recompile "
+                        f"(the PR 4 log_sn bug)"))
+                elif isinstance(arg, ast.Constant) \
+                        and isinstance(arg.value, (int, float)):
+                    findings.append(mod.finding(
+                        self, node,
+                        f"`{call_name(node)}({arg.value!r})` inside jitted "
+                        f"`{fn.name}` has no dtype pin — weak-typed scalar"))
+        return findings
+
+    # -- (b) dynamic shapes bypassing the bucketing helpers ----------------
+
+    def _bucket_bypass(self, mod, jits):
+        findings = []
+        jit_names = jits.names
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if not name or name.split(".")[-1] not in jit_names:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                raw = None
+                bucketed = False
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Call):
+                        sub_name = call_name(sub) or ""
+                        leaf = sub_name.split(".")[-1]
+                        if leaf in _BUCKET_HELPERS:
+                            bucketed = True
+                        elif leaf == "len":
+                            raw = sub
+                    elif isinstance(sub, ast.Attribute) \
+                            and sub.attr == "shape":
+                        raw = sub
+                if raw is not None and not bucketed:
+                    findings.append(mod.finding(
+                        self, node,
+                        f"jit call `{name.split('.')[-1]}` takes a raw "
+                        f"dynamic size (len()/.shape) — every distinct data "
+                        f"size compiles a fresh XLA program; bucket it "
+                        f"first"))
+                    break
+        return findings
+
+    # -- (c) jit objects missing from the _JITTED registry -----------------
+
+    def _unregistered(self, mod, jits):
+        if not jits.objects:
+            return []
+        registered = jitted_registry_names(mod.tree)
+        # names a _JITTED dict references indirectly (e.g. values built by
+        # helper calls) count as registered too
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == "_JITTED"
+                            for t in stmt.targets):
+                registered |= names_in(stmt.value)
+        findings = []
+        for obj in jits.objects.values():
+            if obj.name not in registered:
+                findings.append(mod.finding(
+                    self, obj.lineno,
+                    f"jit object `{obj.name}` is not in this module's "
+                    f"_JITTED registry — compiled_program_count() cannot "
+                    f"see its recompiles"))
+        return findings

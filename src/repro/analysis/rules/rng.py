@@ -1,0 +1,76 @@
+"""PIM005 rng-seed: unseeded randomness in engine and benchmark code.
+
+PR 1 shipped a tuner whose proposal sampler silently dropped its seed —
+every campaign run produced different mappings and the fig-9 comparison was
+unreproducible until it was found by hand.  Engine and benchmark code must
+draw from an explicitly seeded generator: ``random.Random(seed)``,
+``np.random.default_rng(seed)``, or a ``jax.random`` key threaded from the
+config.
+
+Flagged patterns (in ``engine/`` / ``benchmarks/`` scope):
+
+* module-function draws on the global generators: ``random.random()``,
+  ``random.randint(...)``, ``np.random.rand(...)``, ``np.random.choice``...
+* ``random.Random()`` / ``np.random.default_rng()`` constructed with no
+  seed argument.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule
+from .common import call_name
+
+#: draws on the process-global stdlib generator
+_GLOBAL_RANDOM = {"random", "randint", "randrange", "uniform", "choice",
+                  "choices", "shuffle", "sample", "gauss", "normalvariate",
+                  "seed", "betavariate", "expovariate"}
+#: legacy numpy global-state draws
+_GLOBAL_NP = {"rand", "randn", "randint", "random", "choice", "shuffle",
+              "permutation", "uniform", "normal", "seed", "random_sample"}
+
+
+class RngSeedRule(Rule):
+    id = "PIM005"
+    name = "rng-seed"
+    hint = ("thread an explicit seed: random.Random(seed) / "
+            "np.random.default_rng(seed) / a jax.random key from the "
+            "config — global-state draws make campaigns unreproducible "
+            "(the PR 1 dropped-seed bug)")
+
+    def check_module(self, mod, ctx):
+        if not mod.in_scope("engine", "benchmarks"):
+            return []
+        findings = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if not name:
+                continue
+            parts = name.split(".")
+            if parts[0] == "random" and len(parts) == 2 \
+                    and parts[1] in _GLOBAL_RANDOM:
+                findings.append(mod.finding(
+                    self, node,
+                    f"`{name}()` draws from the process-global stdlib "
+                    f"generator — unseeded and shared across the whole "
+                    f"process"))
+            elif parts[0] in ("np", "numpy") and len(parts) == 3 \
+                    and parts[1] == "random" and parts[2] in _GLOBAL_NP:
+                findings.append(mod.finding(
+                    self, node,
+                    f"`{name}()` uses numpy's legacy global RNG state — "
+                    f"use np.random.default_rng(seed)"))
+            elif name in ("random.Random", "Random") and not node.args:
+                findings.append(mod.finding(
+                    self, node,
+                    "`random.Random()` with no seed falls back to OS "
+                    "entropy — pass the campaign seed"))
+            elif name.split(".")[-1] == "default_rng" and not node.args:
+                findings.append(mod.finding(
+                    self, node,
+                    "`default_rng()` with no seed falls back to OS "
+                    "entropy — pass the campaign seed"))
+        return findings

@@ -75,7 +75,7 @@ def _tile_candidates(dim: int, cap: int = 7) -> list[int]:
     return outs
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=65536)
 def part_layer_cost(hw: HwConfig, layer: Layer,
                     dl_in: DataLayout, dl_out: DataLayout) -> PartCost:
     """Latency/energy for one part-layer resident on one PIM-node."""

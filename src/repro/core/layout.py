@@ -144,7 +144,7 @@ def tile_cost_vec(fmap, tb, tc, th, tw, layout: DataLayout,
     return bursts, rows
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=65536)
 def tile_access_cost(
     fmap: tuple[int, int, int, int],
     tile: tuple[int, int, int, int],
@@ -164,7 +164,7 @@ def tile_access_cost(
     return float(bursts), float(rows)
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=65536)
 def sequential_access_cost(
     n_values: int, burst_words: int, row_words: int
 ) -> tuple[float, float]:

@@ -29,7 +29,8 @@ from typing import Sequence
 from .costmodel import part_layer_cost
 from .hardware import HwConfig
 from .ir import DnnGraph, Layer, Segment
-from .layout import DataLayout, enumerate_layouts
+from .layout import (DataLayout, enumerate_layouts, sequential_access_cost,
+                     tile_access_cost)
 from .noc import MeshNoc
 from .partition import (LM, comm_batch_geometry, comm_estimate,
                         comm_estimate_batch, comm_eval_geometry,
@@ -195,6 +196,8 @@ def clear_mapper_caches() -> None:
     _COMM_GEOM.clear()
     _sharing_latency.cache_clear()
     part_layer_cost.cache_clear()
+    tile_access_cost.cache_clear()
+    sequential_access_cost.cache_clear()
 
 
 def mapper_cache_stats() -> dict[str, int]:
@@ -212,6 +215,9 @@ def mapper_cache_stats() -> dict[str, int]:
         "comm_geometries": len(_COMM_GEOM._d),
         "schedules": len(_SCHED_MEMO._d),
         "part_layer_costs": part_layer_cost.cache_info().currsize,
+        "tile_access_costs": tile_access_cost.cache_info().currsize,
+        "sequential_access_costs":
+            sequential_access_cost.cache_info().currsize,
     }
 
 

@@ -32,7 +32,7 @@ class MeshNoc:
         # directed horizontal + vertical mesh links
         return 2 * (self.rows * (self.cols - 1) + self.cols * (self.rows - 1))
 
-    @lru_cache(maxsize=None)
+    @lru_cache(maxsize=64)
     def _link_index(self) -> dict[tuple[int, int], int]:
         idx: dict[tuple[int, int], int] = {}
         for r in range(self.rows):
@@ -46,7 +46,7 @@ class MeshNoc:
                     idx[(self.node(r + 1, c), n)] = len(idx)
         return idx
 
-    @lru_cache(maxsize=None)
+    @lru_cache(maxsize=65536)
     def route(self, src: int, dst: int) -> tuple[int, ...]:
         """XY dimension-order route: along the row (X) first, then column (Y)."""
         (sr, sc), (dr, dc) = self.coord(src), self.coord(dst)
@@ -80,7 +80,7 @@ class MeshNoc:
         return {(a, b): np.asarray(self.route(a, b), dtype=np.intp)
                 for a in nodes for b in nodes if a != b}
 
-    @lru_cache(maxsize=None)
+    @lru_cache(maxsize=64)
     def route_table(self) -> tuple[np.ndarray, np.ndarray]:
         """Dense per-pair route arrays ``(route_pad, hops)``.
 

@@ -91,7 +91,7 @@ class LM:
         return f"LM({ps or 'none'};{''.join(self.p_order)})"
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=4096)
 def factor_splits(n: int, k: int) -> tuple[tuple[int, ...], ...]:
     """All ordered k-tuples of positive ints with product n."""
     if k == 1:
@@ -154,7 +154,7 @@ def enumerate_lms(layer: Layer, h_shape: int, w_shape: int,
 
 # -- node placement ----------------------------------------------------------
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=4096)
 def _strides(radices: tuple[int, ...]) -> tuple[int, ...]:
     """Mixed-radix strides, big-endian (first radix is outermost)."""
     out = [1] * len(radices)
@@ -172,7 +172,7 @@ def loop_strides(lm: LM) -> dict[str, tuple[int, int]]:
     return {l: (hs[i], ws[i]) for i, l in enumerate(order)}
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=65536)
 def group_coords(lm: LM, loops: tuple[str, ...]) -> tuple[tuple[int, int], ...]:
     """Region-relative coords of one sharing group: nodes spanning ``loops``
     (all other loop indices held at zero), in snake order for ring building."""

@@ -35,11 +35,35 @@ from .tuner_train import (compiled_program_count, fit_dkl, fit_filter,
 from .campaign import Campaign, CampaignResult
 from .pipeline import DsePipeline
 
+
+def engine_program_counts() -> dict[str, int]:
+    """XLA cache sizes of every registered jit object, across all engine
+    modules (``module.name`` keys; process-global — diff around a run).
+
+    The per-module ``_JITTED`` dicts are the registry the static-analysis
+    pass (``python -m repro.analysis``, rule PIM002) enforces: an engine
+    jit object outside them is invisible here and to the program-count CI
+    contract.  :func:`compiled_program_count` keeps its historical
+    tuner-only view; this is the whole-engine superset.
+    """
+    from . import batch_cost, pipeline, scheduler_opt, tuner_train
+    out: dict[str, int] = {}
+    for mod in (batch_cost, pipeline, scheduler_opt, tuner_train):
+        label = mod.__name__.rsplit(".", 1)[-1]
+        for name, fn in mod._JITTED.items():
+            try:
+                out[f"{label}.{name}"] = int(fn._cache_size())
+            except Exception:   # cache introspection is best-effort per jax
+                out[f"{label}.{name}"] = -1
+    return out
+
+
 __all__ = [
     "BatchCostResult", "PartSpec", "batch_area_mm2", "batch_max_link_load",
     "batch_part_cost", "DsePipeline", "EvalCache", "cons_digest",
     "graph_digest", "hw_digest", "ParetoFront", "ParetoPoint", "Campaign",
-    "CampaignResult", "compiled_program_count", "fit_dkl", "fit_filter",
+    "CampaignResult", "compiled_program_count", "engine_program_counts",
+    "fit_dkl", "fit_filter",
     "pad_dataset", "pow2_bucket", "schedule_many", "score_candidates",
     "score_candidates_raw",
 ]

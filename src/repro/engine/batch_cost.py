@@ -441,6 +441,13 @@ def _batch_cost(cfg, lay, *, data_bits: int, psum_bits: int,
     return out
 
 
+#: module-level jit objects, keyed for ``compiled_program_count``-style
+#: introspection (see :func:`repro.engine.engine_program_counts`)
+_JITTED = {
+    "batch_cost": _batch_cost,
+}
+
+
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
@@ -573,6 +580,10 @@ def batch_part_cost(configs: Sequence[HwConfig],
                               dram_row_miss=cons.dram_row_miss_cycles,
                               interpret=interpret)
             for k, v in res.items():
+                # this per-chunk pull IS the dispatch boundary: chunks must
+                # land on host to be concatenated, and each pull overlaps
+                # the next chunk's dispatch
+                # pimlint: disable-next-line=host-sync -- sanctioned per-chunk boundary pull
                 outs.setdefault(k, []).append(np.asarray(v))
     res = {k: np.concatenate(v, axis=0)[:n] for k, v in outs.items()}
     return _finalize_result(res, configs, specs, cons)

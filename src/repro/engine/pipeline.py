@@ -98,6 +98,16 @@ def _select_topk(vals, scores, valid, *, k: int):
     return sel[:k], jnp.sum(take.astype(jnp.int32))
 
 
+#: module-level jit objects, keyed for ``compiled_program_count``-style
+#: introspection (see :func:`repro.engine.engine_program_counts`)
+_JITTED = {
+    "area_mask": _area_mask,
+    "masked_zeros": _masked_zeros,
+    "last": _last,
+    "select_topk": _select_topk,
+}
+
+
 class DsePipeline:
     """Strategy adapter running a scan-backend :class:`PimTuner` fused.
 

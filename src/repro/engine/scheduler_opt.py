@@ -401,6 +401,14 @@ def _fold_keys(seeds, digests, chains):
     return jax.vmap(one)(seeds, digests, chains)
 
 
+#: module-level jit objects, keyed for ``compiled_program_count``-style
+#: introspection (see :func:`repro.engine.engine_program_counts`)
+_JITTED = {
+    "scan_solve": _scan_solve,
+    "fold_keys": _fold_keys,
+}
+
+
 def _run_bucket(setups: list[_Setup], *, rounds: int, moves_per_round: int,
                 s_pad: int, n_pad: int, use_pallas: bool,
                 pad_shapes: bool = True) -> list[list]:
@@ -475,6 +483,9 @@ def _pack_solve(setups: list[_Setup], *, rounds: int, moves_per_round: int,
                 weights[row, si] = (len(cyc) - 1) * st.chunks[si]
             loads0[row, :e] = noc.link_loads_np(
                 _all_transfers(init, list(st.chunks)))
+    # keys feed the host-side packed arrays: one pull per bucket, before
+    # the scan dispatch
+    # pimlint: disable-next-line=host-sync -- sanctioned per-bucket key pull
     keys[:rows] = np.asarray(_fold_keys(
         jax.device_put(np.array(
             [st.seed_eff for st in setups for _ in range(chains)],
@@ -498,6 +509,7 @@ def _pack_solve(setups: list[_Setup], *, rounds: int, moves_per_round: int,
             jax.device_put(weights), jax.device_put(loads0),
             jax.device_put(keys), inc,
             rounds=rounds, n_moves=moves_per_round, use_pallas=use_pallas)
+    # pimlint: disable-next-line=host-sync -- the one result pull per bucket
     out_cycles = np.asarray(out_cycles)
     results = []
     for p, st in enumerate(setups):

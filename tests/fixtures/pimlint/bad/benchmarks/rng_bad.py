@@ -1,0 +1,13 @@
+"""PIM005 fixture: unseeded randomness in benchmark code."""
+
+import random
+
+import numpy as np
+
+
+def sample(n):
+    vals = [random.random() for _ in range(n)]   # line 9: global stdlib RNG
+    noise = np.random.rand(n)                    # line 10: legacy np global
+    rng = random.Random()                        # line 11: unseeded Random
+    gen = np.random.default_rng()                # line 12: unseeded rng
+    return vals, noise, rng, gen

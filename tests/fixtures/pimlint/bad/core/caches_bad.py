@@ -1,0 +1,30 @@
+"""PIM004 fixture: an unbounded memo and one missing from the registry."""
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=None)             # line 6: unbounded
+def slow(n):
+    return n * n
+
+
+class _BoundedCache:
+    def __init__(self, maxsize):
+        self._d = {}
+        self.maxsize = maxsize
+
+    def clear(self):
+        self._d.clear()
+
+
+_GOOD = _BoundedCache(16)
+_ORPHAN = _BoundedCache(16)          # line 21: not in clear/stats below
+
+
+def clear_mapper_caches():
+    _GOOD.clear()
+    slow.cache_clear()
+
+
+def mapper_cache_stats():
+    return {"good": len(_GOOD._d), "slow": slow.cache_info().currsize}

@@ -1,0 +1,21 @@
+"""PIM003 fixture: a donated buffer read after the call that donated it."""
+
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _step(state, grad):
+    return state - grad
+
+
+_JITTED = {"step": _step}
+
+
+def train(state, grads):
+    for g in grads:
+        out = _step(state, g)
+        print(state)                 # line 16: read after donation
+        state = out
+    return state

@@ -1,0 +1,23 @@
+"""PIM001 fixture: host syncs on jit-produced values in an engine hot path."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def _score(x):
+    return x * 2
+
+
+_JITTED = {"score": _score}
+
+
+def run(xs):
+    total = 0.0
+    for x in xs:
+        y = _score(x)
+        total += float(y)            # line 17: float() on tainted value
+    arr = np.asarray(_score(xs))     # line 18: sync directly on a jit call
+    z = _score(xs)
+    s = z.item()                     # line 20: .item() on tainted value
+    return total, arr, s

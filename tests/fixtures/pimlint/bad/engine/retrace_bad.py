@@ -1,0 +1,19 @@
+"""PIM002 fixture: weak-type pin, bucket bypass, unregistered jit."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def _forward(params, x):
+    scale = jnp.asarray(x)           # line 9: no dtype pin on a param
+    return params * scale
+
+
+_JITTED = {"forward": _forward}
+
+_kernel = jax.jit(lambda a: a.sum())  # line 15: not in _JITTED
+
+
+def dispatch(data):
+    return _kernel(jnp.zeros(len(data)))  # line 19: raw len() into a jit

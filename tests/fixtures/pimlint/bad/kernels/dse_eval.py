@@ -1,0 +1,9 @@
+"""PIM006 fixture: an exported kernel with no parity test reference."""
+
+
+def orphan_kernel(x):                # line 4: nothing under tests/ names it
+    return x
+
+
+def _private_helper(x):
+    return x

@@ -1,0 +1,1 @@
+"""Test corpus of the bad tree: deliberately references no kernel name."""

@@ -1,0 +1,11 @@
+"""Clean twin of rng_bad: every generator carries an explicit seed."""
+
+import random
+
+import numpy as np
+
+
+def sample(n, seed):
+    rng = random.Random(seed)
+    gen = np.random.default_rng(seed)
+    return [rng.random() for _ in range(n)], gen.random(n)

@@ -1,0 +1,32 @@
+"""Clean twin of caches_bad: bounded memos, all registered."""
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=4096)
+def slow(n):
+    return n * n
+
+
+class _BoundedCache:
+    def __init__(self, maxsize):
+        self._d = {}
+        self.maxsize = maxsize
+
+    def clear(self):
+        self._d.clear()
+
+
+_GOOD = _BoundedCache(16)
+_OTHER = _BoundedCache(16)
+
+
+def clear_mapper_caches():
+    _GOOD.clear()
+    _OTHER.clear()
+    slow.cache_clear()
+
+
+def mapper_cache_stats():
+    return {"good": len(_GOOD._d), "other": len(_OTHER._d),
+            "slow": slow.cache_info().currsize}

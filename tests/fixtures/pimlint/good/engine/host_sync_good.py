@@ -1,0 +1,21 @@
+"""Clean twin of host_sync_bad: device_get boundary + a justified suppress."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def _score(x):
+    return x * 2
+
+
+_JITTED = {"score": _score}
+
+
+def run(xs):
+    ys = [_score(x) for x in xs]
+    pulled = jax.device_get(ys)          # the sanctioned one-shot pull
+    total = sum(float(y) for y in pulled)
+    # pimlint: disable-next-line=host-sync -- per-item pull is the API here
+    arr = np.asarray(_score(xs))
+    return total, arr

@@ -1,0 +1,5 @@
+"""Clean twin of the kernel fixture: the export has a test reference."""
+
+
+def covered_kernel(x):
+    return x

@@ -1,0 +1,1 @@
+"""Parity corpus of the good tree: references covered_kernel by name."""

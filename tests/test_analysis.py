@@ -1,0 +1,166 @@
+"""pimlint framework tests: fixtures vs golden, suppressions, baseline, CLI."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import load_baseline, run_lint, save_baseline
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.rules import ALL_RULES, rule_by_key
+
+FIXTURES = Path(__file__).parent / "fixtures" / "pimlint"
+BAD = FIXTURES / "bad"
+GOOD = FIXTURES / "good"
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _bad_result():
+    return run_lint(BAD, [BAD])
+
+
+# ---------------------------------------------------------------- fixtures
+
+
+def test_bad_tree_matches_golden():
+    got = {(f.rule, f.path, f.line) for f in _bad_result().findings}
+    want = {(e["rule"], e["path"], e["line"])
+            for e in json.loads((FIXTURES / "golden.json").read_text())}
+    assert got == want
+
+
+@pytest.mark.parametrize("rule", ALL_RULES, ids=lambda r: r.name)
+def test_each_rule_flags_its_fixture(rule):
+    """Every rule must demonstrably fire on the bad tree."""
+    res = run_lint(BAD, [BAD], rules=[rule])
+    assert res.findings, f"{rule.id} found nothing in the bad fixture tree"
+    assert all(f.rule == rule.id for f in res.findings)
+
+
+def test_good_tree_is_clean_with_one_suppressed_example():
+    res = run_lint(GOOD, [GOOD])
+    assert res.findings == []
+    assert len(res.suppressed) == 1
+    assert res.suppressed[0].rule == "PIM001"
+
+
+def test_findings_carry_location_and_hint():
+    for f in _bad_result().findings:
+        assert f.path and f.line >= 1 and f.message and f.hint
+        assert f.fingerprint and len(f.fingerprint) == 16
+        assert f"{f.path}:{f.line}" in f.render()
+
+
+# ------------------------------------------------------------ suppressions
+
+
+def test_suppression_variants(tmp_path):
+    eng = tmp_path / "engine"
+    eng.mkdir()
+    body = (
+        "import jax\n"
+        "import numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return x\n"
+        "_JITTED = {'f': f}\n"
+        "def run():\n"
+        "    a = np.asarray(f(1))  # pimlint: disable=host-sync -- ok\n"
+        "    # pimlint: disable-next-line=PIM001\n"
+        "    b = np.asarray(f(2))\n"
+        "    c = np.asarray(f(3))\n"
+        "    return a, b, c\n")
+    (eng / "mod.py").write_text(body)
+    res = run_lint(tmp_path, [tmp_path])
+    assert len(res.suppressed) == 2      # same-line by name, next-line by id
+    assert len(res.findings) == 1        # the unsuppressed third sync
+    (eng / "mod.py").write_text(
+        "# pimlint: disable-file=all -- fixture\n" + body)
+    res = run_lint(tmp_path, [tmp_path])
+    assert res.findings == [] and len(res.suppressed) == 3
+
+
+# ---------------------------------------------------------------- baseline
+
+
+def test_baseline_filters_known_findings(tmp_path):
+    first = _bad_result()
+    path = tmp_path / "baseline.json"
+    save_baseline(path, first.findings)
+    res = run_lint(BAD, [BAD], baseline=load_baseline(path))
+    assert res.findings == []
+    assert len(res.baselined) == len(first.findings)
+
+
+def test_baseline_is_line_number_stable():
+    """Fingerprints hash the source text, not the line number."""
+    res = _bad_result()
+    f = res.findings[0]
+    import dataclasses
+    moved = dataclasses.replace(f, line=f.line + 10)
+    assert moved.fingerprint == f.fingerprint
+
+
+def test_baseline_budget_does_not_leak(tmp_path):
+    """One baseline entry absolves ONE finding, not every lookalike."""
+    first = _bad_result()
+    path = tmp_path / "baseline.json"
+    save_baseline(path, first.findings[:1])
+    res = run_lint(BAD, [BAD], baseline=load_baseline(path))
+    assert len(res.baselined) == 1
+    assert len(res.findings) == len(first.findings) - 1
+
+
+def test_bad_baseline_version_rejected(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text('{"version": 99, "findings": []}')
+    with pytest.raises(ValueError):
+        load_baseline(path)
+
+
+# --------------------------------------------------------------------- CLI
+
+
+def test_cli_exit_codes(tmp_path):
+    assert lint_main(["--root", str(GOOD), str(GOOD)]) == 0
+    assert lint_main(["--root", str(BAD), str(BAD)]) == 1
+    assert lint_main(["--rule", "nope", str(BAD)]) == 2
+    assert lint_main(["--root", str(tmp_path), str(tmp_path)]) == 2
+
+
+def test_cli_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    code = lint_main(["--root", str(BAD), str(BAD), "--json", str(out)])
+    assert code == 1
+    report = json.loads(out.read_text())
+    assert report["schema"] == "nicepim-lint/1"
+    assert report["status"] == "dirty"
+    assert report["new_findings"]
+    assert set(report["counts"]) <= {r.id for r in ALL_RULES}
+
+
+def test_cli_write_baseline_roundtrip(tmp_path):
+    base = tmp_path / "pimlint.baseline.json"
+    assert lint_main(["--root", str(BAD), str(BAD), "--write-baseline",
+                      "--baseline", str(base)]) == 0
+    assert lint_main(["--root", str(BAD), str(BAD),
+                      "--baseline", str(base)]) == 0
+
+
+def test_rule_lookup():
+    assert rule_by_key("PIM001").name == "host-sync"
+    assert rule_by_key("cache-hygiene").id == "PIM004"
+    assert rule_by_key("nope") is None
+
+
+# -------------------------------------------------------------- repo gate
+
+
+def test_repo_lints_clean_against_committed_baseline():
+    """The acceptance gate: zero NEW findings on the real tree."""
+    baseline = load_baseline(REPO / "pimlint.baseline.json")
+    res = run_lint(REPO, baseline=baseline)
+    assert res.files_scanned > 50
+    assert res.parse_errors == []
+    msgs = "\n".join(f.render() for f in res.findings)
+    assert res.findings == [], f"new pimlint findings:\n{msgs}"
