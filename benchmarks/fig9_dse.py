@@ -36,7 +36,8 @@ def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
         strategies=STRATEGIES, checkpoint=None,
         evaluate_all_legal: bool = False,
         tuner_backend: str | None = None,
-        trace: str | None = None) -> list[dict]:
+        trace: str | None = None,
+        cache_db: str | None = None) -> list[dict]:
     # evaluate_all_legal=True maps EVERY legal proposal per iteration in one
     # multi-config pass (more observations per DKL refit); the default keeps
     # the paper's first-legal-only walk for Fig. 9 parity.
@@ -45,14 +46,21 @@ def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
     # match within float drift — tests/test_tuner_engine.py pins this).
     # trace="out.json" records every propose/map/schedule/evaluate span to a
     # Chrome-trace file loadable in Perfetto / chrome://tracing.
+    # cache_db="evals.sqlite" swaps the in-memory evaluation table for a
+    # PersistentEvalCache: reruns (and concurrent figure processes) dedupe
+    # their mapper work against one durable content-addressed store.
     tracer = Tracer() if trace else None
+    cache = None
+    if cache_db:
+        from repro.engine.cache import PersistentEvalCache
+        cache = PersistentEvalCache(cache_db)
     campaign = Campaign(
         _nets(tiny), strategies, iterations=iterations, seed=seed,
         n_sample=512, evaluator_kwargs=dict(mapper_kwargs=dict(MAPPER_KWARGS)),
         strategy_kwargs=(dict(backend=tuner_backend) if tuner_backend
                          else None),
         checkpoint=checkpoint, evaluate_all_legal=evaluate_all_legal,
-        tracer=tracer)
+        cache=cache, tracer=tracer)
     out = campaign.run()
     if tracer is not None:
         tracer.save(trace)
@@ -86,8 +94,9 @@ def run(iterations: int = 24, seed: int = 0, tiny: bool = False,
 
 
 def main(iterations: int = 12, tiny: bool = False,
-         trace: str | None = None) -> None:
-    rows = run(iterations=iterations, tiny=tiny, trace=trace)
+         trace: str | None = None, cache_db: str | None = None) -> None:
+    rows = run(iterations=iterations, tiny=tiny, trace=trace,
+               cache_db=cache_db)
     curves = [r for r in rows if r["strategy"] != "pareto"]
     base = [r for r in curves if r["strategy"] == "random"][0]["quality_final"]
     for r in curves:
@@ -111,5 +120,10 @@ if __name__ == "__main__":
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Chrome-trace of the campaign here")
+    ap.add_argument("--cache-db", default=None, metavar="EVALS.sqlite",
+                    help="persistent cross-process evaluation cache: "
+                         "reruns serve repeated configs from this sqlite "
+                         "store instead of re-mapping them")
     a = ap.parse_args()
-    main(iterations=a.iterations, tiny=a.tiny, trace=a.trace)
+    main(iterations=a.iterations, tiny=a.tiny, trace=a.trace,
+         cache_db=a.cache_db)

@@ -4,6 +4,7 @@ Sections:
   §Dry-run          — compile status, memory per device, collective schedule
   §Roofline         — three terms per (arch x shape x mesh), bottleneck, MFU
   §Paper            — Fig. 9/10/11/12 reproductions vs the paper's claims
+  §Sharded-campaign — BENCH_9 mega-campaign speedup + kill/resume contract
   §Perf-trajectory  — named regression gates per BENCH_*.json artifact
   §Perf             — hillclimb log (benchmarks/perf_log.py entries)
 """
@@ -314,6 +315,41 @@ def _campaign_metrics(par: dict) -> list[str]:
     return lines
 
 
+def campaign_section() -> str:
+    """§Sharded-campaign: the BENCH_9 mega-campaign contract."""
+    f = ROOT / "experiments" / "BENCH_9.json"
+    lines = ["## §Sharded-campaign", ""]
+    if not f.exists():
+        return "\n".join(lines + [
+            "(run `python -m benchmarks.campaign_throughput`)"])
+    try:
+        b = json.loads(f.read_text())
+    except json.JSONDecodeError:
+        return "\n".join(lines + ["(BENCH_9.json unreadable)"])
+    by_name = {r["name"]: r for r in b.get("benchmarks", [])}
+    gate = b.get("gates", {}).get("campaign_sharded_speedup", {})
+    lines += [
+        "Multi-tenant DSE service (`repro.engine.sharded.ShardedCampaign`): "
+        "repeated tenant submissions on a 4-device `config` mesh with async "
+        "wave overlap and one shared `PersistentEvalCache`, vs the same "
+        "submissions run sequentially single-stream.  Observation streams "
+        "and the Pareto front are asserted identical; a mid-campaign "
+        "`os._exit` kill resumes with zero re-evaluated points "
+        "(replay-by-re-proposal against the durable sqlite table).", "",
+        "| case | result |", "|---|---|",
+    ]
+    sh = by_name.get("campaign_sharded")
+    if sh:
+        lines.append(f"| sharded vs single-stream | {sh['derived']} "
+                     f"({b.get('mode', '?')} mode, gate floor "
+                     f"{gate.get('value', 0):.2f} - "
+                     f"{gate.get('tolerance', 0):.0%}) |")
+    kr = by_name.get("campaign_kill_resume")
+    if kr:
+        lines.append(f"| kill-and-resume | {kr['derived']} |")
+    return "\n".join(lines + [""])
+
+
 def bench_section() -> str:
     """§Perf-trajectory: the named gates in each BENCH_*.json artifact."""
     lines = ["## §Perf-trajectory", ""]
@@ -370,6 +406,8 @@ def build() -> str:
         roofline_section(cells),
         "",
         paper_section(),
+        "",
+        campaign_section(),
         "",
         bench_section(),
         "",

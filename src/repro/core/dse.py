@@ -163,7 +163,10 @@ class WorkloadEvaluator:
         ckey = None
         if self.cache is not None:
             ckey = self._content_key(cfg)
-            hit = self.cache.get(ckey)
+            # single-flight: if another evaluator (eval worker, duplicated
+            # tenant) is computing this key, block for its commit instead
+            # of re-running the mapper
+            hit, _ = self.cache.lease(ckey)
             if hit is not None:
                 sp["cache"] = "content_hit"
                 out = (hit[0], dict(hit[1]), dict(hit[2]))
@@ -192,15 +195,17 @@ class WorkloadEvaluator:
                 energy_j = rep.energy_pj * 1e-12
                 cost += (energy_j ** self.alpha) \
                     * (rep.latency_s ** self.beta) * self.gamma
+            out = (cost, lats, ens)
+            self._cache[key] = out
+            if ckey is not None:
+                self.cache.put(ckey, out)
         finally:
+            if ckey is not None:
+                self.cache.complete(ckey)
             if self.clear_caches_between_configs:
                 # the memo entries are keyed by this cfg: nothing carries
                 # over to the next configuration, so drop them
                 clear_mapper_caches()
-        out = (cost, lats, ens)
-        self._cache[key] = out
-        if ckey is not None:
-            self.cache.put(ckey, out)
         return out
 
     def evaluate_batch(self, cfgs: list[HwConfig]
@@ -238,6 +243,26 @@ class WorkloadEvaluator:
                     continue
             todo.setdefault(key, []).append(i)
             cfg_of.setdefault(key, cfg)
+        # single-flight pass: lease every remaining key in sorted content-key
+        # order (every concurrent evaluator acquires ascending, so waits can
+        # never cycle into a deadlock).  A lease that resolves to a hit means
+        # another evaluator just computed it — take the result; the keys we
+        # end up owning are mapped below and completed in the finally.
+        leased: list[str] = []
+        ckey_of: dict[tuple, str] = {}
+        if self.cache is not None and todo:
+            for k in sorted(todo, key=lambda k: self._content_key(cfg_of[k])):
+                ckey = self._content_key(cfg_of[k])
+                hit, owner = self.cache.lease(ckey)
+                if hit is not None:
+                    res = (hit[0], dict(hit[1]), dict(hit[2]))
+                    self._cache[k] = res
+                    for i in todo[k]:
+                        out[i] = res
+                    del todo[k]
+                    continue
+                leased.append(ckey)
+                ckey_of[k] = ckey
         sp["evaluated"] = len(todo)
         sp["cached"] = len(cfgs) - sum(len(v) for v in todo.values())
         if not todo:
@@ -276,16 +301,20 @@ class WorkloadEvaluator:
                         * (rep.latency_s ** self.beta) * self.gamma
                     still.append(k)
                 live = still
+            for k, positions in todo.items():
+                res = (costs[k], lats[k], ens[k])
+                self._cache[k] = res
+                if self.cache is not None:
+                    self.cache.put(ckey_of.get(k) or self._content_key(
+                        cfg_of[k]), res)
+                for i in positions:
+                    out[i] = res
         finally:
+            if self.cache is not None:
+                for ckey in leased:
+                    self.cache.complete(ckey)
             if self.clear_caches_between_configs:
                 clear_mapper_caches()
-        for k, positions in todo.items():
-            res = (costs[k], lats[k], ens[k])
-            self._cache[k] = res
-            if self.cache is not None:
-                self.cache.put(self._content_key(cfg_of[k]), res)
-            for i in positions:
-                out[i] = res
         return out
 
 
@@ -356,84 +385,118 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
     return DseResult(obs)
 
 
+def propose_screen(strategy, it: int, propose_k: int,
+                   cons: PimConstraints, sname: str,
+                   evaluate_all_legal: bool, batch_area_mm2
+                   ) -> tuple[list, list[Observation],
+                              list[tuple[HwConfig, float]], int]:
+    """Iteration phase A: propose a batch and area-screen it.
+
+    Proposals are drawn from the strategy, the whole batch is area-checked
+    in one vectorized call, and every area-illegal candidate that the walk
+    visits is fed back to the strategy immediately (it trains the filter
+    model).  Returns ``(props, it_obs, to_eval, legal_n)`` where
+    ``to_eval`` is the ``(cfg, area)`` list still needing mapper
+    evaluation: all legal proposals under ``evaluate_all_legal``, at most
+    the FIRST legal one otherwise (the paper's Fig. 7-4 walk — later
+    illegal candidates are then not observed either).
+
+    Shared by :func:`_dse_iteration` and the sharded campaign runner
+    (``repro.engine.sharded``), which evaluates ``to_eval`` out-of-line so
+    wave N+1's propose can overlap wave N's mapping.
+    """
+    it_obs: list[Observation] = []
+    with trace.span("propose", strategy=sname, k=propose_k):
+        props = strategy.propose(propose_k)
+    areas = batch_area_mm2(props)
+    legal_n = sum(1 for a in areas if float(a) <= cons.area_budget_mm2)
+    to_eval: list[tuple[HwConfig, float]] = []
+    for cfg, area in zip(props, areas):
+        area = float(area)
+        if area <= cons.area_budget_mm2:
+            to_eval.append((cfg, area))
+            if not evaluate_all_legal:
+                break
+        else:
+            strategy.observe(cfg, area, None)
+            it_obs.append(Observation(it, cfg, area, False))
+    return props, it_obs, to_eval, legal_n
+
+
+def ingest_results(strategy, it: int, it_obs: list[Observation],
+                   evaluated: list[tuple[HwConfig, float, tuple]],
+                   pareto, sname: str, best_gauge, legal_hist,
+                   legal_n: int, n_props: int, on_iteration, verbose: bool,
+                   t0: float) -> list[Observation]:
+    """Iteration phase B: observe mapper results, refit, record metrics.
+
+    ``evaluated`` carries ``(cfg, area, (cost, lats, ens))`` per mapped
+    config; ``it_obs`` arrives holding phase A's illegal observations and
+    leaves holding the full iteration's.  The fit only runs when something
+    was mapped — identical to the historical inline loop.
+    """
+    for cfg, area, (cost, lats, ens) in evaluated:
+        if math.isinf(cost):
+            strategy.observe(cfg, area, None)
+            it_obs.append(Observation(it, cfg, area, True))
+        else:
+            strategy.observe(cfg, area, cost)
+            it_obs.append(Observation(it, cfg, area, True, cost, lats,
+                                      ens))
+            if pareto is not None:
+                from ..engine.pareto import ParetoPoint
+                pareto.offer(ParetoPoint(sum(lats.values()),
+                                         sum(ens.values()), area,
+                                         payload=list(cfg.as_tuple())))
+    if evaluated:
+        with trace.span("fit", strategy=sname):
+            fit_info = strategy.fit()
+    else:
+        fit_info = None
+    # per-iteration search-progress metrics (read back by campaigns
+    # and the fig9/report observability sections)
+    metrics.METRICS.counter(f"dse.{sname}.iterations").inc()
+    metrics.METRICS.counter(f"dse.{sname}.observations").inc(len(it_obs))
+    legal_hist.observe(legal_n / max(1, n_props))
+    for o in it_obs:
+        if o.cost is not None and not math.isinf(o.cost):
+            best_gauge.min(o.cost)
+    if on_iteration is not None:
+        on_iteration(it, it_obs)
+    if verbose and evaluated:
+        cfg, area, (cost, _, _) = evaluated[0]
+        # PimTuner.fit reports its model losses; other strategies None
+        fit_str = "" if not isinstance(fit_info, dict) else " " + " ".join(
+            f"{k}_loss={v:.3g}" for k, v in fit_info.items())
+        print(f"[dse:{getattr(strategy, 'name', 'nicepim')}] it={it} "
+              f"mapped={len(evaluated)} cfg={cfg.as_tuple()} "
+              f"area={area:.1f} "
+              f"cost={cost if not math.isinf(cost) else 'inf'} "
+              f"({time.time() - t0:.1f}s){fit_str}")
+    return it_obs
+
+
 def _dse_iteration(strategy, evaluator, it, propose_k, cons, verbose,
                    pareto, on_iteration, evaluate_all_legal, sname,
                    best_gauge, legal_hist, batch_area_mm2
                    ) -> list[Observation]:
     with trace.span("iteration", strategy=sname, it=it):
         t0 = time.time()
-        it_obs: list[Observation] = []
-        with trace.span("propose", strategy=sname, k=propose_k):
-            props = strategy.propose(propose_k)
-        areas = batch_area_mm2(props)
-        legal_n = sum(1 for a in areas
-                      if float(a) <= cons.area_budget_mm2)
+        props, it_obs, to_eval, legal_n = propose_screen(
+            strategy, it, propose_k, cons, sname, evaluate_all_legal,
+            batch_area_mm2)
         evaluated: list[tuple[HwConfig, float, tuple]] = []
         if evaluate_all_legal:
-            # every legal proposal is mapped, batched across configs
-            legal_pairs = []
-            for cfg, area in zip(props, areas):
-                area = float(area)
-                if area <= cons.area_budget_mm2:
-                    legal_pairs.append((cfg, area))
-                else:
-                    strategy.observe(cfg, area, None)
-                    it_obs.append(Observation(it, cfg, area, False))
-            if legal_pairs:
+            if to_eval:
+                # every legal proposal is mapped, batched across configs
                 results = evaluator.evaluate_batch(
-                    [cfg for cfg, _ in legal_pairs])
+                    [cfg for cfg, _ in to_eval])
                 evaluated = [(cfg, area, res) for (cfg, area), res
-                             in zip(legal_pairs, results)]
-        else:
-            # walk the batch in proposal order until a legal architecture
-            # appears (Fig. 7-4); illegal prefixes still train the filter
-            chosen = None
-            for cfg, area in zip(props, areas):
-                area = float(area)
-                if area <= cons.area_budget_mm2:
-                    chosen = (cfg, area)
-                    break
-                strategy.observe(cfg, area, None)
-                it_obs.append(Observation(it, cfg, area, False))
-            if chosen is not None:
-                cfg, area = chosen
-                evaluated = [(cfg, area, evaluator(cfg))]
-        for cfg, area, (cost, lats, ens) in evaluated:
-            if math.isinf(cost):
-                strategy.observe(cfg, area, None)
-                it_obs.append(Observation(it, cfg, area, True))
-            else:
-                strategy.observe(cfg, area, cost)
-                it_obs.append(Observation(it, cfg, area, True, cost, lats,
-                                          ens))
-                if pareto is not None:
-                    from ..engine.pareto import ParetoPoint
-                    pareto.offer(ParetoPoint(sum(lats.values()),
-                                             sum(ens.values()), area,
-                                             payload=list(cfg.as_tuple())))
-        if evaluated:
-            with trace.span("fit", strategy=sname):
-                fit_info = strategy.fit()
-        else:
-            fit_info = None
-        # per-iteration search-progress metrics (read back by campaigns
-        # and the fig9/report observability sections)
-        metrics.METRICS.counter(f"dse.{sname}.iterations").inc()
-        metrics.METRICS.counter(f"dse.{sname}.observations").inc(len(it_obs))
-        legal_hist.observe(legal_n / max(1, len(props)))
-        for o in it_obs:
-            if o.cost is not None and not math.isinf(o.cost):
-                best_gauge.min(o.cost)
-        if on_iteration is not None:
-            on_iteration(it, it_obs)
-        if verbose and evaluated:
-            cfg, area, (cost, _, _) = evaluated[0]
-            # PimTuner.fit reports its model losses; other strategies None
-            fit_str = "" if not isinstance(fit_info, dict) else " " + " ".join(
-                f"{k}_loss={v:.3g}" for k, v in fit_info.items())
-            print(f"[dse:{getattr(strategy, 'name', 'nicepim')}] it={it} "
-                  f"mapped={len(evaluated)} cfg={cfg.as_tuple()} "
-                  f"area={area:.1f} "
-                  f"cost={cost if not math.isinf(cost) else 'inf'} "
-                  f"({time.time() - t0:.1f}s){fit_str}")
+                             in zip(to_eval, results)]
+        elif to_eval:
+            cfg, area = to_eval[0]
+            evaluated = [(cfg, area, evaluator(cfg))]
+        ingest_results(strategy, it, it_obs, evaluated, pareto, sname,
+                       best_gauge, legal_hist, legal_n, len(props),
+                       on_iteration, verbose, t0)
     return it_obs

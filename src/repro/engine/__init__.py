@@ -19,14 +19,19 @@ pipeline:
   per proposal, deferred model fits, and cross-config scheduler prefill.
 * :mod:`.pareto` — streaming latency/energy/area Pareto-frontier tracker.
 * :mod:`.cache` — content-addressed memoization of mapper/scheduler results
-  keyed by (HwConfig, DnnGraph) digests.
+  keyed by (HwConfig, DnnGraph) digests; :class:`PersistentEvalCache` backs
+  the table with a multi-process-safe sqlite store.
 * :mod:`.campaign` — multi-strategy, multi-workload DSE campaigns with JSON
   checkpoint/resume.
+* :mod:`.sharded` — the mega-campaign runner: many tenant DSE streams with
+  candidate rows sharded over a ``config`` device mesh, async wave overlap,
+  and the shared persistent cache.
 """
 
 from .batch_cost import (BatchCostResult, PartSpec, batch_area_mm2,
                          batch_max_link_load, batch_part_cost)
-from .cache import EvalCache, cons_digest, graph_digest, hw_digest
+from .cache import (EvalCache, PersistentEvalCache, cons_digest,
+                    graph_digest, hw_digest)
 from .pareto import ParetoFront, ParetoPoint
 from .scheduler_opt import schedule_many
 from .tuner_train import (compiled_program_count, fit_dkl, fit_filter,
@@ -34,6 +39,8 @@ from .tuner_train import (compiled_program_count, fit_dkl, fit_filter,
                           score_candidates_raw)
 from .campaign import Campaign, CampaignResult
 from .pipeline import DsePipeline
+from .sharded import (ShardedCampaign, ShardedProposer, TenantSpec,
+                      campaign_mesh, shard_config_rows)
 
 
 def engine_program_counts() -> dict[str, int]:
@@ -46,9 +53,9 @@ def engine_program_counts() -> dict[str, int]:
     contract.  :func:`compiled_program_count` keeps its historical
     tuner-only view; this is the whole-engine superset.
     """
-    from . import batch_cost, pipeline, scheduler_opt, tuner_train
+    from . import batch_cost, pipeline, scheduler_opt, sharded, tuner_train
     out: dict[str, int] = {}
-    for mod in (batch_cost, pipeline, scheduler_opt, tuner_train):
+    for mod in (batch_cost, pipeline, scheduler_opt, sharded, tuner_train):
         label = mod.__name__.rsplit(".", 1)[-1]
         for name, fn in mod._JITTED.items():
             try:
@@ -60,10 +67,12 @@ def engine_program_counts() -> dict[str, int]:
 
 __all__ = [
     "BatchCostResult", "PartSpec", "batch_area_mm2", "batch_max_link_load",
-    "batch_part_cost", "DsePipeline", "EvalCache", "cons_digest",
+    "batch_part_cost", "DsePipeline", "EvalCache", "PersistentEvalCache",
+    "cons_digest",
     "graph_digest", "hw_digest", "ParetoFront", "ParetoPoint", "Campaign",
-    "CampaignResult", "compiled_program_count", "engine_program_counts",
+    "CampaignResult", "ShardedCampaign", "ShardedProposer", "TenantSpec",
+    "campaign_mesh", "compiled_program_count", "engine_program_counts",
     "fit_dkl", "fit_filter",
     "pad_dataset", "pow2_bucket", "schedule_many", "score_candidates",
-    "score_candidates_raw",
+    "score_candidates_raw", "shard_config_rows",
 ]

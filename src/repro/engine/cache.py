@@ -18,12 +18,16 @@ import dataclasses
 import hashlib
 import json
 import math
+import sqlite3
 import threading
+import warnings
 from pathlib import Path
 from typing import Any, Iterable
 
 from ..core.hardware import HwConfig, PimConstraints
 from ..core.ir import DnnGraph
+from ..obs import metrics as obs_metrics
+from ..obs import trace
 
 _LAYER_FIELDS = ("name", "kind", "B", "C", "H", "W", "K", "HK", "WK",
                  "stride", "pad")
@@ -82,8 +86,13 @@ class EvalCache:
     def __init__(self):
         self._data: dict[str, Any] = {}
         self._lock = threading.Lock()
+        # single-flight admission: key -> Event set when the owning
+        # evaluation commits (or abandons), see lease()/complete()
+        self._flight_lock = threading.Lock()
+        self._inflight: dict[str, threading.Event] = {}
         self.hits = 0
         self.misses = 0
+        self.flight_waits = 0
 
     @staticmethod
     def key(cfg: HwConfig, workloads: Iterable[DnnGraph]) -> str:
@@ -101,13 +110,55 @@ class EvalCache:
         with self._lock:
             self._data[key] = value
 
+    # -- single-flight admission ---------------------------------------------
+    #
+    # Concurrent evaluators (the sharded campaign's eval workers, duplicated
+    # tenant submissions) race to compute the same key: both miss, both run
+    # the mapper, the second put is wasted work.  lease() closes the race:
+    # exactly one caller becomes the key's *owner* (computes, puts,
+    # complete()s); everyone else blocks until the owner commits, then reads
+    # the cached value.  Owners MUST call complete(key) in a finally — an
+    # abandoned lease (owner raised) wakes the waiters, and whoever re-leases
+    # first becomes the new owner.
+
+    def lease(self, key: str,
+              timeout_s: float = 60.0) -> tuple[Any | None, bool]:
+        """Hit, or admission to compute: returns ``(value, owner)``.
+
+        ``(value, False)`` — cached (possibly after waiting out another
+        caller's in-flight evaluation); ``(None, True)`` — this caller now
+        owns computing ``key`` and must ``put`` + ``complete`` it.
+        ``timeout_s`` bounds each wait on the owner; on timeout the state is
+        simply re-checked, so a stuck owner delays waiters but cannot wedge
+        them permanently once it abandons.
+        """
+        while True:
+            with self._flight_lock:
+                ev = self._inflight.get(key)
+                if ev is None:
+                    hit = self.get(key)
+                    if hit is not None:
+                        return hit, False
+                    self._inflight[key] = threading.Event()
+                    return None, True
+                self.flight_waits += 1
+            ev.wait(timeout_s)
+
+    def complete(self, key: str) -> None:
+        """Release a lease()d key, waking waiters (idempotent)."""
+        with self._flight_lock:
+            ev = self._inflight.pop(key, None)
+        if ev is not None:
+            ev.set()
+
     def __len__(self) -> int:
         return len(self._data)
 
     @property
     def stats(self) -> dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._data)}
+                "entries": len(self._data),
+                "flight_waits": self.flight_waits}
 
     # -- persistence ---------------------------------------------------------
     #
@@ -146,9 +197,161 @@ class EvalCache:
 
     @classmethod
     def load(cls, path: str | Path) -> "EvalCache":
+        """Load a persisted table; a corrupt file starts empty — loudly.
+
+        A truncated / garbled JSON file (half-written save, disk trouble)
+        must not take the whole campaign down, but silently dropping a
+        warm evaluation table costs users entire re-runs, so this mirrors
+        ``Campaign._discard_checkpoint``: RuntimeWarning, a
+        ``cache.discarded`` counter and an instant trace event.
+        """
         cache = cls()
         p = Path(path)
-        if p.exists():
-            cache._data = {k: cls._none_to_inf(v)
-                           for k, v in json.loads(p.read_text()).items()}
+        if not p.exists():
+            return cache
+        try:
+            data = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            warnings.warn(
+                f"discarding eval cache {p} (unreadable): {e}; "
+                "starting empty", RuntimeWarning, stacklevel=2)
+            obs_metrics.METRICS.counter("cache.discarded").inc()
+            trace.instant("cache_discarded", cat="cache", path=str(p),
+                          error=str(e))
+            return cache
+        cache._data = {k: cls._none_to_inf(v) for k, v in data.items()}
         return cache
+
+
+class PersistentEvalCache(EvalCache):
+    """Cross-process :class:`EvalCache` backed by a sqlite file.
+
+    The file is the shared evaluation table of a *mega-campaign*: eval-shard
+    worker threads in one process, concurrent campaign processes, and
+    repeated submissions of the same campaign all read and write one store,
+    so an identical (config, workloads) point is mapped at most once
+    fleet-wide.  Design points:
+
+    * every ``put`` is one committed sqlite transaction (WAL journal,
+      ``busy_timeout`` retries) — atomic under concurrent writers and
+      durable against ``SIGKILL`` mid-campaign, which is what makes
+      kill-and-resume lose zero evaluations;
+    * values keep the JSON encoding of the base class (``+inf`` ↔ ``None``
+      sentinel, ``allow_nan=False``) so a store written by one backend
+      version stays strict-RFC readable;
+    * reads fill the in-memory table, so a key is decoded once per process;
+    * ``stats`` additionally reports ``persistent_hits`` (served from disk,
+      not memory) and ``reeval_preexisting`` — puts that overwrote a key
+      already present when the store was opened.  A resume run asserting
+      ``reeval_preexisting == 0`` has proven that no already-evaluated
+      point was re-mapped (the BENCH 9 kill-and-resume contract).
+
+    Thread-safe: sqlite connections are per-thread (``threading.local``);
+    the in-memory side reuses the base class lock.
+    """
+
+    _SCHEMA = ("CREATE TABLE IF NOT EXISTS entries ("
+               "key TEXT PRIMARY KEY, value TEXT NOT NULL)")
+
+    def __init__(self, path: str | Path, *, timeout_s: float = 30.0):
+        super().__init__()
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._timeout_s = timeout_s
+        self._tls = threading.local()
+        self.persistent_hits = 0
+        self.reeval_preexisting = 0
+        try:
+            con = self._con()
+            self._preexisting = {row[0] for row in
+                                 con.execute("SELECT key FROM entries")}
+        except sqlite3.DatabaseError:
+            # not a sqlite store (truncated, corrupt, or a foreign file) —
+            # sideline it and start fresh; an unreadable cache must never
+            # be the reason a campaign cannot start
+            stale = getattr(self._tls, "con", None)
+            if stale is not None:
+                stale.close()
+                self._tls.con = None
+            quarantine = self.path.with_suffix(self.path.suffix + ".corrupt")
+            self.path.replace(quarantine)
+            warnings.warn(
+                f"unreadable eval cache {self.path}: sidelined to "
+                f"{quarantine}, starting fresh", RuntimeWarning,
+                stacklevel=2)
+            con = self._con()
+            self._preexisting = set()
+
+    def _con(self) -> sqlite3.Connection:
+        con = getattr(self._tls, "con", None)
+        if con is None:
+            con = sqlite3.connect(self.path, timeout=self._timeout_s)
+            # WAL lets concurrent processes read while one writes; NORMAL
+            # synchronous keeps the post-commit durability we need (a
+            # committed put survives SIGKILL) without a full fsync storm
+            con.execute("PRAGMA journal_mode=WAL")
+            con.execute("PRAGMA synchronous=NORMAL")
+            con.execute(self._SCHEMA)
+            con.commit()
+            self._tls.con = con
+        return con
+
+    def get(self, key: str) -> Any | None:
+        with self._lock:
+            if key in self._data:
+                self.hits += 1
+                return self._data[key]
+        row = self._con().execute(
+            "SELECT value FROM entries WHERE key = ?", (key,)).fetchone()
+        with self._lock:
+            if row is None:
+                self.misses += 1
+                return None
+            value = self._none_to_inf(json.loads(row[0]))
+            self._data[key] = value
+            self.hits += 1
+            self.persistent_hits += 1
+            return value
+
+    def put(self, key: str, value: Any) -> None:
+        payload = json.dumps(self._inf_to_none(value), allow_nan=False)
+        con = self._con()
+        con.execute("INSERT OR REPLACE INTO entries (key, value) "
+                    "VALUES (?, ?)", (key, payload))
+        con.commit()
+        with self._lock:
+            self._data[key] = value
+            if key in self._preexisting:
+                self.reeval_preexisting += 1
+
+    def __len__(self) -> int:
+        row = self._con().execute("SELECT COUNT(*) FROM entries").fetchone()
+        return int(row[0])
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self),
+                "flight_waits": self.flight_waits,
+                "persistent_hits": self.persistent_hits,
+                "preexisting": len(self._preexisting),
+                "reeval_preexisting": self.reeval_preexisting}
+
+    def save(self, path: str | Path | None = None) -> None:
+        """No-op for the backing store (every put already committed);
+        with an explicit ``path``, exports a plain-JSON snapshot."""
+        if path is not None:
+            self._fill_from_db()
+            super().save(path)
+
+    def _fill_from_db(self) -> None:
+        rows = self._con().execute("SELECT key, value FROM entries")
+        with self._lock:
+            for k, v in rows:
+                self._data.setdefault(k, self._none_to_inf(json.loads(v)))
+
+    def close(self) -> None:
+        con = getattr(self._tls, "con", None)
+        if con is not None:
+            con.close()
+            self._tls.con = None

@@ -6,7 +6,9 @@ Fig. 9 comparison baselines) over a shared workload set, concurrently, with:
 * one shared content-addressed :class:`EvalCache` — strategies converging on
   the same promising region never re-map an identical hardware point;
 * a shared :class:`ParetoFront` fed by every legal evaluated observation;
-* JSON checkpointing after every DSE iteration and resume: completed
+* JSON checkpointing after every DSE iteration (throttle with
+  ``checkpoint_every_n``; the final state is always written) and resume:
+  completed
   strategies are loaded from the checkpoint verbatim; a partially-finished
   strategy is replayed (its saved observations re-fed to a fresh model) and
   continued from the first missing iteration.
@@ -77,6 +79,8 @@ class CampaignResult:
     def best(self) -> Observation:
         cands = [o for r in self.results.values() for o in r.observations
                  if o.cost is not None]
+        if not cands:
+            raise ValueError("no legal observations")
         return min(cands, key=lambda o: o.cost)
 
 
@@ -96,6 +100,7 @@ class Campaign:
                  checkpoint: str | Path | None = None,
                  max_workers: int | None = None,
                  cache: EvalCache | None = None,
+                 checkpoint_every_n: int = 1,
                  tracer: trace.Tracer | None = None,
                  metrics: obs_metrics.MetricsRegistry | None = None,
                  verbose: bool = False):
@@ -116,6 +121,9 @@ class Campaign:
         if scheduler_backend is not None:
             self.evaluator_kwargs["scheduler_backend"] = scheduler_backend
         self.checkpoint = Path(checkpoint) if checkpoint else None
+        if checkpoint_every_n < 1:
+            raise ValueError("checkpoint_every_n must be >= 1")
+        self.checkpoint_every_n = checkpoint_every_n
         self.max_workers = max_workers or min(4, max(1, len(self.strategies)))
         self.cache = cache if cache is not None else EvalCache()
         self.tracer = tracer
@@ -124,6 +132,10 @@ class Campaign:
         self.pareto = ParetoFront()
         self._obs: dict[str, list[Observation]] = {}
         self._lock = threading.Lock()
+        # serializes checkpoint serialization+rename across strategy
+        # threads without holding the observation lock (they share a .tmp)
+        self._ckpt_lock = threading.Lock()
+        self._iters_since_ckpt = 0
 
     # -- checkpoint I/O ------------------------------------------------------
     def _fingerprint(self) -> str:
@@ -182,38 +194,57 @@ class Campaign:
         return {name: [_obs_from_json(d, self.cons) for d in rows]
                 for name, rows in state.get("strategies", {}).items()}
 
+    def _maybe_checkpoint(self) -> None:
+        """Per-iteration hook honouring the ``checkpoint_every_n`` knob."""
+        with self._lock:
+            self._iters_since_ckpt += 1
+            due = self._iters_since_ckpt >= self.checkpoint_every_n
+            if due:
+                self._iters_since_ckpt = 0
+        if due:
+            self._write_checkpoint()
+
     def _write_checkpoint(self) -> None:
         if not self.checkpoint:
             return
-        with trace.span("checkpoint", cat="campaign") as sp:
+        with trace.span("checkpoint", cat="campaign") as sp, self._ckpt_lock:
+            # snapshot shared state under the lock, but serialize and hit
+            # the filesystem OUTSIDE it — json.dumps over a long campaign's
+            # observation table is O(obs) work that would otherwise stall
+            # every concurrent strategy's observe/offer path
             with self._lock:
-                state = {
-                    "fingerprint": self._fingerprint(),
-                    "iterations": self.iterations, "seed": self.seed,
-                    "strategies": {n: [_obs_to_json(o) for o in obs]
-                                   for n, obs in self._obs.items()},
-                    "pareto": self.pareto.to_jsonable(),
-                    "metrics": self.metrics.snapshot(),
-                }
-                tmp = self.checkpoint.with_suffix(".tmp")
-                tmp.write_text(json.dumps(state))
-                os.replace(tmp, self.checkpoint)
-                sp["observations"] = sum(
-                    len(obs) for obs in self._obs.values())
+                obs_copy = {n: list(obs) for n, obs in self._obs.items()}
+                pareto = self.pareto.to_jsonable()
+            state = {
+                "fingerprint": self._fingerprint(),
+                "iterations": self.iterations, "seed": self.seed,
+                "strategies": {n: [_obs_to_json(o) for o in obs]
+                               for n, obs in obs_copy.items()},
+                "pareto": pareto,
+                "metrics": self.metrics.snapshot(),
+            }
+            tmp = self.checkpoint.with_suffix(".tmp")
+            tmp.write_text(json.dumps(state))
+            os.replace(tmp, self.checkpoint)
+            sp["observations"] = sum(len(obs) for obs in obs_copy.values())
 
     # -- the run -------------------------------------------------------------
     def _completed_iters(self, obs: list[Observation]) -> int:
         return max((o.iteration for o in obs), default=-1) + 1
 
     def _offer_pareto(self, obs: list[Observation]) -> None:
-        for o in obs:
-            if o.cost is None or o.cost != o.cost:
-                continue
-            lat = sum(o.latency_s.values())
-            en = sum(o.energy_pj.values())
-            with self._lock:
-                self.pareto.offer(ParetoPoint(lat, en, o.area_mm2,
-                                              payload=list(o.cfg.as_tuple())))
+        # build the points lock-free, then offer the whole batch under ONE
+        # acquisition — per-observation acquire/release was pure overhead
+        # on the concurrent strategies' hot observe path
+        points = [ParetoPoint(sum(o.latency_s.values()),
+                              sum(o.energy_pj.values()), o.area_mm2,
+                              payload=list(o.cfg.as_tuple()))
+                  for o in obs if o.cost is not None and o.cost == o.cost]
+        if not points:
+            return
+        with self._lock:
+            for p in points:
+                self.pareto.offer(p)
 
     def _run_strategy(self, name: str, evaluator: WorkloadEvaluator,
                       saved: list[Observation]
@@ -258,7 +289,7 @@ class Campaign:
             with self._lock:
                 self._obs[name].extend(new_obs)
             self._offer_pareto(new_obs)
-            self._write_checkpoint()
+            self._maybe_checkpoint()
 
         res = run_dse(strat, evaluator, iterations=self.iterations,
                       propose_k=self.propose_k, cons=self.cons,

@@ -141,7 +141,17 @@ class DsePipeline:
         self._beta = jax.device_put(np.float32(tuner.suggestion.beta))
         self._budget = jax.device_put(
             np.float32(tuner.cons.area_budget_mm2))
-        self._ones = jax.device_put(np.ones(tuner.n_sample, bool))
+        self._ones = self._put_rows(np.ones(tuner.n_sample, bool))
+
+    def _put_rows(self, x):
+        """Host->device placement for ``[n_sample, ...]`` row arrays.
+
+        The sharded campaign runner (:mod:`repro.engine.sharded`) overrides
+        this with a config-axis :class:`~jax.sharding.NamedSharding` put;
+        the row-local stage math is placement-independent, so overriding
+        placement alone keeps proposals bitwise identical.
+        """
+        return jax.device_put(x)
 
     # -- the fused propose chain -------------------------------------------
 
@@ -151,11 +161,11 @@ class DsePipeline:
                         n=t.n_sample, k=k) as sp:
             # stage 0 (host): vectorized draw + normalize, then ONE put
             vals = sample_config_values(t.n_sample, t.rng, t.cons)
-            xq = jax.device_put(normalize_params_batch(vals))
+            xq = self._put_rows(normalize_params_batch(vals))
             ok = (_area_mask(t.filter_model.params, xq, self._budget)
                   if t.filter_model.trained() else self._ones)
             scores = self._scores(xq, ok)
-            sel, cnt = _select_topk(jax.device_put(vals), scores, ok, k=k)
+            sel, cnt = _select_topk(self._put_rows(vals), scores, ok, k=k)
             # the iteration's one host sync: k winner indices + a count
             sel, cnt = jax.device_get((sel, cnt))
             sp["selected"] = int(cnt)

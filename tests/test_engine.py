@@ -178,7 +178,8 @@ def test_eval_cache_roundtrip(tmp_path):
     assert cache.get(key) is None
     cache.put(key, (1.5, {"g": 2.0}, {"g": 3.0}))
     assert cache.get(key)[0] == 1.5
-    assert cache.stats == {"hits": 1, "misses": 1, "entries": 1}
+    assert cache.stats == {"hits": 1, "misses": 1, "entries": 1,
+                           "flight_waits": 0}
     cache.save(tmp_path / "cache.json")
     back = EvalCache.load(tmp_path / "cache.json")
     assert back.get(key)[0] == 1.5

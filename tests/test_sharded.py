@@ -1,0 +1,311 @@
+"""Sharded mega-campaign runner + persistent EvalCache tests.
+
+Covers the PR 9 contracts: corrupt-cache loads stay loud, the sqlite store
+survives concurrent writers with coherent stats, checkpoint throttling
+keeps the final state complete, and a sharded campaign's observation
+stream is bit-identical to its single-stream ``run_dse`` twin — including
+after a simulated mid-campaign kill, where the persistent cache must serve
+every already-evaluated point (zero re-mapping).
+"""
+
+import json
+import math
+import threading
+
+import pytest
+
+from repro.core.dse import WorkloadEvaluator, run_dse
+from repro.core.surrogates import make_strategy
+from repro.core.workloads import googlenet
+from repro.engine import (Campaign, CampaignResult, EvalCache,
+                          PersistentEvalCache, ShardedCampaign, TenantSpec,
+                          campaign_mesh, shard_config_rows)
+from repro.engine.pareto import ParetoFront
+from repro.obs import metrics as obs_metrics
+
+MAPPER_KW = dict(max_optim_iter=1, lm_cap=20, n_wr=2)
+
+
+@pytest.fixture(scope="module")
+def tiny_workloads():
+    return [googlenet(1, scale=8)]
+
+
+# ---------------------------------------------------------------------------
+# EvalCache.load robustness (satellite: corrupt checkpoint must be loud)
+# ---------------------------------------------------------------------------
+
+
+def test_evalcache_load_corrupt_json_starts_empty(tmp_path):
+    p = tmp_path / "cache.json"
+    p.write_text('{"k": [1.0, {}, {}')          # truncated mid-write
+    before = obs_metrics.METRICS.counter("cache.discarded").snapshot()
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        cache = EvalCache.load(p)
+    assert len(cache) == 0
+    after = obs_metrics.METRICS.counter("cache.discarded").snapshot()
+    assert after == before + 1
+
+
+def test_evalcache_load_missing_file_is_silent(tmp_path):
+    before = obs_metrics.METRICS.counter("cache.discarded").snapshot()
+    cache = EvalCache.load(tmp_path / "nope.json")
+    assert len(cache) == 0
+    assert obs_metrics.METRICS.counter("cache.discarded").snapshot() == before
+
+
+def test_evalcache_save_load_roundtrip(tmp_path):
+    p = tmp_path / "cache.json"
+    c = EvalCache()
+    c.put("a", (math.inf, {}, {}))
+    c.put("b", (1.5, {"g": 2.0}, {"g": 3.0}))
+    c.save(p)
+    c2 = EvalCache.load(p)
+    assert c2.get("a") == [math.inf, {}, {}]
+    assert c2.get("b") == [1.5, {"g": 2.0}, {"g": 3.0}]
+
+
+# ---------------------------------------------------------------------------
+# PersistentEvalCache
+# ---------------------------------------------------------------------------
+
+
+def test_persistent_cache_cross_instance(tmp_path):
+    db = tmp_path / "evals.sqlite"
+    c1 = PersistentEvalCache(db)
+    c1.put("inf", (math.inf, {}, {}))
+    c1.put("fin", (2.5, {"g": 1.0}, {"g": 4.0}))
+    # a second instance (another process in real life) sees both entries
+    c2 = PersistentEvalCache(db)
+    assert len(c2) == 2
+    assert c2.get("inf") == [math.inf, {}, {}]     # json round-trip: lists
+    assert c2.get("fin") == [2.5, {"g": 1.0}, {"g": 4.0}]
+    assert c2.stats["persistent_hits"] == 2
+    assert c2.stats["preexisting"] == 2
+    # overwriting a key that predates the open is a re-evaluation — the
+    # kill-and-resume contract counts (and forbids) these
+    c2.put("fin", (2.5, {"g": 1.0}, {"g": 4.0}))
+    assert c2.stats["reeval_preexisting"] == 1
+    assert c1.stats["reeval_preexisting"] == 0
+
+
+def test_persistent_cache_corrupt_file_starts_fresh(tmp_path):
+    db = tmp_path / "evals.sqlite"
+    db.write_bytes(b"this is not a sqlite database at all")
+    with pytest.warns(RuntimeWarning, match="unreadable eval cache"):
+        c = PersistentEvalCache(db)
+    # the corrupt payload is sidelined, not destroyed, and the fresh
+    # store is fully functional
+    assert (tmp_path / "evals.sqlite.corrupt").read_bytes().startswith(
+        b"this is not")
+    c.put("k", (1.0, {}, {}))
+    assert PersistentEvalCache(db).get("k") == [1.0, {}, {}]
+    assert c.stats["preexisting"] == 0
+
+
+def test_persistent_cache_concurrent_writers(tmp_path):
+    db = tmp_path / "evals.sqlite"
+    n_threads, n_keys = 6, 40
+    errors: list = []
+
+    def hammer(tid: int):
+        try:
+            store = PersistentEvalCache(db)
+            for j in range(n_keys):
+                store.put(f"w{tid}.{j}", (float(j), {}, {"e": float(tid)}))
+                got = store.get(f"w{tid}.{j}")
+                assert got == (float(j), {}, {"e": float(tid)})
+        except Exception as e:        # surface into the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    # no lost entries, no corruption: every key readable from a fresh view
+    fresh = PersistentEvalCache(db)
+    assert len(fresh) == n_threads * n_keys
+    for tid in range(n_threads):
+        for j in range(n_keys):
+            assert fresh.get(f"w{tid}.{j}") == [float(j), {},
+                                                {"e": float(tid)}]
+    stats = fresh.stats
+    assert stats["hits"] == n_threads * n_keys
+    assert stats["persistent_hits"] == n_threads * n_keys
+    assert stats["misses"] == 0
+
+
+def test_single_flight_concurrent_evaluators(tiny_workloads, tmp_path):
+    """Two evaluators racing on the SAME config map it exactly once.
+
+    This is the sharded campaign's duplicated-submission contract: tenant
+    waves evaluating concurrently lease each content key, so the loser
+    blocks on the winner's commit instead of re-running the mapper.
+    """
+    cache = PersistentEvalCache(tmp_path / "evals.sqlite")
+    evs = [WorkloadEvaluator(tiny_workloads, cache=cache,
+                             mapper_kwargs=MAPPER_KW)
+           for _ in range(2)]
+    from repro.core.hardware import DEFAULT_CONSTRAINTS, sample_configs_batch
+    import numpy as np
+    cfg = sample_configs_batch(1, np.random.default_rng(0),
+                               DEFAULT_CONSTRAINTS)[0]
+    results, errors = [], []
+    barrier = threading.Barrier(2)
+
+    def go(ev):
+        try:
+            barrier.wait()
+            results.append(ev.evaluate_batch([cfg])[0])
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=go, args=(ev,)) for ev in evs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert results[0] == results[1]
+    assert sum(ev.evaluations for ev in evs) == 1     # single flight
+    assert cache.stats["flight_waits"] >= 1
+
+
+def test_persistent_cache_works_as_campaign_cache(tiny_workloads, tmp_path):
+    db = tmp_path / "evals.sqlite"
+    kw = dict(iterations=1, propose_k=2, seed=5, n_sample=32,
+              evaluator_kwargs=dict(mapper_kwargs=MAPPER_KW))
+    out1 = Campaign(tiny_workloads, ("random",),
+                    cache=PersistentEvalCache(db), **kw).run()
+    # a SECOND campaign process over the same search: every evaluation is
+    # served from disk, the mapper never runs
+    c2 = PersistentEvalCache(db)
+    out2 = Campaign(tiny_workloads, ("random",), cache=c2, **kw).run()
+    assert out2.cache_stats["misses"] == 0
+    assert c2.stats["reeval_preexisting"] == 0
+    a = [o.cfg.as_tuple() for o in out1.results["random"].observations]
+    b = [o.cfg.as_tuple() for o in out2.results["random"].observations]
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# campaign satellites: checkpoint throttle, best() on empty
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_every_n_throttles_but_completes(tiny_workloads,
+                                                    tmp_path):
+    writes = []
+    kw = dict(iterations=3, propose_k=2, seed=2, n_sample=32,
+              evaluator_kwargs=dict(mapper_kwargs=MAPPER_KW))
+    ck = tmp_path / "ck.json"
+    camp = Campaign(tiny_workloads, ("random",), checkpoint=ck,
+                    checkpoint_every_n=2, **kw)
+    orig = camp._write_checkpoint
+
+    def counting_write():
+        writes.append(1)
+        orig()
+    camp._write_checkpoint = counting_write
+    out = camp.run()
+    # 3 iterations / every-2 -> 1 throttled write, +1 final = 2 (vs 4
+    # with the default); the final state is still complete
+    assert len(writes) == 2
+    state = json.loads(ck.read_text())
+    iters = {o["iteration"] for o in state["strategies"]["random"]}
+    assert iters == {0, 1, 2}
+    assert len(out.results["random"].observations) >= 3
+
+
+def test_checkpoint_every_n_validation(tiny_workloads):
+    with pytest.raises(ValueError, match="checkpoint_every_n"):
+        Campaign(tiny_workloads, ("random",), checkpoint_every_n=0)
+
+
+def test_campaign_result_best_empty_raises():
+    from repro.core.dse import DseResult
+    res = CampaignResult(results={"s": DseResult([])},
+                         pareto=ParetoFront(), cache_stats={})
+    with pytest.raises(ValueError, match="no legal observations"):
+        res.best()
+
+
+# ---------------------------------------------------------------------------
+# sharded runner: mesh helpers + bit parity + kill-and-resume
+# ---------------------------------------------------------------------------
+
+
+def test_shard_config_rows_divisibility(tmp_path):
+    import numpy as np
+    mesh = campaign_mesh()          # 1 device under plain pytest
+    x = shard_config_rows(mesh, np.arange(12.0).reshape(6, 2))
+    assert x.shape == (6, 2)
+    import numpy.testing as npt
+    npt.assert_array_equal(np.asarray(x),
+                           np.arange(12.0).reshape(6, 2))
+
+
+def _tenant(tiny_workloads, seed, iterations=2):
+    return TenantSpec(name=f"t{seed}", workloads=tiny_workloads, seed=seed,
+                      iterations=iterations, propose_k=4, n_sample=64,
+                      evaluator_kwargs=dict(mapper_kwargs=MAPPER_KW))
+
+
+def _stream(res):
+    return [(o.iteration, o.cfg.as_tuple(), o.legal, o.cost)
+            for o in res.observations]
+
+
+def test_sharded_campaign_bit_parity_with_run_dse(tiny_workloads, tmp_path):
+    spec = _tenant(tiny_workloads, seed=7)
+    strat = make_strategy("nicepim", cons=spec.cons, seed=7, n_sample=64)
+    ev = WorkloadEvaluator(tiny_workloads, mapper_kwargs=MAPPER_KW,
+                           clear_caches_between_configs=True)
+    ref = run_dse(strat, ev, iterations=2, propose_k=4, pipeline=True)
+
+    db = tmp_path / "evals.sqlite"
+    ck = tmp_path / "ck.json"
+    cache = PersistentEvalCache(db)
+    out = ShardedCampaign([spec], cache=cache, checkpoint=ck).run()
+    assert _stream(out.results["t7"]) == _stream(ref)
+    assert len(out.pareto) >= 1
+    assert out.best().cost > 0
+
+    # kill-and-resume: truncate the checkpoint to iteration 0 (as if the
+    # process died mid-campaign) — the resumed run replays by re-proposal,
+    # with the persistent cache serving every already-evaluated point
+    state = json.loads(ck.read_text())
+    state["tenants"]["t7"] = [o for o in state["tenants"]["t7"]
+                              if o["iteration"] == 0]
+    ck.write_text(json.dumps(state))
+    cache2 = PersistentEvalCache(db)
+    camp2 = ShardedCampaign([_tenant(tiny_workloads, seed=7)], cache=cache2,
+                            checkpoint=ck)
+    out2 = camp2.run()
+    assert out2.resumed == ["t7"]
+    # replay-by-re-proposal makes the continued stream BITWISE identical
+    # to the uninterrupted reference, not just statistically equivalent
+    assert _stream(out2.results["t7"]) == _stream(ref)
+    # zero re-mapping of known configs: the mapper never ran and no
+    # pre-kill cache entry was overwritten
+    assert sum(s.evaluator.evaluations for s in camp2._states) == 0
+    assert cache2.stats["reeval_preexisting"] == 0
+
+
+def test_sharded_campaign_overlaps_multiple_tenants(tiny_workloads,
+                                                    tmp_path):
+    specs = [_tenant(tiny_workloads, seed=s, iterations=1) for s in (8, 9)]
+    out = ShardedCampaign(specs, queue_depth=2, eval_workers=2).run()
+    assert set(out.results) == {"t8", "t9"}
+    for name in ("t8", "t9"):
+        assert len(out.results[name].observations) >= 1
+    assert out.wall_s["t8"] > 0 and out.timings_s["t8"] > 0
+
+
+def test_sharded_campaign_rejects_duplicate_tenants(tiny_workloads):
+    spec = _tenant(tiny_workloads, seed=1)
+    with pytest.raises(ValueError, match="unique"):
+        ShardedCampaign([spec, spec])
