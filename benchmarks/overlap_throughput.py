@@ -1,0 +1,261 @@
+"""Warm DSE-iteration throughput: overlapped wave executor vs serial.
+
+Measures the PR 10 contract: a WARM scan-backend DSE campaign through
+``run_dse(pipeline=True)`` with the overlapped wave executor — paired
+cost sweeps dispatched async, wave *k*'s device costing in flight while
+the host runs wave *k−1*'s backtracking / ``_sharing_problem_list``
+extraction / ``schedule_many`` dispatch, and iteration *k+1*'s fused
+propose chain double-buffered behind iteration *k*'s ingest — against
+the identical campaign with ``overlap=False`` (sync at every dispatch
+site, serial propose: the PR 9 status quo).
+
+Framing
+-------
+Each side runs in its OWN subprocess (jit caches must not leak between
+them) on a forced-multi-device CPU topology (the sharded-campaign
+deployment shape).  A subprocess first runs the same campaign untimed —
+that compiles every mapper / tuner / scheduler program — then clears the
+mapper memo caches and times a second, jit-warm run: the warm iteration
+is exactly where latency hiding pays, since nothing is waiting on
+compiles.
+
+Contracts (asserted here, gated in CI via ``benchmarks.bench_gate`` on
+``experiments/BENCH_10.json``):
+
+* the overlapped and serial observation streams AND Pareto fronts are
+  IDENTICAL bit for bit (the speedup is parity-pinned, not bought with
+  different search results);
+* overlapped / serial >= 1.3x warm end-to-end on a multi-core host.
+  Latency hiding needs a second core: XLA's CPU client computes on
+  background threads, so the host-side backtracking/scheduling only
+  truly runs concurrently when there is a core for it.  On a
+  single-core host the contract degrades to break-even (>= 0.85x —
+  parity still holds bit for bit, the executor just cannot hide
+  anything), and each side is timed as the min over alternating
+  repeats so minutes-scale machine jitter cannot fake a regression;
+* the overlapped run actually overlapped (``dispatch_paired`` and
+  ``map_wave`` spans recorded, ``fused_propose`` spans still present —
+  double-buffering must not drop the fused chain).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+BENCH_ID = 10
+BENCH_SCHEMA = "nicepim-bench/1"
+
+MAPPER_KW = dict(max_optim_iter=1, lm_cap=40, n_wr=3)
+DEVICES = 4
+
+
+# ---------------------------------------------------------------------------
+# worker: one warm campaign in a fresh process
+# ---------------------------------------------------------------------------
+
+
+def worker(mode: str, iterations: int, n_sample: int) -> None:
+    from repro.core.dse import WorkloadEvaluator, run_dse
+    from repro.core.mapper import _sharing_latency, clear_mapper_caches
+    from repro.core.tuner import PimTuner
+    from repro.core.workloads import googlenet
+    from repro.engine.pareto import ParetoFront
+    from repro.obs.trace import Tracer
+
+    nets = [googlenet(1, scale=8), googlenet(2, scale=8)]
+    overlap = mode == "overlapped"
+
+    def campaign(tracer=None):
+        ev = WorkloadEvaluator(nets, mapper_kwargs=MAPPER_KW,
+                               overlap=overlap)
+        front = ParetoFront()
+        res = run_dse(PimTuner(seed=0, n_sample=n_sample, backend="scan"),
+                      ev, iterations=iterations, propose_k=8,
+                      pipeline=True, evaluate_all_legal=True,
+                      pareto=front, tracer=tracer)
+        return res, front
+
+    # phase 1 (untimed): compile every program this campaign touches
+    campaign()
+    clear_mapper_caches()
+    _sharing_latency.cache_clear()
+
+    tracer = Tracer()
+    t0 = time.perf_counter()
+    res, front = campaign(tracer=tracer)
+    dt = time.perf_counter() - t0
+
+    stream = [(o.iteration, o.cfg.as_tuple(), o.area_mm2, o.legal, o.cost)
+              for o in res.observations]
+    pareto = sorted((p.latency_s, p.energy_pj, p.area_mm2)
+                    for p in front.points)
+    spans: dict = {}
+    span_s: dict = {}
+    for ev in tracer.events():
+        if ev.get("ph") != "X":
+            continue
+        name = ev["name"]
+        spans[name] = spans.get(name, 0) + 1
+        span_s[name] = span_s.get(name, 0.0) + ev["dur"] / 1e6
+    for name in ("dispatch_paired", "map_wave", "overlap_drain",
+                 "fused_propose", "propose_resolve"):
+        spans.setdefault(name, 0)
+    print(json.dumps({
+        "mode": mode, "secs": dt, "iterations": iterations,
+        "spans": spans, "span_s": span_s,
+        "stream": stream, "pareto": pareto,
+    }), flush=True)
+
+
+def _run_worker(mode: str, iterations: int, n_sample: int) -> dict:
+    cmd = [sys.executable, "-m", "benchmarks.overlap_throughput",
+           "--worker", mode, "--iters", str(iterations),
+           "--n-sample", str(n_sample)]
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (f"{flags} --xla_force_host_platform_device_"
+                            f"count={DEVICES}").strip()
+    proc = subprocess.run(cmd, capture_output=True, text=True, cwd=ROOT,
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(f"{mode} worker failed:\n{proc.stderr[-4000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
+# orchestration
+# ---------------------------------------------------------------------------
+
+
+def _cores() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:
+        return os.cpu_count() or 1
+
+
+def run(iterations: int = 6, n_sample: int = 256,
+        min_speedup: float | None = 1.3, repeats: int = 2) -> list[dict]:
+    cores = _cores()
+    if cores <= 1:
+        # one core: nothing to hide latency UNDER — hold break-even
+        min_speedup = min(min_speedup or 1.3, 0.85)
+    runs = {"overlapped": [], "serial": []}
+    for _ in range(repeats):        # alternate sides: jitter hits both
+        runs["overlapped"].append(
+            _run_worker("overlapped", iterations, n_sample))
+        runs["serial"].append(_run_worker("serial", iterations, n_sample))
+    fast = min(runs["overlapped"], key=lambda r: r["secs"])
+    slow = min(runs["serial"], key=lambda r: r["secs"])
+
+    assert fast["stream"] == slow["stream"], (
+        "overlapped and serial DSE observation streams diverged — the "
+        "speedup would not be parity-pinned")
+    assert fast["pareto"] == slow["pareto"], (
+        "overlapped and serial Pareto fronts diverged")
+    sp = fast["spans"]
+    assert sp["dispatch_paired"] > 0 and sp["map_wave"] > 0, (
+        f"overlapped run recorded no wave spans ({sp}) — the overlap "
+        f"path was not taken")
+    assert sp["fused_propose"] >= iterations, (
+        f"only {sp['fused_propose']} fused_propose spans for {iterations} "
+        f"iterations — double-buffering dropped the fused chain")
+    assert slow["spans"]["overlap_drain"] == 0, (
+        "serial run deferred work across the wave boundary")
+
+    speedup = slow["secs"] / fast["secs"]
+    rows = [{
+        "table": "overlap", "case": "warm_campaign",
+        "iterations": iterations, "n_sample": n_sample,
+        "cores": cores, "repeats": repeats,
+        "overlapped_s": fast["secs"], "serial_s": slow["secs"],
+        "iters_per_s_overlapped": iterations / fast["secs"],
+        "iters_per_s_serial": iterations / slow["secs"],
+        "dispatch_spans": sp["dispatch_paired"],
+        "drain_spans": sp["overlap_drain"],
+        "speedup": speedup, "min_speedup": min_speedup,
+        "parity": "match",
+    }]
+    assert speedup >= min_speedup, (
+        f"overlapped executor only {speedup:.2f}x over the serial mapper "
+        f"path (contract: >={min_speedup}x)")
+    return rows
+
+
+SMOKE_KW = dict(iterations=4, n_sample=128, min_speedup=1.0, repeats=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short campaign + soft thresholds (CI)")
+    ap.add_argument("--worker", default=None, help="internal: run one side")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--n-sample", type=int, default=None)
+    ap.add_argument("--out", default=None, metavar="BENCH_10.json",
+                    help="write the perf artifact here (default "
+                         "experiments/BENCH_10.json)")
+    args = ap.parse_args()
+
+    if args.worker:
+        worker(args.worker, args.iters, args.n_sample)
+        return
+
+    kw = dict(SMOKE_KW) if args.smoke else {}
+    if args.iters is not None:
+        kw["iterations"] = args.iters
+    if args.n_sample is not None:
+        kw["n_sample"] = args.n_sample
+    t0 = time.time()
+    rows = run(**kw)
+    total_s = time.time() - t0
+
+    r = rows[0]
+    print(f"overlap_serial,{1e6 * r['serial_s'] / r['iterations']:.0f},"
+          f"iters_per_s={r['iters_per_s_serial']:.3f}")
+    print(f"overlap_overlapped,"
+          f"{1e6 * r['overlapped_s'] / r['iterations']:.0f},"
+          f"iters_per_s={r['iters_per_s_overlapped']:.3f} "
+          f"dispatches={r['dispatch_spans']} drains={r['drain_spans']} "
+          f"cores={r['cores']} speedup={r['speedup']:.2f}x "
+          f"parity={r['parity']}")
+
+    tol = 0.40 if args.smoke else 0.25
+    bench = {
+        "schema": BENCH_SCHEMA,
+        "bench_id": BENCH_ID,
+        "mode": "smoke" if args.smoke else "full",
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "sections_s": {"overlap": total_s},
+        "benchmarks": [
+            {"name": "overlap_warm_iter",
+             "us_per_call": 1e6 * r["overlapped_s"] / r["iterations"],
+             "derived": f"speedup={r['speedup']:.2f}x "
+                        f"cores={r['cores']} "
+                        f"dispatches={r['dispatch_spans']}"},
+        ],
+        "gates": {
+            "overlap_speedup": {"value": float(r["speedup"]),
+                                "tolerance": tol,
+                                "higher_is_better": True},
+        },
+    }
+    out = Path(args.out) if args.out else (
+        ROOT / "experiments" / f"BENCH_{BENCH_ID}.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(bench, indent=1) + "\n")
+    print(f"# wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

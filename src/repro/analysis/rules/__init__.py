@@ -1,4 +1,4 @@
-"""The six pimlint rules, instantiated once."""
+"""The seven pimlint rules, instantiated once."""
 
 from __future__ import annotations
 
@@ -6,6 +6,7 @@ from .base import Rule
 from .caches import CacheHygieneRule
 from .donation import UseAfterDonateRule
 from .host_sync import HostSyncRule
+from .overlap_sync import OverlapSyncRule
 from .parity import KernelParityRule
 from .retrace import RetraceRule
 from .rng import RngSeedRule
@@ -17,6 +18,7 @@ ALL_RULES: list[Rule] = [
     CacheHygieneRule(),
     RngSeedRule(),
     KernelParityRule(),
+    OverlapSyncRule(),
 ]
 
 
@@ -31,4 +33,4 @@ def rule_by_key(key: str) -> Rule | None:
 
 __all__ = ["ALL_RULES", "Rule", "rule_by_key", "HostSyncRule",
            "RetraceRule", "UseAfterDonateRule", "CacheHygieneRule",
-           "RngSeedRule", "KernelParityRule"]
+           "RngSeedRule", "KernelParityRule", "OverlapSyncRule"]

@@ -1,0 +1,198 @@
+"""PIM007 overlap-sync: host syncs inside mapper/scheduler wave code.
+
+PR 10's overlapped wave executor extends the one-sync-per-wave contract
+into the mapper itself: dispatch-phase functions (``dispatch_*`` /
+``*_dispatch``) and phase generators (the ``yield``-ing wave bodies the
+:class:`repro.engine.overlap.OverlapExecutor` drives) must leave their
+device values IN FLIGHT — ``block_until_ready`` / ``device_get`` /
+``.item()`` landing inside them, or ``float()`` / ``np.asarray()``
+applied to a pending dispatch result, collapses the overlap window back
+to serial execution and silently erases the ≥1.3x warm-iteration win
+pinned by ``benchmarks/overlap_throughput.py``.
+
+The checker scopes to ``engine/`` plus the mapper/DSE hot-path modules
+and looks only at *wave functions*: generators whose own body yields, or
+functions with ``dispatch`` in their name.  Inside those, the hard sync
+APIs are flagged unconditionally, and a forward taint walk (the PIM001
+idiom) flags host-pull conversions applied to values that flow out of a
+dispatcher call (``*dispatch*`` / ``*_phases``).  Taint stops at the
+sanctioned resolver methods — ``.resolve()`` / ``.latency_row()`` —
+because their return value is already on host; functions *named* for the
+observation boundary (``resolve`` / ``latency_row`` / ``drain``) are the
+sanctioned sites and are skipped entirely.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Rule
+from .common import call_name
+
+#: sync APIs that are never legal while a wave is in flight
+_HARD_SYNCS = {"jax.block_until_ready", "block_until_ready",
+               "jax.device_get", "device_get"}
+#: conversions that force a device->host pull when handed a device value
+_SYNC_FUNCS = {"float", "int", "np.asarray", "numpy.asarray",
+               "np.array", "numpy.array"}
+#: observation-boundary functions — the sanctioned resolve sites
+_SANCTIONED_FNS = {"resolve", "latency_row", "drain"}
+#: resolver methods whose return value is a HOST value (taint stops)
+_RESOLVERS = {"resolve", "latency_row"}
+
+
+def _is_dispatcher(name: str | None) -> bool:
+    if not name:
+        return False
+    leaf = name.split(".")[-1]
+    return "dispatch" in leaf or leaf.endswith("_phases")
+
+
+def _is_resolver_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _RESOLVERS)
+
+
+def _own_body_yields(fn: ast.AST) -> bool:
+    """True when ``fn``'s own body (nested defs excluded) yields."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.Yield, ast.YieldFrom)):
+            return True
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+    return False
+
+
+class OverlapSyncRule(Rule):
+    id = "PIM007"
+    name = "overlap-sync"
+    hint = ("keep wave dispatch results in flight: resolve pending costs "
+            "via their .resolve()/.latency_row() at the observation "
+            "boundary, not with a sync inside the dispatch/phase body")
+
+    def check_module(self, mod, ctx):
+        if not mod.in_scope("engine", "mapper.py", "dse.py"):
+            return []
+        findings = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if node.name in _SANCTIONED_FNS:
+                continue
+            if "dispatch" not in node.name and not _own_body_yields(node):
+                continue
+            findings.extend(self._check_wave(mod, node))
+        return findings
+
+    # -- the forward taint walk (PIM001 idiom, dispatcher-sourced) ---------
+
+    def _check_wave(self, mod, fn):
+        tainted: set[str] = set()
+        findings: list = []
+        seen: set[int] = set()
+
+        def expr_tainted(expr: ast.AST) -> bool:
+            if _is_resolver_call(expr):
+                return False
+            for sub in ast.walk(expr):
+                if _is_resolver_call(sub):
+                    continue
+                if isinstance(sub, ast.Call) \
+                        and _is_dispatcher(call_name(sub)):
+                    return True
+                if isinstance(sub, ast.Name) and sub.id in tainted:
+                    return True
+            return False
+
+        def target_names(target: ast.AST) -> list[str]:
+            return [sub.id for sub in ast.walk(target)
+                    if isinstance(sub, ast.Name)]
+
+        def check_syncs(expr: ast.AST):
+            for sub in ast.walk(expr):
+                if not isinstance(sub, ast.Call) or id(sub) in seen:
+                    continue
+                name = call_name(sub)
+                if name and (name in _HARD_SYNCS
+                             or name.split(".")[-1] in _HARD_SYNCS):
+                    seen.add(id(sub))
+                    findings.append(mod.finding(
+                        self, sub,
+                        f"`{name}()` blocks inside wave function "
+                        f"`{fn.name}` — syncs belong at the observation "
+                        f"boundary (.resolve()/.latency_row())"))
+                elif isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr == "item" and not sub.args:
+                    seen.add(id(sub))
+                    findings.append(mod.finding(
+                        self, sub,
+                        f"`.item()` blocks inside wave function "
+                        f"`{fn.name}` — syncs belong at the observation "
+                        f"boundary"))
+                elif name in _SYNC_FUNCS and sub.args \
+                        and expr_tainted(sub.args[0]):
+                    seen.add(id(sub))
+                    findings.append(mod.finding(
+                        self, sub,
+                        f"`{name}()` pulls an in-flight dispatch result "
+                        f"to host inside wave function `{fn.name}` — "
+                        f"resolve it at the observation boundary instead"))
+
+        def handle(stmt: ast.stmt):
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                if stmt.value is None:
+                    return
+                check_syncs(stmt.value)
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                names = [n for t in targets for n in target_names(t)]
+                produces_pending = (expr_tainted(stmt.value)
+                                    and not _is_resolver_call(stmt.value))
+                for n in names:
+                    (tainted.add if produces_pending
+                     else tainted.discard)(n)
+            elif isinstance(stmt, ast.For):
+                check_syncs(stmt.iter)
+                if expr_tainted(stmt.iter):
+                    for n in target_names(stmt.target):
+                        tainted.add(n)
+                walk_body(stmt.body)
+                walk_body(stmt.orelse)
+            elif isinstance(stmt, (ast.While, ast.If)):
+                check_syncs(stmt.test)
+                walk_body(stmt.body)
+                walk_body(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    check_syncs(item.context_expr)
+                walk_body(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                walk_body(stmt.body)
+                for h in stmt.handlers:
+                    walk_body(h.body)
+                walk_body(stmt.orelse)
+                walk_body(stmt.finalbody)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                if stmt.value is not None:
+                    check_syncs(stmt.value)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                pass   # nested defs are their own (non-wave) scope
+            else:
+                for sub in ast.iter_child_nodes(stmt):
+                    if isinstance(sub, ast.expr):
+                        check_syncs(sub)
+
+        def walk_body(body):
+            # two passes so loop-carried taint reaches syncs earlier in
+            # the body than the assignment that taints them
+            for _ in range(2):
+                for stmt in body:
+                    handle(stmt)
+
+        walk_body(fn.body)
+        return findings

@@ -107,6 +107,14 @@ class WorkloadEvaluator:
     per mapping); results are bit-identical either way, so the flag keys
     neither cache.  ``run_dse(..., pipeline=True)`` turns it on for the
     duration of the run.
+    ``overlap=True`` (the default) runs :meth:`evaluate_batch` through the
+    :class:`repro.engine.overlap.OverlapExecutor`: each workload wave's
+    scheduling prefill and accounting walk are deferred into the window
+    where the NEXT workload's candidate costs are in flight on device.
+    Deferred waves retire strictly FIFO, so cost accumulation order — and
+    every float result — matches the serial schedule exactly; the flag
+    keys neither cache.  ``overlap=False`` restores sync-at-dispatch
+    serial execution (the benchmark baseline).
     """
 
     def __init__(self, workloads: list[DnnGraph], *, alpha: float = 1.0,
@@ -115,7 +123,7 @@ class WorkloadEvaluator:
                  mapper_backend: str | None = None,
                  scheduler_backend: str = "scan",
                  clear_caches_between_configs: bool = False,
-                 batch_prefill: bool = False):
+                 batch_prefill: bool = False, overlap: bool = True):
         self.workloads = workloads
         self.alpha = alpha
         self.beta = beta
@@ -126,6 +134,7 @@ class WorkloadEvaluator:
         self.scheduler_backend = scheduler_backend
         self.clear_caches_between_configs = clear_caches_between_configs
         self.batch_prefill = batch_prefill
+        self.overlap = overlap
         self._cache: dict[tuple, tuple[float, dict, dict]] = {}
         self.cache = cache
         self._wl_digest: str | None = None
@@ -273,34 +282,30 @@ class WorkloadEvaluator:
         lats: dict[tuple, dict] = {k: {} for k in todo}
         ens: dict[tuple, dict] = {k: {} for k in todo}
         live = list(todo)
+        from contextlib import nullcontext
+        from ..engine.overlap import OverlapExecutor, serial_dispatch
+        executor = OverlapExecutor(enabled=self.overlap)
+        ctx = nullcontext() if self.overlap else serial_dispatch()
         try:
-            for g in self.workloads:
-                if not live:
-                    break
-                mappings = mapper.map_many(
-                    g, [cfg_of[k] for k in live], on_infeasible="none")
-                if self.batch_prefill and self.scheduler_backend == "scan":
-                    # one cross-config scheduler batch for the whole
-                    # proposal round, instead of one per surviving mapping
-                    from .mapper import prefill_schedules_many
-                    prefill_schedules_many(
-                        [m for m in mappings if m is not None],
-                        backend=self.scheduler_backend)
-                still = []
-                for k, m in zip(live, mappings):
-                    if m is None:      # capacity-infeasible: same containment
-                        costs[k] = math.inf   # as __call__ — nothing leaks
-                        lats[k], ens[k] = {}, {}
-                        continue
-                    rep = evaluate_mapping(
-                        m, scheduler_backend=self.scheduler_backend)
-                    lats[k][g.name] = rep.latency_s
-                    ens[k][g.name] = rep.energy_pj
-                    energy_j = rep.energy_pj * 1e-12
-                    costs[k] += (energy_j ** self.alpha) \
-                        * (rep.latency_s ** self.beta) * self.gamma
-                    still.append(k)
-                live = still
+            with ctx:
+                for g in self.workloads:
+                    if not live:
+                        break
+                    # drive this workload's dispatch/resolve phases; at each
+                    # in-flight window the executor steps the PREVIOUS
+                    # workload's deferred scheduling/accounting — the span
+                    # nesting in the trace shows the overlap
+                    with trace.span("map_wave", cat="engine", graph=g.name,
+                                    configs=len(live)):
+                        mappings = executor.drive(mapper.map_many_phases(
+                            g, [cfg_of[k] for k in live],
+                            on_infeasible="none"))
+                    wave = live
+                    live = [k for k, m in zip(wave, mappings)
+                            if m is not None]
+                    executor.defer(self._finish_wave(
+                        g, wave, mappings, costs, lats, ens))
+                executor.drain()  # observation boundary: everything lands
             for k, positions in todo.items():
                 res = (costs[k], lats[k], ens[k])
                 self._cache[k] = res
@@ -316,6 +321,36 @@ class WorkloadEvaluator:
             if self.clear_caches_between_configs:
                 clear_mapper_caches()
         return out
+
+    def _finish_wave(self, g, wave, mappings, costs, lats, ens):
+        """Deferred half of one workload wave: prefill + accounting.
+
+        A generator so the :class:`~repro.engine.overlap.OverlapExecutor`
+        can advance it stepwise inside the next wave's in-flight windows.
+        The statements are the exact serial tail of the historical
+        ``evaluate_batch`` workload loop, in the same order — only the
+        scheduling boundary moved, not the arithmetic.
+        """
+        if self.batch_prefill and self.scheduler_backend == "scan":
+            # one cross-config scheduler batch for the whole proposal
+            # round, instead of one per surviving mapping
+            from .mapper import prefill_schedules_many
+            prefill_schedules_many([m for m in mappings if m is not None],
+                                   backend=self.scheduler_backend)
+            yield
+        for k, m in zip(wave, mappings):
+            if m is None:          # capacity-infeasible: same containment
+                costs[k] = math.inf     # as __call__ — nothing leaks
+                lats[k], ens[k] = {}, {}
+                continue
+            rep = evaluate_mapping(
+                m, scheduler_backend=self.scheduler_backend)
+            lats[k][g.name] = rep.latency_s
+            ens[k][g.name] = rep.energy_pj
+            energy_j = rep.energy_pj * 1e-12
+            costs[k] += (energy_j ** self.alpha) \
+                * (rep.latency_s ** self.beta) * self.gamma
+            yield
 
 
 def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
@@ -353,8 +388,14 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
     :class:`repro.engine.pipeline.DsePipeline` — fused on-device propose,
     one host sync per proposal, deferred fit — and the evaluator's
     ``batch_prefill`` flag is enabled for the duration so each proposal
-    round's sharing schedules solve in one cross-config batch.  Results
-    are identical to the staged path under a shared seed (pinned by
+    round's sharing schedules solve in one cross-config batch.  The
+    candidate waves are double-buffered: iteration ``k+1``'s fused propose
+    chain is dispatched right after iteration ``k``'s fit (via
+    ``DsePipeline.propose_dispatch``) and resolved — one small device_get
+    — at the top of iteration ``k+1``, so the propose compute hides under
+    the ingest tail (metrics, checkpoint I/O).  The dispatch point sees
+    the exact strategy/RNG state the serial propose would, so streams stay
+    identical to the staged path under a shared seed (pinned by
     ``tests/test_pipeline.py`` and ``benchmarks/pipeline_throughput.py``).
     """
     from contextlib import nullcontext
@@ -372,13 +413,26 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
     legal_hist = metrics.METRICS.histogram(f"dse.{sname}.legal_fraction")
     obs: list[Observation] = []
     ctx = trace.activate(tracer) if tracer is not None else nullcontext()
+    # double-buffered proposes: iteration k+1's fused chain is dispatched
+    # at iteration k's ingest tail and resolved here at the loop top; an
+    # overlap=False evaluator opts the whole campaign out (serial baseline)
+    can_dispatch = (pipeline and hasattr(strategy, "propose_dispatch")
+                    and getattr(evaluator, "overlap", True))
+    nxt: dict = {"handle": None}
     try:
         with ctx:
             for it in range(start_iteration, iterations):
+                handle, nxt["handle"] = nxt["handle"], None
+                props = handle.resolve() if handle is not None else None
+                propose_next = None
+                if can_dispatch and it + 1 < iterations:
+                    def propose_next():
+                        nxt["handle"] = strategy.propose_dispatch(propose_k)
                 obs.extend(_dse_iteration(
                     strategy, evaluator, it, propose_k, cons, verbose,
                     pareto, on_iteration, evaluate_all_legal, sname,
-                    best_gauge, legal_hist, batch_area_mm2))
+                    best_gauge, legal_hist, batch_area_mm2,
+                    props=props, propose_next=propose_next))
     finally:
         if prefill_restore is not None:
             evaluator.batch_prefill = prefill_restore
@@ -387,7 +441,8 @@ def run_dse(strategy, evaluator: WorkloadEvaluator, *, iterations: int = 20,
 
 def propose_screen(strategy, it: int, propose_k: int,
                    cons: PimConstraints, sname: str,
-                   evaluate_all_legal: bool, batch_area_mm2
+                   evaluate_all_legal: bool, batch_area_mm2,
+                   props: list | None = None
                    ) -> tuple[list, list[Observation],
                               list[tuple[HwConfig, float]], int]:
     """Iteration phase A: propose a batch and area-screen it.
@@ -403,11 +458,14 @@ def propose_screen(strategy, it: int, propose_k: int,
 
     Shared by :func:`_dse_iteration` and the sharded campaign runner
     (``repro.engine.sharded``), which evaluates ``to_eval`` out-of-line so
-    wave N+1's propose can overlap wave N's mapping.
+    wave N+1's propose can overlap wave N's mapping.  ``props`` supplies a
+    pre-resolved proposal batch (the double-buffered pipeline path) and
+    skips the propose call.
     """
     it_obs: list[Observation] = []
-    with trace.span("propose", strategy=sname, k=propose_k):
-        props = strategy.propose(propose_k)
+    if props is None:
+        with trace.span("propose", strategy=sname, k=propose_k):
+            props = strategy.propose(propose_k)
     areas = batch_area_mm2(props)
     legal_n = sum(1 for a in areas if float(a) <= cons.area_budget_mm2)
     to_eval: list[tuple[HwConfig, float]] = []
@@ -427,13 +485,16 @@ def ingest_results(strategy, it: int, it_obs: list[Observation],
                    evaluated: list[tuple[HwConfig, float, tuple]],
                    pareto, sname: str, best_gauge, legal_hist,
                    legal_n: int, n_props: int, on_iteration, verbose: bool,
-                   t0: float) -> list[Observation]:
+                   t0: float, propose_next=None) -> list[Observation]:
     """Iteration phase B: observe mapper results, refit, record metrics.
 
     ``evaluated`` carries ``(cfg, area, (cost, lats, ens))`` per mapped
     config; ``it_obs`` arrives holding phase A's illegal observations and
     leaves holding the full iteration's.  The fit only runs when something
-    was mapped — identical to the historical inline loop.
+    was mapped — identical to the historical inline loop.  ``propose_next``
+    (pipeline double-buffering) fires right after the fit — the earliest
+    point with final strategy state — so the next wave's propose chain is
+    in flight while the metrics/checkpoint tail below runs on host.
     """
     for cfg, area, (cost, lats, ens) in evaluated:
         if math.isinf(cost):
@@ -453,6 +514,8 @@ def ingest_results(strategy, it: int, it_obs: list[Observation],
             fit_info = strategy.fit()
     else:
         fit_info = None
+    if propose_next is not None:
+        propose_next()
     # per-iteration search-progress metrics (read back by campaigns
     # and the fig9/report observability sections)
     metrics.METRICS.counter(f"dse.{sname}.iterations").inc()
@@ -478,13 +541,13 @@ def ingest_results(strategy, it: int, it_obs: list[Observation],
 
 def _dse_iteration(strategy, evaluator, it, propose_k, cons, verbose,
                    pareto, on_iteration, evaluate_all_legal, sname,
-                   best_gauge, legal_hist, batch_area_mm2
-                   ) -> list[Observation]:
+                   best_gauge, legal_hist, batch_area_mm2,
+                   props=None, propose_next=None) -> list[Observation]:
     with trace.span("iteration", strategy=sname, it=it):
         t0 = time.time()
         props, it_obs, to_eval, legal_n = propose_screen(
             strategy, it, propose_k, cons, sname, evaluate_all_legal,
-            batch_area_mm2)
+            batch_area_mm2, props=props)
         evaluated: list[tuple[HwConfig, float, tuple]] = []
         if evaluate_all_legal:
             if to_eval:
@@ -498,5 +561,6 @@ def _dse_iteration(strategy, evaluator, it, propose_k, cons, verbose,
             evaluated = [(cfg, area, evaluator(cfg))]
         ingest_results(strategy, it, it_obs, evaluated, pareto, sname,
                        best_gauge, legal_hist, legal_n, len(props),
-                       on_iteration, verbose, t0)
+                       on_iteration, verbose, t0,
+                       propose_next=propose_next)
     return it_obs

@@ -270,6 +270,50 @@ def _fill_node_latencies_multi(requests) -> dict:
     a concurrent ``clear_mapper_caches`` between fill and read only costs a
     single-config re-derivation.
     """
+    return _dispatch_node_fill(requests).resolve()
+
+
+class _PendingFill:
+    """An in-flight multi-config node-latency fill.
+
+    Holds one :class:`~repro.engine.overlap.PendingPairedCost` per
+    constraints group; :meth:`resolve` blocks on the device rows (once),
+    builds the ``{(hw,) + spec: latency}`` dict, and warms ``_NODE_LAT``
+    — the exact tail of the serial ``_fill_node_latencies_multi``.
+    """
+
+    __slots__ = ("_groups", "_fresh")
+
+    def __init__(self, groups):
+        self._groups = groups
+        self._fresh: dict | None = None
+
+    @property
+    def ready(self) -> bool:
+        return (self._fresh is not None
+                or all(p.ready for _, p in self._groups))
+
+    def resolve(self) -> dict:
+        if self._fresh is None:
+            fresh: dict[tuple, float] = {}
+            for pairs, pending in self._groups:
+                lat = pending.latency_row()
+                for (hw, s), v in zip(pairs, lat):
+                    fresh[(hw,) + s] = float(v)
+            if fresh:
+                _NODE_LAT.put_many(fresh.items())
+            self._fresh = fresh
+            self._groups = None
+        return self._fresh
+
+
+def _dispatch_node_fill(requests) -> _PendingFill:
+    """Dispatch phase of :func:`_fill_node_latencies_multi`.
+
+    Enqueues the paired sweeps for every missing cell and returns a
+    :class:`_PendingFill` without blocking on the device results, so
+    callers can run host work while the costs are in flight.
+    """
     missing: dict[HwConfig, dict[tuple, None]] = {}
     for hw, specs in requests:
         d = missing.setdefault(hw, {})
@@ -277,21 +321,19 @@ def _fill_node_latencies_multi(requests) -> dict:
             if (hw,) + s not in _NODE_LAT:
                 d[s] = None
     missing = {hw: d for hw, d in missing.items() if d}
-    fresh: dict[tuple, float] = {}
     if not missing:
-        return fresh
-    from ..engine.batch_cost import batch_part_cost_paired
+        return _PendingFill(())
+    from ..engine.overlap import dispatch_paired_latency
     groups: dict[object, list[HwConfig]] = {}
     for hw in missing:  # one engine batch must share one PimConstraints
         groups.setdefault(hw.cons, []).append(hw)
+    out = []
     for hws in groups.values():
         pairs = [(hw, s) for hw in hws for s in missing[hw]]
-        lat = batch_part_cost_paired([hw for hw, _ in pairs],
-                                     [s for _, s in pairs]).latency_s[0]
-        for (hw, s), v in zip(pairs, lat):
-            fresh[(hw,) + s] = float(v)
-    _NODE_LAT.put_many(fresh.items())
-    return fresh
+        pending = dispatch_paired_latency([hw for hw, _ in pairs],
+                                          [s for _, s in pairs])
+        out.append((pairs, pending))
+    return _PendingFill(out)
 
 
 def _prefetch_candidates_multi(key_lists) -> dict[tuple, tuple]:
@@ -306,6 +348,41 @@ def _prefetch_candidates_multi(key_lists) -> dict[tuple, tuple]:
     concurrent ``clear_mapper_caches()`` can only ever cost re-derivation,
     never correctness.
     """
+    return _dispatch_candidates_multi(key_lists).resolve()
+
+
+class _PendingTables:
+    """In-flight candidate tables: node fills dispatched, tables not built.
+
+    :meth:`resolve` blocks on the underlying :class:`_PendingFill` and
+    runs the table-construction tail of ``_prefetch_candidates_multi``.
+    """
+
+    __slots__ = ("_out", "_work", "_fill")
+
+    def __init__(self, out, work, fill):
+        self._out = out
+        self._work = work
+        self._fill = fill
+
+    @property
+    def ready(self) -> bool:
+        return not self._work or self._fill.ready
+
+    def resolve(self) -> dict[tuple, tuple]:
+        if self._work:
+            fresh = self._fill.resolve()
+            for hw, key, struct, specs in self._work:
+                node_lat = _node_lat_from(fresh, hw, specs)
+                table = _layer_candidates_batched(struct, node_lat)
+                self._out[key] = table
+                _BATCH_CANDS.put(key, table)
+            self._work = ()
+        return self._out
+
+
+def _dispatch_candidates_multi(key_lists) -> _PendingTables:
+    """Dispatch phase of :func:`_prefetch_candidates_multi`."""
     out: dict[tuple, tuple] = {}
     work = []
     for keys in key_lists:
@@ -322,15 +399,9 @@ def _prefetch_candidates_multi(key_lists) -> dict[tuple, tuple]:
             else:
                 out[key] = got
     if not work:
-        return out
-    fresh = _fill_node_latencies_multi([(hw, specs)
-                                        for hw, _, _, specs in work])
-    for hw, key, struct, specs in work:
-        node_lat = _node_lat_from(fresh, hw, specs)
-        table = _layer_candidates_batched(struct, node_lat)
-        out[key] = table
-        _BATCH_CANDS.put(key, table)
-    return out
+        return _PendingTables(out, (), None)
+    fill = _dispatch_node_fill([(hw, specs) for hw, _, _, specs in work])
+    return _PendingTables(out, work, fill)
 
 
 def _node_lat_from(fresh: dict, hw: HwConfig, specs) -> np.ndarray:
@@ -736,10 +807,36 @@ class PimMapper:
         (the default); ``"none"`` leaves ``None`` in that config's slot and
         continues the rest of the batch.
         """
+        gen = self.map_many_phases(graph, cfgs, on_infeasible=on_infeasible)
+        while True:
+            try:
+                next(gen)
+            except StopIteration as stop:
+                return stop.value
+
+    def map_many_phases(self, graph: DnnGraph, cfgs: Sequence[HwConfig],
+                        *, on_infeasible: str = "raise"):
+        """Phase generator behind :meth:`map_many`.
+
+        Yields once per in-flight engine dispatch (the candidate-table
+        sweep and the DL sweep of each Algorithm-1 iteration) and returns
+        the mapping list via ``StopIteration.value``.  At each yield the
+        just-dispatched device work has NOT been synced — an
+        :class:`~repro.engine.overlap.OverlapExecutor` driving this
+        generator runs deferred host work (the previous wave's scheduling
+        and accounting) in that window.  Driving the generator straight to
+        exhaustion is exactly :meth:`map_many`; both paths execute this
+        one code body, so overlapped and serial results are identical by
+        construction.
+        """
         if on_infeasible not in ("raise", "none"):
             raise ValueError(f"unknown on_infeasible {on_infeasible!r}; "
                              f"expected 'raise' or 'none'")
         subs = [self._with_hw(cfg) for cfg in cfgs]
+        return self._map_many_gen(graph, subs, on_infeasible)
+
+    def _map_many_gen(self, graph: DnnGraph, subs: list["PimMapper"],
+                      on_infeasible: str):
         if self.backend == "scalar":  # reference path: plain per-config loop
             out: list[Mapping | None] = []
             for sub in subs:
@@ -757,12 +854,14 @@ class PimMapper:
         seg_sms = {i: subs[i]._seg_sms(graph, segments)
                    for i in range(len(subs))}
         for _ in range(self.max_optim_iter):
-            # the returned tables are handed straight to each sub's solve —
-            # a batch whose key union exceeds the _BATCH_CANDS bound must
-            # not self-evict into per-config engine fills
-            tables = _prefetch_candidates_multi(
+            pending_tables = _dispatch_candidates_multi(
                 [subs[i]._solve_keys(graph, segments, seg_sms[i], dls[i])
                  for i in alive])
+            yield pending_tables  # candidate costs in flight
+            # the resolved tables are handed straight to each sub's solve —
+            # a batch whose key union exceeds the _BATCH_CANDS bound must
+            # not self-evict into per-config engine fills
+            tables = pending_tables.resolve()
             for i in list(alive):
                 try:
                     mappings[i] = subs[i]._solve_sm_lm_wr(
@@ -775,8 +874,10 @@ class PimMapper:
                     alive.remove(i)
             sweeps = {i: subs[i]._dl_sweep_specs(graph, mappings[i])
                       for i in alive}
-            fresh = _fill_node_latencies_multi(
+            pending_fill = _dispatch_node_fill(
                 [(subs[i].hw, sweeps[i][1]) for i in alive])
+            yield pending_fill  # DL-sweep costs in flight
+            fresh = pending_fill.resolve()
             for i in alive:
                 entries, specs = sweeps[i]
                 lat = _node_lat_from(fresh, subs[i].hw, specs)

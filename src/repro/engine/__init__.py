@@ -17,6 +17,10 @@ pipeline:
 * :mod:`.pipeline` — device-resident DSE iteration pipeline: the tuner's
   fused propose chained into in-array top-k selection with one host sync
   per proposal, deferred model fits, and cross-config scheduler prefill.
+* :mod:`.overlap` — the overlapped wave executor: async paired-cost
+  dispatch (device latency rows as futures) plus the FIFO generator
+  interleaver that runs one wave's scheduling/accounting while the next
+  wave's candidate costs are in flight, bitwise-identical to serial.
 * :mod:`.pareto` — streaming latency/energy/area Pareto-frontier tracker.
 * :mod:`.cache` — content-addressed memoization of mapper/scheduler results
   keyed by (HwConfig, DnnGraph) digests; :class:`PersistentEvalCache` backs
@@ -32,6 +36,9 @@ from .batch_cost import (BatchCostResult, PartSpec, batch_area_mm2,
                          batch_max_link_load, batch_part_cost)
 from .cache import (EvalCache, PersistentEvalCache, cons_digest,
                     graph_digest, hw_digest)
+from .jit_registry import register_jit, register_jits
+from .overlap import (OverlapExecutor, PendingPairedCost,
+                      dispatch_paired_latency, serial_dispatch)
 from .pareto import ParetoFront, ParetoPoint
 from .scheduler_opt import schedule_many
 from .tuner_train import (compiled_program_count, fit_dkl, fit_filter,
@@ -53,9 +60,11 @@ def engine_program_counts() -> dict[str, int]:
     contract.  :func:`compiled_program_count` keeps its historical
     tuner-only view; this is the whole-engine superset.
     """
-    from . import batch_cost, pipeline, scheduler_opt, sharded, tuner_train
+    from . import (batch_cost, overlap, pipeline, scheduler_opt, sharded,
+                   tuner_train)
     out: dict[str, int] = {}
-    for mod in (batch_cost, pipeline, scheduler_opt, sharded, tuner_train):
+    for mod in (batch_cost, overlap, pipeline, scheduler_opt, sharded,
+                tuner_train):
         label = mod.__name__.rsplit(".", 1)[-1]
         for name, fn in mod._JITTED.items():
             try:
@@ -67,12 +76,14 @@ def engine_program_counts() -> dict[str, int]:
 
 __all__ = [
     "BatchCostResult", "PartSpec", "batch_area_mm2", "batch_max_link_load",
-    "batch_part_cost", "DsePipeline", "EvalCache", "PersistentEvalCache",
-    "cons_digest",
+    "batch_part_cost", "DsePipeline", "EvalCache", "OverlapExecutor",
+    "PendingPairedCost", "PersistentEvalCache",
+    "cons_digest", "dispatch_paired_latency",
     "graph_digest", "hw_digest", "ParetoFront", "ParetoPoint", "Campaign",
     "CampaignResult", "ShardedCampaign", "ShardedProposer", "TenantSpec",
     "campaign_mesh", "compiled_program_count", "engine_program_counts",
     "fit_dkl", "fit_filter",
-    "pad_dataset", "pow2_bucket", "schedule_many", "score_candidates",
-    "score_candidates_raw", "shard_config_rows",
+    "pad_dataset", "pow2_bucket", "register_jit", "register_jits",
+    "schedule_many", "score_candidates",
+    "score_candidates_raw", "serial_dispatch", "shard_config_rows",
 ]

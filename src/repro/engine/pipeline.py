@@ -42,6 +42,7 @@ import numpy as np
 from ..core.hardware import (HwConfig, normalize_params_batch,
                              sample_config_values)
 from ..obs import trace
+from .jit_registry import register_jits
 from .tuner_train import mlp_forward, score_candidates
 
 
@@ -99,13 +100,49 @@ def _select_topk(vals, scores, valid, *, k: int):
 
 
 #: module-level jit objects, keyed for ``compiled_program_count``-style
-#: introspection (see :func:`repro.engine.engine_program_counts`)
-_JITTED = {
-    "area_mask": _area_mask,
-    "masked_zeros": _masked_zeros,
-    "last": _last,
-    "select_topk": _select_topk,
-}
+#: introspection (see :func:`repro.engine.engine_program_counts`),
+#: registered at creation time
+_JITTED = register_jits(
+    area_mask=_area_mask,
+    masked_zeros=_masked_zeros,
+    last=_last,
+    select_topk=_select_topk,
+)
+
+
+class ProposalHandle:
+    """An in-flight fused propose: device winners, resolvable late.
+
+    ``run_dse``'s double-buffered pipeline holds one of these across the
+    iteration boundary — the propose chain dispatched at iteration ``k``'s
+    ingest tail resolves (one small ``device_get``) at the top of
+    iteration ``k+1``.
+    """
+
+    __slots__ = ("_vals", "_dev", "_cons", "_props")
+
+    def __init__(self, vals, dev: dict, cons):
+        self._vals = vals
+        self._dev = dev
+        self._cons = cons
+        self._props: list[HwConfig] | None = None
+
+    def resolve(self) -> list[HwConfig]:
+        """Block on the winner indices and materialize the HwConfigs."""
+        if self._props is None:
+            with trace.span("propose_resolve", cat="engine") as sp:
+                got = jax.device_get(self._dev)
+                sel, cnt = got["sel"], int(got["cnt"])
+                sp["selected"] = cnt
+                if "mask_legal" in got:   # sharded wave stats ride along
+                    sp["mask_legal"] = int(got["mask_legal"])
+                    sp["best_score"] = float(got["best_score"])
+            self._props = [
+                HwConfig.from_tuple(tuple(int(x) for x in self._vals[i]),
+                                    cons=self._cons)
+                for i in sel[:cnt]]
+            self._vals = self._dev = None
+        return self._props
 
 
 class DsePipeline:
@@ -155,10 +192,17 @@ class DsePipeline:
 
     # -- the fused propose chain -------------------------------------------
 
-    def propose(self, k: int = 8) -> list[HwConfig]:
+    def propose_dispatch(self, k: int = 8) -> ProposalHandle:
+        """Enqueue the fused propose chain; NO host sync happens here.
+
+        Returns a :class:`ProposalHandle` whose ``resolve()`` performs the
+        iteration's one ``device_get`` (k winner indices + a count) —
+        callers choose when to pay it, so the chain's compute can hide
+        under unrelated host work.
+        """
         t = self.tuner
         with trace.span("fused_propose", cat="engine",
-                        n=t.n_sample, k=k) as sp:
+                        n=t.n_sample, k=k):
             # stage 0 (host): vectorized draw + normalize, then ONE put
             vals = sample_config_values(t.n_sample, t.rng, t.cons)
             xq = self._put_rows(normalize_params_batch(vals))
@@ -166,12 +210,10 @@ class DsePipeline:
                   if t.filter_model.trained() else self._ones)
             scores = self._scores(xq, ok)
             sel, cnt = _select_topk(self._put_rows(vals), scores, ok, k=k)
-            # the iteration's one host sync: k winner indices + a count
-            sel, cnt = jax.device_get((sel, cnt))
-            sp["selected"] = int(cnt)
-        return [HwConfig.from_tuple(tuple(int(x) for x in vals[i]),
-                                    cons=t.cons)
-                for i in sel[:int(cnt)]]
+        return ProposalHandle(vals, {"sel": sel, "cnt": cnt}, t.cons)
+
+    def propose(self, k: int = 8) -> list[HwConfig]:
+        return self.propose_dispatch(k).resolve()
 
     def _scores(self, xq, ok):
         sg = self.tuner.suggestion

@@ -51,6 +51,7 @@ from ..core.noc import MeshNoc
 from ..core.scheduler import (ScheduleResult, _all_transfers, _finish,
                               _initial_cycles, _solve_exact)
 from ..obs import metrics, trace
+from .jit_registry import register_jits
 from .tuner_train import pow2_bucket
 
 _USE_PALLAS = jax.default_backend() == "tpu"
@@ -402,11 +403,12 @@ def _fold_keys(seeds, digests, chains):
 
 
 #: module-level jit objects, keyed for ``compiled_program_count``-style
-#: introspection (see :func:`repro.engine.engine_program_counts`)
-_JITTED = {
-    "scan_solve": _scan_solve,
-    "fold_keys": _fold_keys,
-}
+#: introspection (see :func:`repro.engine.engine_program_counts`),
+#: registered at creation time
+_JITTED = register_jits(
+    scan_solve=_scan_solve,
+    fold_keys=_fold_keys,
+)
 
 
 def _run_bucket(setups: list[_Setup], *, rounds: int, moves_per_round: int,

@@ -76,7 +76,9 @@ from .batch_cost import batch_area_mm2
 from .cache import EvalCache, _sha, cons_digest, workloads_digest
 from .campaign import CampaignResult, _obs_from_json, _obs_to_json
 from .pareto import ParetoFront
-from .pipeline import DsePipeline, _area_mask, _masked_zeros, _select_topk
+from .jit_registry import register_jit
+from .pipeline import (DsePipeline, ProposalHandle, _area_mask,
+                       _masked_zeros, _select_topk)
 from .tuner_train import score_candidates
 
 #: module jit registry (PIM002 / ``engine_program_counts`` contract).  The
@@ -137,7 +139,7 @@ def _wave_stats_for(mesh):
         if len(_WAVE_STATS_MESHES) >= 8:   # bounded: meshes are few
             _WAVE_STATS_MESHES.clear()
         _WAVE_STATS_MESHES[mesh] = fn
-        _JITTED[f"wave_stats[{mesh.devices.size}]"] = fn
+        register_jit(_JITTED, f"wave_stats[{mesh.devices.size}]", fn)
     return fn
 
 
@@ -179,10 +181,13 @@ class ShardedProposer(DsePipeline):
         """Mesh-replicate a (possibly committed single-device) pytree."""
         return jax.tree.map(lambda a: jax.device_put(a, self._rep), tree)
 
-    def propose(self, k: int = 8) -> list[HwConfig]:
+    def propose_dispatch(self, k: int = 8) -> ProposalHandle:
+        """Sharded fused-propose dispatch: winner indices and the
+        device-reduced legality stats ride one handle, so the wave still
+        pays exactly one host sync — at ``resolve()`` time."""
         t = self.tuner
         with trace.span("fused_propose", cat="engine", n=t.n_sample, k=k,
-                        devices=self.mesh.devices.size) as sp:
+                        devices=self.mesh.devices.size):
             vals = sample_config_values(t.n_sample, t.rng, t.cons)
             xq = self._put_rows(normalize_params_batch(vals))
             ok = (_area_mask(self._replicate(t.filter_model.params), xq,
@@ -190,20 +195,11 @@ class ShardedProposer(DsePipeline):
                   if t.filter_model.trained() else self._ones)
             scores = self._scores(xq, ok)
             sel, cnt = _select_topk(self._put_rows(vals), scores, ok, k=k)
-            # the wave's one host sync: winner indices + device-reduced
-            # legality stats together
+            dev = {"sel": sel, "cnt": cnt}
             if self._sharded:
                 legal, best = self._wave_stats(scores, ok)
-                sel, cnt, legal, best = jax.device_get(
-                    (sel, cnt, legal, best))
-                sp["mask_legal"] = int(legal)
-                sp["best_score"] = float(best)
-            else:
-                sel, cnt = jax.device_get((sel, cnt))
-            sp["selected"] = int(cnt)
-        return [HwConfig.from_tuple(tuple(int(x) for x in vals[i]),
-                                    cons=t.cons)
-                for i in sel[:int(cnt)]]
+                dev["mask_legal"], dev["best_score"] = legal, best
+        return ProposalHandle(vals, dev, t.cons)
 
     def _scores(self, xq, ok):
         sg = self.tuner.suggestion
@@ -296,6 +292,14 @@ class ShardedCampaign:
     most ``queue_depth`` waves are in flight.  ``cache`` is shared by every
     tenant's evaluator — pass a :class:`PersistentEvalCache` for the
     cross-process / kill-and-resume dedup story.
+
+    Each worker's ``evaluate_batch`` additionally runs the per-tenant
+    overlapped executor (:class:`repro.engine.overlap.OverlapExecutor`):
+    within a wave, one workload's scheduling/accounting runs while the
+    next workload's candidate costs are in flight.  The executor is
+    per-call and the serial-dispatch flag is thread-local, so per-tenant
+    overlap composes with the cross-tenant wave loop with no shared state
+    beyond the already-locked mapper memos.
 
     Worker loss: evaluation results only enter tenant state on the main
     thread, so a lost eval worker (or a whole lost process — see the

@@ -1,0 +1,24 @@
+"""PIM007 fixture: host syncs collapsing the overlapped wave window."""
+
+import jax
+import numpy as np
+
+
+def dispatch_node_fill(engine, pairs):
+    pending = engine.dispatch_paired(pairs)
+    rows = np.asarray(pending)        # line 9: pull on an in-flight value
+    return rows
+
+
+def dispatch_and_wait(engine, pairs):
+    pending = engine.dispatch_paired(pairs)
+    jax.block_until_ready(pending)    # line 15: hard sync in a dispatch fn
+    return pending
+
+
+def map_phases(engine, waves):
+    for wave in waves:
+        pending = engine.dispatch_paired(wave)
+        yield
+        lat = float(pending)          # line 23: float() on a pending value
+        wave.ingest(lat)

@@ -1,0 +1,15 @@
+"""Clean twin of overlap_bad: syncs live at the observation boundary."""
+
+
+def dispatch_node_fill(engine, pairs):
+    return engine.dispatch_paired(pairs)   # stays in flight for the caller
+
+
+def map_phases(engine, waves):
+    out = []
+    for wave in waves:
+        pending = engine.dispatch_paired(wave)
+        yield
+        rows = pending.resolve()      # sanctioned resolver: value is host
+        out.append(float(rows[0]))
+    return out

@@ -1,0 +1,222 @@
+"""Overlapped wave executor: async dispatch parity + in-flight hygiene.
+
+Pins the PR 10 contracts:
+
+* ``dispatch_paired_latency(...).latency_row()`` is bitwise identical to
+  ``batch_part_cost_paired(...).latency_s[0]`` — the device-side
+  cycles→seconds division reproduces the serial numpy division exactly;
+* pendings survive a ``jax.transfer_guard("disallow")`` window while in
+  flight (no hidden device->host pull before resolve) and resolve
+  out of order without perturbing each other;
+* ``serial_dispatch()`` restores sync-at-dispatch semantics;
+* ``OverlapExecutor`` interleaves strictly FIFO and ``drive`` returns
+  the generator's return value;
+* ``map_many`` (which drives ``map_many_phases``) and
+  ``evaluate_batch(overlap=True)`` / ``run_dse`` match their serial
+  twins bitwise — Mappings, observation streams, and Pareto fronts.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dse import WorkloadEvaluator, run_dse
+from repro.core.hardware import (PAPER_4X4, PAPER_16X16, PAPER_BEST,
+                                 PimConstraints)
+from repro.core.layout import DataLayout
+from repro.core.mapper import PimMapper, clear_mapper_caches
+from repro.core.tuner import PimTuner
+from repro.core.workloads import googlenet
+from repro.engine.batch_cost import PartSpec, batch_part_cost_paired
+from repro.engine.overlap import (OverlapExecutor, dispatch_paired_latency,
+                                  serial_dispatch)
+from repro.engine.pareto import ParetoFront
+
+MAPPER_KW = dict(max_optim_iter=1, lm_cap=20, n_wr=2)
+CFGS = [PAPER_4X4, PAPER_BEST, PAPER_16X16]
+TINY_CONS = PimConstraints(cap_bank_bytes=2048)   # capacity-infeasible
+
+
+@pytest.fixture(scope="module")
+def tiny_net():
+    return googlenet(1, scale=8)
+
+
+def _paired_inputs(net, n=9):
+    layers = [l for l in net.layers if l.is_heavy][:n]
+    specs = [PartSpec(l, DataLayout("BCHW", 4), DataLayout("BHWC"))
+             for l in layers]
+    cfgs = [CFGS[i % 3] for i in range(len(specs))]
+    return cfgs, specs
+
+
+# ---------------------------------------------------------------------------
+# dispatch half: bitwise parity with the serial paired sweep
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_paired_latency_bitwise_matches_serial(tiny_net):
+    cfgs, specs = _paired_inputs(tiny_net)
+    ref = batch_part_cost_paired(cfgs, specs, spec_chunk=4).latency_s[0]
+    pending = dispatch_paired_latency(cfgs, specs, spec_chunk=4)
+    assert not pending.resolved
+    got = pending.latency_row()
+    assert got.dtype == np.float64
+    assert got.shape == (len(specs),)
+    np.testing.assert_array_equal(got, ref)   # bitwise
+
+
+def test_pending_resolves_once_and_caches(tiny_net):
+    cfgs, specs = _paired_inputs(tiny_net, n=4)
+    pending = dispatch_paired_latency(cfgs, specs, spec_chunk=4)
+    first = pending.latency_row()
+    assert pending.resolved
+    assert pending.latency_row() is first     # cached, no second pull
+
+
+def test_serial_dispatch_resolves_at_dispatch_site(tiny_net):
+    cfgs, specs = _paired_inputs(tiny_net, n=4)
+    with serial_dispatch():
+        pending = dispatch_paired_latency(cfgs, specs, spec_chunk=4)
+        assert pending.resolved
+    ref = batch_part_cost_paired(cfgs, specs, spec_chunk=4).latency_s[0]
+    np.testing.assert_array_equal(pending.latency_row(), ref)
+
+
+def test_pending_survives_transfer_guard_window(tiny_net):
+    """In-flight pendings need no device->host traffic until resolve."""
+    cfgs, specs = _paired_inputs(tiny_net)
+    dispatch_paired_latency(cfgs, specs, spec_chunk=4).latency_row()  # warm
+    pending = dispatch_paired_latency(cfgs, specs, spec_chunk=4)
+    with jax.transfer_guard("disallow"):
+        # host-side wave work happens here; the pending must stay silent
+        acc = sum(range(1000))
+        assert not pending.resolved
+    assert acc == 499500
+    ref = batch_part_cost_paired(cfgs, specs, spec_chunk=4).latency_s[0]
+    np.testing.assert_array_equal(pending.latency_row(), ref)
+
+
+def test_out_of_order_resolve(tiny_net):
+    cfgs, specs = _paired_inputs(tiny_net)
+    a_cfgs, a_specs = cfgs[:5], specs[:5]
+    b_cfgs, b_specs = cfgs[5:], specs[5:]
+    pa = dispatch_paired_latency(a_cfgs, a_specs, spec_chunk=4)
+    pb = dispatch_paired_latency(b_cfgs, b_specs, spec_chunk=4)
+    got_b = pb.latency_row()                  # resolve B before A
+    got_a = pa.latency_row()
+    ref_a = batch_part_cost_paired(a_cfgs, a_specs, spec_chunk=4).latency_s[0]
+    ref_b = batch_part_cost_paired(b_cfgs, b_specs, spec_chunk=4).latency_s[0]
+    np.testing.assert_array_equal(got_a, ref_a)
+    np.testing.assert_array_equal(got_b, ref_b)
+
+
+# ---------------------------------------------------------------------------
+# executor semantics
+# ---------------------------------------------------------------------------
+
+
+def test_executor_fifo_interleave_and_return_value():
+    log = []
+
+    def phase(tag, steps):
+        for i in range(steps):
+            log.append((tag, i))
+            yield
+        return f"{tag}-done"
+
+    ex = OverlapExecutor(enabled=True)
+    ex.defer(phase("d1", 2))
+    ex.defer(phase("d2", 2))
+    assert ex.drive(phase("drv", 3)) == "drv-done"
+    # each drive yield advanced the OLDEST deferred generator by one step;
+    # d1 exhausts before d2 starts (strict FIFO)
+    assert log == [("drv", 0), ("d1", 0), ("drv", 1), ("d1", 1),
+                   ("drv", 2)]
+    ex.drain()
+    assert log == [("drv", 0), ("d1", 0), ("drv", 1), ("d1", 1),
+                   ("drv", 2), ("d2", 0), ("d2", 1)]
+    assert not ex.step()                      # queue empty
+
+
+def test_executor_disabled_runs_defer_inline():
+    log = []
+
+    def phase(tag):
+        log.append(tag)
+        yield
+        log.append(tag + "-end")
+
+    ex = OverlapExecutor(enabled=False)
+    ex.defer(phase("a"))
+    assert log == ["a", "a-end"]              # exhausted inline
+    assert ex.drive(iter(())) is None
+    ex.drain()                                # no-op
+
+
+# ---------------------------------------------------------------------------
+# mapper + evaluator + DSE parity, overlapped vs serial
+# ---------------------------------------------------------------------------
+
+
+def test_map_many_phases_driven_matches_map_many(tiny_net):
+    kw = dict(MAPPER_KW, backend="batched")
+    clear_mapper_caches()
+    mapper = PimMapper(CFGS[0], **kw)
+    driven = OverlapExecutor(enabled=True).drive(
+        mapper.map_many_phases(tiny_net, CFGS))
+    clear_mapper_caches()
+    ref = PimMapper(CFGS[0], **kw).map_many(tiny_net, CFGS)
+    for a, b in zip(driven, ref):
+        assert a.sm == b.sm
+        assert set(a.choices) == set(b.choices)
+        for name, ca in a.choices.items():
+            cb = b.choices[name]
+            assert (ca.lm, ca.wr, ca.region) == (cb.lm, cb.wr, cb.region)
+            assert ca.perf_s == cb.perf_s, name       # bitwise
+        assert a.est_latency_s == b.est_latency_s
+
+
+def _batch(overlap: bool, cfgs, nets):
+    clear_mapper_caches()
+    import repro.core.mapper as mapper_mod
+    mapper_mod._sharing_latency.cache_clear()
+    ev = WorkloadEvaluator(nets, mapper_kwargs=MAPPER_KW, overlap=overlap)
+    return ev.evaluate_batch(cfgs)
+
+
+def test_evaluate_batch_overlap_matches_serial(tiny_net):
+    nets = [tiny_net, googlenet(2, scale=8)]
+    cfgs = CFGS + [PAPER_4X4.replace(cons=TINY_CONS)]   # mixed feasibility
+    fast = _batch(True, cfgs, nets)
+    slow = _batch(False, cfgs, nets)
+    assert len(fast) == len(slow) == len(cfgs)
+    for a, b in zip(fast, slow):
+        assert a == b                         # bitwise (cost, lats, ens)
+    assert math.isinf(fast[-1][0])            # infeasible contained
+
+
+def _dse_stream(overlap: bool, pipeline: bool = True):
+    clear_mapper_caches()
+    import repro.core.mapper as mapper_mod
+    mapper_mod._sharing_latency.cache_clear()
+    ev = WorkloadEvaluator([googlenet(1, scale=8)], mapper_kwargs=MAPPER_KW,
+                           overlap=overlap)
+    front = ParetoFront()
+    res = run_dse(PimTuner(seed=5, n_sample=128, backend="scan"), ev,
+                  iterations=3, propose_k=6, pipeline=pipeline, pareto=front)
+    stream = [(o.iteration, o.cfg.as_tuple(), o.area_mm2, o.legal, o.cost)
+              for o in res.observations]
+    pts = sorted((p.latency_s, p.energy_pj, p.area_mm2)
+                 for p in front.points)
+    return stream, pts
+
+
+def test_run_dse_overlap_matches_serial_stream_and_pareto():
+    fast_stream, fast_front = _dse_stream(overlap=True)
+    slow_stream, slow_front = _dse_stream(overlap=False)
+    assert fast_stream == slow_stream
+    assert fast_front == slow_front
+    assert any(cost is not None for *_, cost in fast_stream)
